@@ -1,0 +1,190 @@
+"""Per-paper-table benchmarks (§5.2 RQ1, §5.3 RQ2, §5.4 RQ3) plus
+kernel micro-benchmarks.  Each function returns a list of
+(name, us_per_call, derived) rows for the CSV printer in run.py."""
+from __future__ import annotations
+
+import os
+import pickle
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hsf, signature as sigmod
+from repro.core.ingest import KnowledgeBase
+from repro.core.retrieval import Retriever
+from repro.data.corpus import make_corpus, write_corpus_dir
+
+
+def _timeit(fn, n=5, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # µs
+
+
+# --------------------------------------------------------------------------
+# RQ1 — ingestion efficiency (paper table: cold 14.59 s vs incr 0.46 s,
+# 31.6×, on 1000 docs).
+# --------------------------------------------------------------------------
+
+def bench_rq1_ingestion():
+    rows = []
+    docs, _ = make_corpus(n_docs=1000, doc_len=120, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        src = os.path.join(d, "corpus")
+        write_corpus_dir(src, docs)
+        kb = KnowledgeBase(dim=4096)
+        t0 = time.perf_counter()
+        cold = kb.sync(src)
+        t_cold = time.perf_counter() - t0
+        kb.materialize()
+        t0 = time.perf_counter()
+        warm = kb.sync(src)
+        t_warm = time.perf_counter() - t0
+        # delta: touch 10 files
+        for i in range(10):
+            with open(os.path.join(src, f"doc_{i:05d}.txt"), "a") as f:
+                f.write(" updated content")
+        t0 = time.perf_counter()
+        delta = kb.sync(src)
+        t_delta = time.perf_counter() - t0
+    assert cold.added == 1000 and warm.skipped == 1000
+    assert delta.updated == 10
+    rows.append(("rq1_cold_ingest_1000docs", t_cold * 1e6,
+                 f"docs_per_s={1000 / t_cold:.1f}"))
+    rows.append(("rq1_incremental_unchanged", t_warm * 1e6,
+                 f"speedup_vs_cold={t_cold / t_warm:.1f}x"))
+    rows.append(("rq1_incremental_10_updated", t_delta * 1e6,
+                 f"speedup_vs_cold={t_cold / t_delta:.1f}x"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# RQ2 — hybrid vs pure-cosine entity retrieval (paper: 100 % Recall@1,
+# top score 1.5753).
+# --------------------------------------------------------------------------
+
+def bench_rq2_recall():
+    rows = []
+    docs, entities = make_corpus(n_docs=1000, n_entities=20, seed=0)
+    kb = KnowledgeBase(dim=4096)
+    for i, d in enumerate(docs):
+        kb.add_text(f"doc_{i:05d}.txt", d)
+    hybrid = Retriever(kb, alpha=1.0, beta=1.0)
+    cosine = Retriever(kb, alpha=1.0, beta=0.0)
+
+    def recall_at_1(r):
+        hits = 0
+        for code, idx in entities.items():
+            if r.query(code, k=1)[0].doc_id == f"doc_{idx:05d}.txt":
+                hits += 1
+        return hits / len(entities)
+
+    rec_h = recall_at_1(hybrid)
+    rec_c = recall_at_1(cosine)
+    code = next(iter(entities))
+    top = hybrid.query(code, k=1)[0]
+    t = _timeit(lambda: hybrid.query(code, k=5))
+    rows.append(("rq2_hybrid_recall_at_1", t, f"recall={rec_h:.3f}"))
+    rows.append(("rq2_cosine_recall_at_1", t, f"recall={rec_c:.3f}"))
+    rows.append(("rq2_hybrid_top_score", t,
+                 f"score={top.score:.4f}_boosted={top.boosted}"))
+    assert rec_h == 1.0, "hybrid Recall@1 must be 100% (paper claim)"
+    return rows
+
+
+# --------------------------------------------------------------------------
+# RQ3 — footprint + query latency.  The paper's 99.5 % figure compares
+# the full STACK (Docker + ChromaDB + torch + embedding model ≈ 1.2 GB)
+# against its single file.  We reproduce that with published component
+# sizes (constants below — they cannot be downloaded offline) plus our
+# measured artifacts, and additionally report the data-file comparison:
+# our container (with and without the rematerializable dense ⟨V⟩ region)
+# vs a 384-dim dense-embedding vector store for the same corpus.
+# --------------------------------------------------------------------------
+
+# Published wheel/model sizes (PyPI / HF, 2024-2025): torch ≈ 750 MB,
+# chromadb+deps ≈ 150 MB, sentence-transformers MiniLM ≈ 90 MB,
+# onnxruntime ≈ 60 MB ⇒ "standard stack" ≈ 1.05 GB before any data.
+STANDARD_STACK_BYTES = int(1.05e9)
+DENSE_EMBED_DIM = 384  # MiniLM-class
+
+
+def bench_rq3_footprint():
+    rows = []
+    docs, entities = make_corpus(n_docs=1000, seed=0)
+    kb = KnowledgeBase(dim=4096)
+    for i, d in enumerate(docs):
+        kb.add_text(f"doc_{i:05d}.txt", d)
+    with tempfile.TemporaryDirectory() as d:
+        p_full = os.path.join(d, "kb.ragdb")
+        p_slim = os.path.join(d, "kb_slim.ragdb")
+        kb.save(p_full, include_matrix=True)
+        kb.save(p_slim, include_matrix=False)
+        full_bytes = os.path.getsize(p_full)
+        slim_bytes = os.path.getsize(p_slim)
+        # our deployable unit = container + this library (no torch/CUDA)
+        import repro
+
+        src_root = os.path.dirname(os.path.dirname(repro.__file__))
+        lib_bytes = sum(
+            os.path.getsize(os.path.join(r, f))
+            for r, _, fs in os.walk(src_root) for f in fs
+            if f.endswith(".py")
+        )
+        # slim container restores + retrieves identically
+        kb2 = KnowledgeBase.load(p_slim)
+        code = next(iter(entities))
+        assert Retriever(kb2).query(code, k=1)[0].doc_id == \
+            Retriever(kb).query(code, k=1)[0].doc_id
+
+    dense_store = 1000 * DENSE_EMBED_DIM * 4  # vectors only, no index
+    ours_total = slim_bytes + lib_bytes
+    theirs_total = STANDARD_STACK_BYTES + dense_store
+    r = Retriever(kb)
+    t_query = _timeit(lambda: r.query(code, k=5), n=20)
+    rows.append(("rq3_container_bytes_full", 0.0, f"bytes={full_bytes}"))
+    rows.append(("rq3_container_bytes_slim", 0.0,
+                 f"bytes={slim_bytes}_matrix_rematerialized"))
+    rows.append(("rq3_stack_footprint_ours", 0.0,
+                 f"bytes={ours_total}_incl_library"))
+    rows.append(("rq3_stack_footprint_standard", 0.0,
+                 f"bytes={theirs_total}_reduction="
+                 f"{(1 - ours_total / theirs_total) * 100:.2f}%"))
+    rows.append(("rq3_query_latency", t_query, "corpus=1000"))
+    return rows
+
+
+# --------------------------------------------------------------------------
+# kernel micro-benchmarks (CPU interpret-mode timings are NOT TPU perf;
+# they validate plumbing and give relative jnp-vs-kernel structure)
+# --------------------------------------------------------------------------
+
+def bench_kernels():
+    rows = []
+    rng = np.random.default_rng(0)
+    n, d, w = 4096, 4096, 128
+    dv = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    ds = jnp.asarray(rng.integers(0, 2**31, size=(n, w)).astype(np.int32))
+    qv = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    qs = jnp.asarray(rng.integers(0, 2**31, size=(w,)).astype(np.int32))
+
+    f_ref = jax.jit(lambda: hsf.hsf_scores(dv, ds, qv, qs))
+    t_ref = _timeit(lambda: jax.block_until_ready(f_ref()), n=10)
+    rows.append(("hsf_scores_jnp_4096x4096", t_ref,
+                 f"gflops={2 * n * d / t_ref / 1e3:.2f}"))
+
+    scores = f_ref()
+    f_topk = jax.jit(lambda: jax.lax.top_k(scores, 16))
+    t_topk = _timeit(lambda: jax.block_until_ready(f_topk()[0]), n=10)
+    rows.append(("topk_lax_4096_k16", t_topk, ""))
+    return rows
+
+
+ALL = [bench_rq1_ingestion, bench_rq2_recall, bench_rq3_footprint,
+       bench_kernels]

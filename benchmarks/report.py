@@ -1,0 +1,112 @@
+"""Render EXPERIMENTS.md from archived results (dry-run JSONs, roofline
+JSONs, benchmark CSV).  Re-runnable: ``python -m benchmarks.report``."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = "results"
+CHIPS = 256
+
+
+def _load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def _fmt(x, nd=3):
+    if x == 0:
+        return "0"
+    if abs(x) >= 1e4 or abs(x) < 1e-3:
+        return f"{x:.2e}"
+    return f"{x:.{nd}f}"
+
+
+def dryrun_table(dirname: str) -> str:
+    rows = []
+    for fn in sorted(os.listdir(dirname)):
+        if not fn.endswith(".json"):
+            continue
+        d = _load(os.path.join(dirname, fn))
+        rows.append(d)
+    out = ["| arch | shape | mesh | compile s | HLO GFLOPs/dev | coll MB/dev | args GB/dev | temp GB/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} "
+            f"| {d['compile_s']:.1f} "
+            f"| {d['flops'] / 1e9:.1f} "
+            f"| {d['collectives']['total_bytes'] / 1e6:.1f} "
+            f"| {d['memory']['argument_bytes'] / 1e9:.2f} "
+            f"| {d['memory']['temp_bytes'] / 1e9:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(path: str) -> str:
+    rows = _load(path)
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['compute_s'])} "
+            f"| {_fmt(r['memory_s'])} | {_fmt(r['collective_s'])} "
+            f"| {r['dominant']} | {r['useful_ratio']:.3f} "
+            f"| {r['roofline_fraction']:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def compare_table(base_path: str, opt_path: str, cells) -> str:
+    base = {(r["arch"], r["shape"]): r for r in _load(base_path)}
+    opt = {(r["arch"], r["shape"]): r for r in _load(opt_path)}
+    out = ["| cell | term | baseline | optimized | Δ |", "|---|---|---|---|---|"]
+    for cell in cells:
+        b, o = base.get(cell), opt.get(cell)
+        if not b or not o:
+            continue
+        for term in ("compute_s", "memory_s", "collective_s"):
+            delta = (o[term] - b[term]) / b[term] * 100 if b[term] else 0
+            out.append(
+                f"| {cell[0]} × {cell[1]} | {term} | {_fmt(b[term])} "
+                f"| {_fmt(o[term])} | {delta:+.1f}% |"
+            )
+    return "\n".join(out)
+
+
+def main():
+    parts = []
+    parts.append(open("EXPERIMENTS.header.md").read())
+
+    parts.append("\n## §Dry-run — per-cell compiled artifacts\n")
+    parts.append(
+        "All 40 assigned (arch × shape) cells + 2 RAGdb corpus cells, on "
+        "BOTH the 16×16 single-pod and 2×16×16 multi-pod meshes "
+        "(84 lower+compile passes, zero failures).  Values from "
+        "`compiled.memory_analysis()` / `cost_analysis()` / HLO parsing; "
+        "loop bodies counted once (see §Roofline methodology).\n")
+    parts.append(dryrun_table(os.path.join(RESULTS, "dryrun")))
+
+    parts.append("\n\n## §Roofline — optimized (current) build\n")
+    parts.append(roofline_table(os.path.join(RESULTS, "roofline.json")))
+    parts.append("\n\n### Baseline (paper-faithful, pre-optimization) build\n")
+    parts.append(roofline_table(os.path.join(RESULTS,
+                                             "roofline_baseline.json")))
+
+    parts.append("\n\n### Hillclimbed cells, before → after\n")
+    parts.append(compare_table(
+        os.path.join(RESULTS, "roofline_baseline.json"),
+        os.path.join(RESULTS, "roofline.json"),
+        [("gemma2-9b", "decode_32k"), ("gemma3-27b", "train_4k"),
+         ("dlrm-mlperf", "retrieval_cand")],
+    ))
+
+    parts.append("\n" + open("EXPERIMENTS.perf.md").read())
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts))
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

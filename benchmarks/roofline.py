@@ -1,0 +1,263 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+# Roofline analysis (EXPERIMENTS.md §Roofline).
+#
+# Terms per (arch × shape) on the single-pod 16×16 mesh, v5e constants:
+#     compute    = FLOPs/device            / 197e12  (bf16 peak)
+#     memory     = HBM bytes/device        / 819e9
+#     collective = collective bytes/device / 50e9    (per-link ICI)
+#
+# Accounting subtlety this module owns: XLA's cost_analysis counts each
+# while-loop body ONCE, so the production artifact under-reports
+# anything inside the microbatch scan / layer scan / kv-block scan.
+# For LM cells we therefore compile *cost-exact variants* — identical
+# layer dimensions, 1-or-2 scan trips, with every scan unrolled
+# (COST_EXACT_UNROLL) — fit the exact linear model
+#     F(m, u) = α + m·β + m·u·γ
+# (m = microbatches, u = scan units), and extrapolate to the production
+# trip counts.  Non-LM cells have no scans: their production numbers are
+# already exact.
+#
+# Collective bytes come from the post-SPMD HLO text (per-partition
+# shapes), same extrapolation.
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+from dataclasses import replace  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCHS, get as get_arch  # noqa: E402
+from repro.configs import shapes as shp  # noqa: E402
+from repro.launch import mesh as meshlib  # noqa: E402
+from repro.launch import steps  # noqa: E402
+from repro.launch.dryrun import collective_bytes  # noqa: E402
+from repro.models import attention as attn_mod  # noqa: E402
+from repro.models import moe as moe_mod  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+CHIPS = 256
+
+
+def _measure(cell) -> dict:
+    compiled = cell.fn.lower(*cell.args).compile()
+    cost = compiled.cost_analysis()
+    colls = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(colls["total_bytes"]),
+        "coll_counts": colls["counts"],
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "arg_bytes": getattr(mem, "argument_size_in_bytes", 0),
+    }
+    jax.clear_caches()
+    return out
+
+
+def _variant_cfg(cfg: T.LMConfig, n_units: int) -> T.LMConfig:
+    tail = len(cfg.tail_kinds)
+    n_layers = cfg.n_dense_head_layers + n_units * len(cfg.pattern) + tail
+    return replace(cfg, n_layers=n_layers)
+
+
+def _build_variant(arch_id, cfg, spec, mesh, n_units, n_micro):
+    """Cost-exact cell: reduced trips, all scans unrolled."""
+    attn_mod.COST_EXACT_UNROLL = True
+    T.COST_EXACT_UNROLL = True
+    moe_mod.COST_EXACT_SURROGATE = True
+    try:
+        vcfg = _variant_cfg(cfg, n_units)
+        if spec.kind == "lm_train":
+            dpn = meshlib.dp_size(mesh)
+            vmeta = dict(spec.meta)
+            vmeta["batch"] = dpn * n_micro
+            vspec = dataclasses.replace(spec, meta=vmeta)
+            cell = steps.build_lm_train_cell(arch_id, vcfg, vspec, mesh)
+            assert cell.meta["n_micro"] == n_micro, cell.meta
+        elif spec.kind == "lm_prefill":
+            cell = steps.build_lm_prefill_cell(arch_id, vcfg, spec, mesh)
+        else:
+            cell = steps.build_lm_decode_cell(arch_id, vcfg, spec, mesh)
+        return _measure(cell)
+    finally:
+        attn_mod.COST_EXACT_UNROLL = False
+        T.COST_EXACT_UNROLL = False
+        moe_mod.COST_EXACT_SURROGATE = False
+
+
+def lm_exact_totals(arch_id: str, shape_id: str, mesh, cache_dir: str) -> dict:
+    """Fit F(m, u) = α + m·β + m·u·γ from unrolled variants and
+    extrapolate to production trip counts."""
+    os.makedirs(cache_dir, exist_ok=True)
+    cpath = os.path.join(cache_dir, f"{arch_id}__{shape_id}__exact.json")
+    if os.path.exists(cpath):
+        with open(cpath) as f:
+            return json.load(f)
+
+    arch = get_arch(arch_id)
+    cfg = arch.config
+    spec = shp.shapes_for_family("lm")[shape_id]
+    u_real = cfg.n_units
+    keys = ("flops", "bytes", "coll")
+
+    if spec.kind == "lm_train":
+        dpn = meshlib.dp_size(mesh)
+        m_real = spec.meta["batch"] // dpn
+        f11 = _build_variant(arch_id, cfg, spec, mesh, 1, 1)
+        f21 = _build_variant(arch_id, cfg, spec, mesh, 2, 1)
+        f12 = _build_variant(arch_id, cfg, spec, mesh, 1, 2)
+        total = {}
+        for k in keys:
+            gamma = f21[k] - f11[k]
+            beta = f12[k] - f11[k] - gamma
+            alpha = f11[k] - beta - gamma
+            total[k] = alpha + m_real * beta + m_real * u_real * gamma
+            total[k + "_parts"] = {"alpha": alpha, "beta": beta,
+                                   "gamma": gamma, "m": m_real, "u": u_real}
+    else:
+        f1 = _build_variant(arch_id, cfg, spec, mesh, 1, 1)
+        f2 = _build_variant(arch_id, cfg, spec, mesh, 2, 1)
+        total = {}
+        for k in keys:
+            gamma = f2[k] - f1[k]
+            alpha = f1[k] - gamma
+            total[k] = alpha + u_real * gamma
+            total[k + "_parts"] = {"alpha": alpha, "gamma": gamma,
+                                   "u": u_real}
+    with open(cpath, "w") as f:
+        json.dump(total, f, indent=1)
+    return total
+
+
+def model_flops(arch_id: str, shape_id: str) -> float:
+    """Analytic MODEL_FLOPS (global): 6·N_active·tokens for training,
+    2·N_active·tokens for fwd-only serving."""
+    arch = get_arch(arch_id)
+    cfg = arch.config
+    spec = shp.shapes_for_family(arch.family)[shape_id]
+    m = spec.meta
+    if arch.family == "lm":
+        n = cfg.active_param_count()
+        if spec.kind == "lm_train":
+            return 6.0 * n * m["batch"] * m["seq"]
+        if spec.kind == "lm_prefill":
+            return 2.0 * n * m["batch"] * m["seq"]
+        return 2.0 * n * m["batch"]  # decode: one token per sequence
+    if arch.family == "gnn":
+        # per-edge message (C·n_rbf + C + C·n_sh mults) + per-node
+        # products/update (≈ 8·C² per layer)
+        c = cfg.d_hidden
+        per_edge = 2 * c * (cfg.n_rbf + cfg.n_sh + 1)
+        per_node = 2 * (8 * c * c + c * cfg.d_feat / cfg.n_layers)
+        fwd = cfg.n_layers * (m["n_edges"] * per_edge + m["n_nodes"] * per_node)
+        return 3.0 * fwd  # train: fwd + bwd ≈ 3×
+    if arch.family == "recsys":
+        cfg_ = cfg
+        dense_mults = 0
+        dims_chains = []
+        if cfg_.bot_mlp:
+            dims_chains.append((cfg_.n_dense,) + cfg_.bot_mlp)
+            n_inter = cfg_.n_sparse + 1
+            d_top = n_inter * (n_inter - 1) // 2 + cfg_.bot_mlp[-1]
+            dims_chains.append((d_top,) + cfg_.top_mlp)
+        if cfg_.mlp_dims:
+            dims_chains.append(
+                (cfg_.n_sparse * cfg_.embed_dim,) + cfg_.mlp_dims + (1,))
+        for dims in dims_chains:
+            for i in range(len(dims) - 1):
+                dense_mults += dims[i] * dims[i + 1]
+        inter = cfg_.n_sparse ** 2 * cfg_.embed_dim  # dot/FM/attn order
+        per_ex = 2 * (dense_mults + inter)
+        batch = m.get("batch", 1) if shape_id != "retrieval_cand" \
+            else m["n_candidates"]
+        mult = 3.0 if shape_id == "train_batch" else 1.0
+        if shape_id == "retrieval_cand":
+            per_ex = 2 * cfg_.embed_dim
+        return mult * per_ex * batch
+    if arch.family == "ragdb":
+        n_docs = m["docs_per_device"] * CHIPS
+        return 2.0 * n_docs * cfg.dim * m["query_batch"]
+    return 0.0
+
+
+def analyze(arch_id: str, shape_id: str, dryrun_dir: str, cache_dir: str,
+            mesh=None) -> dict:
+    tag = f"{arch_id}__{shape_id}__16x16.json"
+    with open(os.path.join(dryrun_dir, tag)) as f:
+        prod = json.load(f)
+    arch = get_arch(arch_id)
+    mesh = mesh or meshlib.make_production_mesh()
+
+    if arch.family == "lm":
+        totals = lm_exact_totals(arch_id, shape_id, mesh, cache_dir)
+        flops, bts, coll = totals["flops"], totals["bytes"], totals["coll"]
+    else:
+        flops, bts, coll = (prod["flops"], prod["bytes_accessed"],
+                            prod["collectives"]["total_bytes"])
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bts / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    mf = model_flops(arch_id, shape_id)
+    hlo_total_flops = flops * CHIPS
+    return {
+        "arch": arch_id, "shape": shape_id,
+        **{k: float(v) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_total_flops,
+        "useful_ratio": mf / hlo_total_flops if hlo_total_flops else 0.0,
+        "roofline_fraction": (
+            (mf / CHIPS / PEAK_FLOPS) / bound if bound else 0.0
+        ),
+        "mem_temp_bytes": prod["memory"]["temp_bytes"],
+        "mem_args_bytes": prod["memory"]["argument_bytes"],
+        "coll_counts": prod["collectives"]["counts"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="results/dryrun")
+    ap.add_argument("--cache-dir", default="results/roofline_exact")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--arch", default=None)
+    args = ap.parse_args()
+
+    mesh = meshlib.make_production_mesh()
+    rows = []
+    for arch_id, spec in ARCHS.items():
+        if args.arch and arch_id != args.arch:
+            continue
+        for shape_id in shp.shapes_for_family(spec.family):
+            try:
+                r = analyze(arch_id, shape_id, args.dryrun_dir,
+                            args.cache_dir, mesh)
+                rows.append(r)
+                print(f"{arch_id:22s} {shape_id:14s} "
+                      f"C={r['compute_s']:9.3e}s M={r['memory_s']:9.3e}s "
+                      f"N={r['collective_s']:9.3e}s dom={r['dominant']:10s} "
+                      f"useful={r['useful_ratio']:6.3f} "
+                      f"roofline={r['roofline_fraction']:6.3f}", flush=True)
+            except FileNotFoundError as e:
+                print(f"skip {arch_id} {shape_id}: {e}", flush=True)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {len(rows)} rows to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

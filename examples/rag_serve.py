@@ -1,0 +1,57 @@
+"""End-to-end RAG serving: batched requests against the integrated
+retrieval + generation planes (deliverable (b): serve a small model
+with batched requests).
+
+    PYTHONPATH=src python examples/rag_serve.py
+"""
+import os
+import tempfile
+import time
+
+import jax
+
+from repro.configs import ARCHS
+from repro.core.ingest import KnowledgeBase
+from repro.core.rag import RAGPipeline
+from repro.data.corpus import make_corpus, write_corpus_dir
+from repro.models import transformer as T
+
+
+def main():
+    with tempfile.TemporaryDirectory() as work:
+        corpus_dir = os.path.join(work, "docs")
+        docs, entities = make_corpus(n_docs=300, n_entities=6, seed=7)
+        write_corpus_dir(corpus_dir, docs)
+        kb = KnowledgeBase(dim=2048)
+        kb.sync(corpus_dir)
+
+        cfg = ARCHS["gemma2-9b"].smoke_config  # local+global, softcaps
+        params = T.init(jax.random.PRNGKey(0), cfg)
+        rag = RAGPipeline(kb, params, cfg, max_context_tokens=128)
+
+        requests = [f"lookup {code} status" for code in entities] + [
+            "quarterly revenue forecast",
+            "kubernetes deployment latency",
+        ]
+        print(f"serving {len(requests)} requests "
+              f"({cfg.name}, {cfg.param_count() / 1e6:.1f} M params)\n")
+        t0 = time.perf_counter()
+        for q in requests:
+            out = rag.answer(q, max_new_tokens=6, top_k_docs=2)
+            top = out.retrieved[0]
+            print(f"  {q[:40]:42s} → {top.doc_id} "
+                  f"(score {top.score:.3f}{'*' if top.boosted else ''}) "
+                  f"tokens={out.token_ids}")
+        dt = time.perf_counter() - t0
+        print(f"\n{len(requests)} requests in {dt:.1f}s "
+              f"({dt / len(requests) * 1e3:.0f} ms/request, CPU)")
+
+        # entity queries must hit their documents (paper RQ2)
+        for code, idx in entities.items():
+            top = rag.answer(code, max_new_tokens=1, top_k_docs=1)
+            assert top.retrieved[0].doc_id == f"doc_{idx:05d}.txt"
+        print("RQ2 check: all entity requests retrieved their doc ✓")
+
+
+if __name__ == "__main__":
+    main()

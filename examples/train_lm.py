@@ -1,0 +1,32 @@
+"""Train a small LM for a few hundred steps with the production train
+step (grad-accumulation scan + remat + sharding machinery), including a
+mid-run checkpoint + kill + exact restart-replay.
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    with tempfile.TemporaryDirectory() as work:
+        print("=== phase 1: train 60 steps (checkpoint every 20) ===")
+        train.main([
+            "--arch", "llama3.2-3b", "--smoke",
+            "--steps", "60", "--batch", "8", "--seq", "64",
+            "--ckpt-dir", work, "--ckpt-every", "20",
+        ])
+        print("\n=== phase 2: 'failure' — restart from checkpoint, "
+              "train to 100 ===")
+        loss = train.main([
+            "--arch", "llama3.2-3b", "--smoke",
+            "--steps", "100", "--batch", "8", "--seq", "64",
+            "--ckpt-dir", work, "--ckpt-every", "20",
+        ])
+        print(f"\nfinal loss {loss:.4f} — deterministic replay from the "
+              "DataCursor means this equals an uninterrupted 100-step run")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""RAGdb's primary contribution, reimplemented as a TPU-scale system:
+
+- hashing / tokenizer / vectorizer : sublinear hashed TF-IDF (paper §4.1)
+- signature                        : Bloom n-gram substring indicator (§4.2)
+- hsf                              : Hybrid Scoring Function (§4)
+- container                        : Single-File Knowledge Container (§3.1)
+- ingest                           : O(U) incremental multimodal ingestion (§3.2-3.3)
+- retrieval                        : edge-parity + mesh-sharded retrieval
+- rag                              : retrieve → pack → generate orchestration
+"""
+
+from repro.core.hsf import hsf_scores, hsf_scores_batched  # noqa: F401
+from repro.core.ingest import IngestStats, KnowledgeBase  # noqa: F401
+from repro.core.retrieval import Retriever  # noqa: F401

@@ -1,0 +1,242 @@
+"""The Single-File Knowledge Container K = ⟨M, C, V, I⟩ (paper §3.1).
+
+One ``.ragdb`` file is a self-describing, content-hashed binary container:
+
+    bytes 0..7    magic  b"RAGDB1\\0\\n"
+    bytes 8..15   header length (uint64 LE)
+    header JSON   {"generation": g, "meta": {...},          ← M region
+                   "segments": {name: {offset, length, sha256,
+                                        dtype, shape}}}
+    data          raw segment bytes (C, V, I regions as named segments)
+
+Design goals carried over from the paper:
+- **Referential integrity**: every segment's SHA-256 is in the header;
+  ``load(verify=True)`` refuses corrupted containers.
+- **ACID-by-rename**: writes go to a temp file in the same directory and
+  are published with ``os.replace`` (atomic on POSIX).  Readers never see
+  a torn container.
+- **Right to be forgotten**: deleting the file deletes all regions.
+
+Scale-out (DESIGN.md §3): a *sharded* container is a directory with a
+``manifest.json`` naming content-addressed shard files.  The manifest is
+itself atomically replaced, and carries a monotonically increasing
+``generation`` — the WAL-mode analogue: readers pin a generation; the
+ingester publishes the next one without disturbing them.  A 1-shard
+container degenerates to exactly one data file, matching the paper.
+
+This same format backs the training checkpointer (checkpoint/).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from dataclasses import dataclass
+
+import numpy as np
+
+MAGIC = b"RAGDB1\x00\n"
+
+
+def _sha256(data: bytes | memoryview) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+# --------------------------------------------------------------------------
+# text <-> array codecs (the C region is "blob + offsets")
+# --------------------------------------------------------------------------
+
+def encode_texts(texts: list[str]) -> dict[str, np.ndarray]:
+    blobs = [t.encode("utf-8") for t in texts]
+    offsets = np.zeros((len(blobs) + 1,), dtype=np.int64)
+    np.cumsum([len(b) for b in blobs], out=offsets[1:])
+    blob = np.frombuffer(b"".join(blobs), dtype=np.uint8).copy()
+    return {"content_blob": blob, "content_offsets": offsets}
+
+
+def decode_texts(blob: np.ndarray, offsets: np.ndarray) -> list[str]:
+    raw = blob.tobytes()
+    return [
+        raw[offsets[i]: offsets[i + 1]].decode("utf-8")
+        for i in range(len(offsets) - 1)
+    ]
+
+
+# --------------------------------------------------------------------------
+# single-file container
+# --------------------------------------------------------------------------
+
+def write_container(
+    path: str,
+    segments: dict[str, np.ndarray],
+    meta: dict | None = None,
+    generation: int = 0,
+) -> str:
+    """Atomically write a container; returns the sha256 of the data area."""
+    names = sorted(segments)
+    header_segs: dict[str, dict] = {}
+    offset = 0
+    payloads: list[bytes] = []
+    whole = hashlib.sha256()
+    for name in names:
+        arr = np.asarray(segments[name])
+        shape = list(arr.shape)  # before ascontiguousarray (it promotes 0-d)
+        arr = np.ascontiguousarray(arr)
+        data = arr.tobytes()
+        header_segs[name] = {
+            "offset": offset,
+            "length": len(data),
+            "sha256": _sha256(data),
+            "dtype": arr.dtype.str,
+            "shape": shape,
+        }
+        offset += len(data)
+        payloads.append(data)
+        whole.update(data)
+    header = json.dumps(
+        {"generation": generation, "meta": meta or {}, "segments": header_segs},
+        sort_keys=True,
+    ).encode("utf-8")
+
+    dirname = os.path.dirname(os.path.abspath(path)) or "."
+    os.makedirs(dirname, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=dirname, prefix=".ragdb-tmp-")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(MAGIC)
+            f.write(len(header).to_bytes(8, "little"))
+            f.write(header)
+            for data in payloads:
+                f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic publish
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return whole.hexdigest()
+
+
+@dataclass
+class Container:
+    path: str
+    generation: int
+    meta: dict
+    _segments: dict[str, dict]
+    _data_start: int
+
+    @staticmethod
+    def open(path: str) -> "Container":
+        with open(path, "rb") as f:
+            magic = f.read(8)
+            if magic != MAGIC:
+                raise ValueError(f"{path}: not a RAGdb container (bad magic)")
+            hlen = int.from_bytes(f.read(8), "little")
+            header = json.loads(f.read(hlen).decode("utf-8"))
+            data_start = 16 + hlen
+        return Container(
+            path=path,
+            generation=int(header["generation"]),
+            meta=header["meta"],
+            _segments=header["segments"],
+            _data_start=data_start,
+        )
+
+    def segment_names(self) -> list[str]:
+        return sorted(self._segments)
+
+    def read(self, name: str, verify: bool = True) -> np.ndarray:
+        info = self._segments[name]
+        with open(self.path, "rb") as f:
+            f.seek(self._data_start + info["offset"])
+            data = f.read(info["length"])
+        if verify and _sha256(data) != info["sha256"]:
+            raise IOError(
+                f"{self.path}:{name}: segment sha256 mismatch (corruption)"
+            )
+        return np.frombuffer(data, dtype=np.dtype(info["dtype"])).reshape(
+            info["shape"]
+        ).copy()
+
+    def read_all(self, verify: bool = True) -> dict[str, np.ndarray]:
+        return {n: self.read(n, verify) for n in self._segments}
+
+
+# --------------------------------------------------------------------------
+# sharded container (directory + manifest)
+# --------------------------------------------------------------------------
+
+MANIFEST = "manifest.json"
+
+
+def publish_sharded(
+    root: str,
+    shard_segments: list[dict[str, np.ndarray]],
+    shard_metas: list[dict] | None = None,
+    meta: dict | None = None,
+) -> int:
+    """Write shard files + atomically publish the next-generation manifest.
+
+    Shard files are content-addressed (name includes the data hash) so an
+    elastic re-shard or replica copy is a pure manifest edit.  Returns the
+    published generation.
+    """
+    os.makedirs(root, exist_ok=True)
+    prev_gen = -1
+    mpath = os.path.join(root, MANIFEST)
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            prev_gen = int(json.load(f)["generation"])
+    gen = prev_gen + 1
+    shard_metas = shard_metas or [{} for _ in shard_segments]
+
+    shard_entries = []
+    for i, segs in enumerate(shard_segments):
+        tmp_name = os.path.join(root, f".shard-{gen}-{i}.ragdb")
+        digest = write_container(tmp_name, segs, shard_metas[i], generation=gen)
+        final = f"shard-{digest[:16]}.ragdb"
+        os.replace(tmp_name, os.path.join(root, final))
+        shard_entries.append({"file": final, "sha256": digest, "index": i})
+
+    manifest = {
+        "generation": gen,
+        "meta": meta or {},
+        "shards": shard_entries,
+    }
+    fd, tmp = tempfile.mkstemp(dir=root, prefix=".manifest-tmp-")
+    with os.fdopen(fd, "w") as f:
+        json.dump(manifest, f, sort_keys=True, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, mpath)
+    return gen
+
+
+@dataclass
+class ShardedContainer:
+    root: str
+    generation: int
+    meta: dict
+    shards: list[dict]
+
+    @staticmethod
+    def open(root: str) -> "ShardedContainer":
+        """Pin the current generation (readers are isolated from later
+        publishes — the paper's WAL concurrent-reader analogue)."""
+        with open(os.path.join(root, MANIFEST)) as f:
+            m = json.load(f)
+        return ShardedContainer(
+            root=root,
+            generation=int(m["generation"]),
+            meta=m["meta"],
+            shards=m["shards"],
+        )
+
+    def open_shard(self, i: int) -> Container:
+        return Container.open(os.path.join(self.root, self.shards[i]["file"]))
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)

@@ -1,0 +1,90 @@
+"""RAG orchestration: retrieve → pack context → generate.
+
+The paper's end-to-end loop (§1): the deterministic HSF retriever feeds
+the generator's prompt window.  Generation here is the framework's own
+LM serving path (prefill + greedy decode with KV caches) — the paper
+treats the LLM as a black box; we treat it as the generation plane of
+the same framework.
+
+Tokenization for the LM uses the same stable hashing as the retrieval
+plane (word → fnv1a64 mod vocab): real deployments plug a trained
+subword tokenizer here (one `text_to_tokens` function), and nothing
+about retrieval, packing, prefill or decode changes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.core.ingest import KnowledgeBase
+from repro.core.retrieval import RetrievalResult, Retriever
+from repro.core.tokenizer import tokenize
+from repro.models import transformer as T
+
+
+def text_to_tokens(text: str, vocab: int) -> list[int]:
+    return [hashing.fnv1a64(w) % vocab for w in tokenize(text)]
+
+
+@dataclass
+class RAGOutput:
+    retrieved: list[RetrievalResult]
+    token_ids: list[int]
+    prompt_len: int
+
+
+@dataclass
+class RAGPipeline:
+    kb: KnowledgeBase
+    params: dict
+    cfg: T.LMConfig
+    max_context_tokens: int = 512
+    alpha: float = 1.0
+    beta: float = 1.0
+    use_kernel: bool = False
+    _retriever: Retriever = field(default=None, init=False, repr=False)
+
+    def __post_init__(self):
+        self._retriever = Retriever(self.kb, self.alpha, self.beta,
+                                    use_kernel=self.use_kernel)
+
+    def _pack_context(self, results: list[RetrievalResult]) -> list[int]:
+        """Greedy context packing: best-scored docs first, truncated to
+        the token budget (the paper's 'inject into the prompt window')."""
+        budget = self.max_context_tokens
+        packed: list[int] = []
+        for r in results:
+            toks = text_to_tokens(self.kb.texts[r.doc_id], self.cfg.vocab)
+            take = min(len(toks), budget - len(packed))
+            packed.extend(toks[:take])
+            if len(packed) >= budget:
+                break
+        return packed
+
+    def answer(self, question: str, max_new_tokens: int = 16,
+               top_k_docs: int = 3) -> RAGOutput:
+        results = self._retriever.query(question, k=top_k_docs)
+        prompt = self._pack_context(results) + text_to_tokens(
+            question, self.cfg.vocab
+        )
+        prompt = prompt[-self.max_context_tokens:] or [0]
+        max_len = len(prompt) + max_new_tokens
+
+        tokens = jnp.asarray(np.array(prompt, np.int32))[None, :]
+        logits, caches, lengths = T.prefill(self.params, tokens, self.cfg,
+                                            max_len)
+        out: list[int] = []
+        next_tok = int(jnp.argmax(logits[0, -1]))
+        for _ in range(max_new_tokens):
+            out.append(next_tok)
+            lengths = lengths + 1
+            logits, caches = T.decode_step(
+                self.params, caches,
+                jnp.asarray([[next_tok]], jnp.int32), lengths, self.cfg,
+            )
+            next_tok = int(jnp.argmax(logits[0, 0]))
+        return RAGOutput(retrieved=results, token_ids=out,
+                         prompt_len=len(prompt))

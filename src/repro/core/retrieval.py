@@ -1,0 +1,222 @@
+"""Retrieval engine: edge-parity single-device path + mesh-sharded path.
+
+Sharding design (DESIGN.md §5): documents are range-partitioned along the
+*flattened* mesh (every axis participates — retrieval has no tensor
+dimension worth model-parallelism, so all 256/512 devices hold disjoint
+doc shards).  Per query:
+
+    local HSF scores  →  local top-k  →  all_gather((k vals, k ids))
+                      →  global top-k merge (replicated)
+
+The collective payload is O(k · n_shards) scalars — independent of corpus
+size — which is what makes retrieval collective-trivial at pod scale.
+
+Determinism: HSF is pure arithmetic, so the sharded result equals the
+single-device result exactly (tested in tests/test_retrieval_sharded.py).
+Ties are broken by document index (lower wins) to keep that equality
+bit-stable.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hsf, signature as sigmod
+from repro.core.ingest import KnowledgeBase
+
+shard_map = jax.shard_map
+
+
+# --------------------------------------------------------------------------
+# tie-stable scoring helper
+# --------------------------------------------------------------------------
+
+def _stable_top_k(scores: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Top-k by (score desc, id asc): deterministic under score ties.
+
+    Exact lexicographic sort (no epsilon arithmetic, no float64): the
+    merge set is only k·n_shards wide, so a full sort is cheap.
+    """
+    order = jnp.lexsort((ids, -scores), axis=-1)[..., :k]
+    return jnp.take_along_axis(scores, order, axis=-1), jnp.take_along_axis(
+        ids, order, axis=-1
+    )
+
+
+# --------------------------------------------------------------------------
+# edge-parity retriever (the paper's laptop deployment)
+# --------------------------------------------------------------------------
+
+@dataclass
+class RetrievalResult:
+    doc_id: str
+    score: float
+    cosine: float
+    boosted: bool
+
+
+class Retriever:
+    """Single-process retriever over a KnowledgeBase (paper's deployment).
+
+    ``prefilter=True`` uses the ⟨I⟩-region postings to restrict HSF
+    scoring to documents sharing at least one query term — sub-linear
+    for selective queries.  Recall caveat (documented): char-level
+    substring matches inside *longer tokens* have no shared term and are
+    only found by the full scan, so prefiltering is an opt-in
+    accelerator (exact for whole-token queries, e.g. entity codes).
+    """
+
+    def __init__(
+        self,
+        kb: KnowledgeBase,
+        alpha: float = hsf.DEFAULT_ALPHA,
+        beta: float = hsf.DEFAULT_BETA,
+        use_kernel: bool = False,
+        prefilter: bool = False,
+    ):
+        self.kb = kb
+        self.alpha = alpha
+        self.beta = beta
+        self.use_kernel = use_kernel
+        self.prefilter = prefilter
+        matrix, sigs, ids = kb.materialize()
+        self.doc_vecs = jnp.asarray(matrix)
+        self.doc_sigs = jnp.asarray(sigs)
+        self.doc_ids = ids
+
+    def query(self, text: str, k: int = 5) -> list[RetrievalResult]:
+        if not self.doc_ids:
+            return []
+        q_vec = jnp.asarray(self.kb.vectorizer.query_vector(text))
+        q_sig = jnp.asarray(
+            sigmod.query_signature(text, width_words=self.kb.sig_words)
+        )
+        cand = None
+        if self.prefilter:
+            cand = self.kb.postings().candidates(
+                text, mode="union",
+                max_candidates=max(256, len(self.doc_ids) // 4),
+            )
+        if cand is not None and len(cand) == 0:
+            return []
+        doc_vecs, doc_sigs = self.doc_vecs, self.doc_sigs
+        if cand is not None:
+            doc_vecs = doc_vecs[cand]
+            doc_sigs = doc_sigs[cand]
+        score_fn = hsf.hsf_scores_kernel if self.use_kernel else hsf.hsf_scores
+        scores = score_fn(
+            doc_vecs, doc_sigs, q_vec, q_sig,
+            alpha=self.alpha, beta=self.beta,
+        )
+        cosines = doc_vecs @ q_vec
+        k = min(k, doc_vecs.shape[0])
+        vals, idx = jax.lax.top_k(scores, k)
+        out = []
+        for v, i in zip(np.asarray(vals), np.asarray(idx)):
+            local = int(i)
+            c = float(cosines[local])
+            gid = int(cand[local]) if cand is not None else local
+            out.append(
+                RetrievalResult(
+                    doc_id=self.doc_ids[gid],
+                    score=float(v),
+                    cosine=c,
+                    boosted=bool(v - self.alpha * c > 0.5 * self.beta),
+                )
+            )
+        return out
+
+
+# --------------------------------------------------------------------------
+# mesh-sharded retrieval
+# --------------------------------------------------------------------------
+
+def pad_corpus(
+    doc_vecs: np.ndarray, doc_sigs: np.ndarray, n_shards: int
+) -> tuple[np.ndarray, np.ndarray, int]:
+    """Pad doc count to a multiple of n_shards (padding is masked out at
+    query time via the global-index < n_docs test)."""
+    n = doc_vecs.shape[0]
+    padded = math.ceil(max(n, 1) / n_shards) * n_shards
+    if padded != n:
+        doc_vecs = np.concatenate(
+            [doc_vecs, np.zeros((padded - n, doc_vecs.shape[1]), doc_vecs.dtype)]
+        )
+        doc_sigs = np.concatenate(
+            [doc_sigs, np.zeros((padded - n, doc_sigs.shape[1]), doc_sigs.dtype)]
+        )
+    return doc_vecs, doc_sigs, n
+
+
+def build_sharded_retrieve(
+    mesh: jax.sharding.Mesh,
+    doc_axes: tuple[str, ...],
+    n_docs: int,
+    k: int,
+    alpha: float = hsf.DEFAULT_ALPHA,
+    beta: float = hsf.DEFAULT_BETA,
+    use_kernel: bool = False,
+):
+    """Returns retrieve(doc_vecs, doc_sigs, q_vecs, q_sigs) -> (vals, ids).
+
+    - doc_vecs [N, D], doc_sigs [N, W]: sharded over ``doc_axes`` on dim 0
+      (N must be divisible by prod(mesh.shape[a] for a in doc_axes)).
+    - q_vecs [B, D], q_sigs [B, W]: replicated.
+    - returns (vals [B, k], ids [B, k]): replicated, globally merged.
+    """
+    axis_sizes = [mesh.shape[a] for a in doc_axes]
+    n_shards = int(np.prod(axis_sizes))
+
+    def local_fn(dv, ds, qv, qs):
+        # global shard index along the flattened doc axes
+        shard = jnp.int32(0)
+        for a in doc_axes:
+            shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+        per_shard = dv.shape[0]
+        base = shard * per_shard
+        gids = base + jnp.arange(per_shard, dtype=jnp.int32)
+
+        if use_kernel:
+            from repro.kernels.hsf_score import ops as _ops
+
+            scores = jax.vmap(
+                lambda q, s: _ops.hsf_score(dv, ds, q, s, alpha=alpha, beta=beta)
+            )(qv, qs)
+        else:
+            scores = hsf.hsf_scores_batched(dv, ds, qv, qs, alpha, beta)
+        scores = jnp.where(gids[None, :] < n_docs, scores, -jnp.inf)
+
+        kk = min(k, per_shard)
+        v, i = jax.lax.top_k(scores, kk)  # [B, kk]
+        gi = jnp.take(gids, i)
+
+        v_all = jax.lax.all_gather(v, doc_axes, axis=1, tiled=True)
+        gi_all = jax.lax.all_gather(gi, doc_axes, axis=1, tiled=True)
+        return _stable_top_k(v_all, gi_all, k)
+
+    spec_docs = P(doc_axes, None)
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(spec_docs, spec_docs, P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+
+def single_device_reference(doc_vecs, doc_sigs, q_vecs, q_sigs, n_docs, k,
+                            alpha=hsf.DEFAULT_ALPHA, beta=hsf.DEFAULT_BETA):
+    """Unsharded oracle for the sharded path (same masking + tie rule)."""
+    scores = hsf.hsf_scores_batched(
+        jnp.asarray(doc_vecs), jnp.asarray(doc_sigs),
+        jnp.asarray(q_vecs), jnp.asarray(q_sigs), alpha, beta,
+    )
+    gids = jnp.arange(doc_vecs.shape[0], dtype=jnp.int32)
+    scores = jnp.where(gids[None, :] < n_docs, scores, -jnp.inf)
+    return _stable_top_k(scores, jnp.broadcast_to(gids, scores.shape), k)

@@ -1,0 +1,140 @@
+"""Hashed sublinear TF-IDF vectorizer (paper §4.1, TPU-adapted).
+
+Paper formulas (kept exactly):
+
+    tf(t, d)  = 1 + ln f_{t,d}
+    idf(t)    = ln(N / (1 + df_t)) + 1
+    v_d       = l2_normalize( [tf·idf]_t )
+
+Adaptation (DESIGN.md §3): the paper stores vocabulary-dimensional sparse
+vectors; a TPU MXU wants dense, bounded-width operands.  We apply *signed
+feature hashing* (hashing trick): term t → bucket ``h(t) mod D`` with sign
+``±1`` from a decorrelated hash bit.  Cosine similarity is preserved in
+expectation; D is a build-time constant (multiple of 128 → lane-aligned).
+
+Document frequency is maintained *per bucket* and updated incrementally
+(`add_doc` / `remove_doc`), which is what keeps re-indexing O(U) in the
+number of updated documents (paper §3.3): unchanged documents keep their
+stored `TermCounts`; only the cheap re-weighting pass is global.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.tokenizer import TermCounts, tokenize
+
+DEFAULT_DIM = 4096
+
+
+def bucket_sign(term_hashes: np.ndarray, dim: int) -> tuple[np.ndarray, np.ndarray]:
+    """Signed feature hashing: bucket = h mod D, sign = ±1 from mixed bit."""
+    h = term_hashes.astype(np.uint64)
+    buckets = (h % np.uint64(dim)).astype(np.int32)
+    signs = np.where(
+        (hashing.mix64(h) >> np.uint64(63)).astype(np.int8) == 1, -1, 1
+    ).astype(np.int8)
+    return buckets, signs
+
+
+@dataclass
+class HashedTfIdf:
+    """Stateful hashed TF-IDF model.  State = (dim, n_docs, df[dim])."""
+
+    dim: int = DEFAULT_DIM
+    n_docs: int = 0
+    df: np.ndarray = field(default=None)  # int64 [dim]
+
+    def __post_init__(self):
+        if self.df is None:
+            self.df = np.zeros((self.dim,), dtype=np.int64)
+        assert self.dim % 128 == 0, "hashed dim must be lane-aligned (×128)"
+
+    # ---- incremental df maintenance (O(U) ingestion path) -------------
+
+    def _doc_buckets(self, tc: TermCounts) -> np.ndarray:
+        buckets, _ = bucket_sign(tc.term_hashes, self.dim)
+        return np.unique(buckets)
+
+    def add_doc(self, tc: TermCounts) -> None:
+        self.df[self._doc_buckets(tc)] += 1
+        self.n_docs += 1
+
+    def remove_doc(self, tc: TermCounts) -> None:
+        self.df[self._doc_buckets(tc)] -= 1
+        self.n_docs -= 1
+
+    # ---- weighting -----------------------------------------------------
+
+    def idf(self) -> np.ndarray:
+        """idf(t) = ln(N / (1 + df)) + 1  (float32 [dim])."""
+        n = max(self.n_docs, 1)
+        return (np.log(n / (1.0 + self.df.astype(np.float64))) + 1.0).astype(
+            np.float32
+        )
+
+    def _weights(self, tc: TermCounts, idf: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        buckets, signs = bucket_sign(tc.term_hashes, self.dim)
+        tf = 1.0 + np.log(tc.counts.astype(np.float32))
+        w = tf * idf[buckets] * signs.astype(np.float32)
+        return buckets, w
+
+    def doc_vector(self, tc: TermCounts, idf: np.ndarray | None = None) -> np.ndarray:
+        """Dense ℓ2-normalized doc vector (float32 [dim])."""
+        if idf is None:
+            idf = self.idf()
+        v = np.zeros((self.dim,), dtype=np.float32)
+        if tc.term_hashes.size:
+            buckets, w = self._weights(tc, idf)
+            np.add.at(v, buckets, w)
+            norm = np.linalg.norm(v)
+            if norm > 0:
+                v /= norm
+        return v
+
+    def build_matrix(self, term_counts: list[TermCounts]) -> np.ndarray:
+        """Vectorized batch build of the weighted doc matrix [n, dim].
+
+        One concatenated scatter-add instead of a per-doc loop — this is
+        the same bag-accumulation dataflow as the recsys EmbeddingBag
+        (models/recsys/embedding.py); on TPU it lowers to the
+        embedding_bag kernel.
+        """
+        n = len(term_counts)
+        out = np.zeros((n, self.dim), dtype=np.float32)
+        if n == 0:
+            return out
+        idf = self.idf()
+        rows, cols, vals = [], [], []
+        for i, tc in enumerate(term_counts):
+            if tc.term_hashes.size == 0:
+                continue
+            buckets, w = self._weights(tc, idf)
+            rows.append(np.full(buckets.shape, i, dtype=np.int64))
+            cols.append(buckets.astype(np.int64))
+            vals.append(w)
+        if rows:
+            flat = np.concatenate(rows) * self.dim + np.concatenate(cols)
+            np.add.at(out.reshape(-1), flat, np.concatenate(vals))
+        norms = np.linalg.norm(out, axis=1, keepdims=True)
+        np.divide(out, norms, out=out, where=norms > 0)
+        return out
+
+    def query_vector(self, query: str) -> np.ndarray:
+        """Vectorize a query with the *current* idf statistics."""
+        return self.doc_vector(TermCounts.from_text(query))
+
+    # ---- (de)serialization for the knowledge container ----------------
+
+    def state(self) -> dict:
+        return {"dim": self.dim, "n_docs": self.n_docs}
+
+    @staticmethod
+    def from_state(state: dict, df: np.ndarray) -> "HashedTfIdf":
+        return HashedTfIdf(dim=int(state["dim"]), n_docs=int(state["n_docs"]), df=df)
+
+
+def tokenize_query(query: str) -> list[str]:
+    return tokenize(query)

@@ -1,0 +1,72 @@
+"""Fused EmbeddingBag kernel (Pallas TPU, scalar-prefetch indexed).
+
+The recsys hot path (kernel_taxonomy §RecSys): ragged gather over a huge
+table followed by a per-bag segment reduce.  The TPU-native formulation
+uses ``PrefetchScalarGridSpec``: the index and segment arrays live in
+SMEM ahead of the grid, and *drive the BlockSpec index maps*:
+
+    grid step i:
+        in  block = table[indices[i]]      (1 × E row, HBM→VMEM DMA)
+        out block = out[segment_ids[i]]    (1 × E row, revisited)
+
+Consecutive steps that map to the same output row accumulate in-place —
+the canonical TPU "revisited output block" pattern, which is why the
+wrapper sorts by segment id.  First-visit detection zero-initializes the
+accumulator, so the kernel needs no separate init pass over the output.
+
+Weights ride along in SMEM (scalar prefetch) — this is exactly the
+tf·idf·sign accumulation of the paper's vectorizer (core/vectorizer.py),
+so the retrieval plane and the recsys plane share this kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, seg_ref, w_ref, row_ref, out_ref):
+    i = pl.program_id(0)
+    prev = seg_ref[jnp.maximum(i - 1, 0)]
+    first = jnp.logical_or(i == 0, seg_ref[i] != prev)
+
+    @pl.when(first)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += row_ref[...].astype(out_ref.dtype) * w_ref[i]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bags", "interpret"))
+def embedding_bag_pallas(
+    table: jnp.ndarray,  # [V, E]
+    indices: jnp.ndarray,  # [n] int32 (any order)
+    segment_ids: jnp.ndarray,  # [n] int32 sorted ascending
+    weights: jnp.ndarray,  # [n] f32
+    *,
+    n_bags: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n = indices.shape[0]
+    e = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i, idx, seg, w: (idx[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, e), lambda i, idx, seg, w: (seg[i], 0)),
+    )
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_bags, e), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="embedding_bag",
+    )(indices, segment_ids, weights, table)

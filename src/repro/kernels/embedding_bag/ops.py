@@ -1,0 +1,50 @@
+"""Public EmbeddingBag wrapper: sorting, empty-bag zeroing, mean mode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def embedding_bag(
+    table: jnp.ndarray,  # [V, E]
+    indices: jnp.ndarray,  # [n] int
+    segment_ids: jnp.ndarray,  # [n] int, values in [0, n_bags)
+    n_bags: int,
+    weights: jnp.ndarray | None = None,
+    mode: str = "sum",
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Fused bag reduce: out[b] = Σ_{i: seg[i]==b} w[i] · table[idx[i]].
+
+    Bags with no indices are zero.  Input order is free — a stable sort
+    by segment id happens here (the kernel requires grouped segments).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n = indices.shape[0]
+    indices = indices.astype(jnp.int32)
+    segment_ids = segment_ids.astype(jnp.int32)
+    if weights is None:
+        weights = jnp.ones((n,), jnp.float32)
+    order = jnp.argsort(segment_ids, stable=True)
+    indices = indices[order]
+    segment_ids = segment_ids[order]
+    weights = weights[order].astype(jnp.float32)
+
+    out = embedding_bag_pallas(
+        table, indices, segment_ids, weights,
+        n_bags=n_bags, interpret=interpret,
+    )
+    counts = jax.ops.segment_sum(
+        jnp.ones((n,), jnp.float32), segment_ids, num_segments=n_bags
+    )
+    out = jnp.where(counts[:, None] > 0, out, 0.0)
+    if mode == "mean":
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    return out.astype(table.dtype)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: EmbeddingBag = gather + segment-reduce.
+
+JAX has no native EmbeddingBag (kernel_taxonomy §RecSys) — this
+take+segment_sum composition IS the production jnp path; the Pallas
+kernel fuses the gather and the reduce so rows stream HBM→VMEM once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,  # [V, E]
+    indices: jnp.ndarray,  # [n] int32
+    segment_ids: jnp.ndarray,  # [n] int32, values in [0, n_bags)
+    n_bags: int,
+    weights: jnp.ndarray | None = None,  # [n] f32
+    mode: str = "sum",
+) -> jnp.ndarray:
+    rows = jnp.take(table, indices, axis=0).astype(jnp.float32)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(jnp.float32)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(segment_ids, jnp.float32), segment_ids,
+            num_segments=n_bags,
+        )
+        out = out / jnp.maximum(counts, 1.0)[:, None]
+    return out.astype(table.dtype)

@@ -1,0 +1,170 @@
+"""Blockwise IO-aware attention kernel (Pallas TPU) — FlashAttention
+adapted to the TPU memory hierarchy, with the mask family the assigned
+LM architectures need: causal, sliding window (gemma2/3 local layers),
+logit softcap (gemma2), GQA head grouping.
+
+Grid: (batch, q_heads, q_blocks, k_blocks); the k_blocks axis is the
+innermost ("arbitrary") dimension and carries the online-softmax state in
+VMEM scratch:
+
+    m   (block_q, 128) f32   running row max (lane-broadcast)
+    l   (block_q, 128) f32   running row sum
+    acc (block_q, d)   f32   running weighted value sum
+
+Per step the working set is q(block_q×d) + k,v(block_k×d) + scores
+(block_q×block_k) — with the default 512×512 blocks at d=128 this is
+~1.4 MB bf16, leaving VMEM room for double buffering.
+
+Irrelevant (q_block, k_block) pairs under causal/window masking are
+skipped via @pl.when on the block-level relevance test — for a window of
+w the per-row work drops from O(L) to O(w + block), which is the
+structural win for gemma3's 5:1 local:global stack.
+
+KV padding is masked with k_pos < kv_len so callers may pad freely.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MASK_VALUE = -1e30
+LANES = 128
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale, causal, window, softcap, block_q, block_k, nk,
+    q_offset, kv_len,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, MASK_VALUE)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = q_offset + qi * block_q
+    k_start = ki * block_k
+
+    # Block-level relevance: skip blocks fully outside the mask.
+    relevant = k_start < kv_len
+    if causal:
+        relevant &= k_start <= q_start + block_q - 1
+    if window is not None:
+        relevant &= (k_start + block_k - 1) > (q_start - window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0]  # [bq, d]
+        k = k_ref[0, 0]  # [bk, d]
+        v = v_ref[0, 0]  # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [bq, bk]
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos < kv_len
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, MASK_VALUE)
+
+        m_prev = m_scr[:, 0:1]  # [bq, 1]
+        m_curr = jnp.max(s, axis=-1, keepdims=True)
+        m_next = jnp.maximum(m_prev, m_curr)
+        # Explicit mask multiply: correct even for fully-masked rows
+        # (where exp(s - m_next) == exp(0) == 1).
+        p = jnp.exp(s - m_next) * mask.astype(jnp.float32)
+        alpha = jnp.exp(m_prev - m_next)  # [bq, 1]
+        l_next = alpha * l_scr[:, 0:1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = jnp.broadcast_to(m_next, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_next, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        l = l_scr[:, 0:1]
+        o_ref[0, 0] = (
+            acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "causal", "window", "softcap", "block_q", "block_k",
+        "q_offset", "kv_len", "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [B, Hq, Lq, Dh]   Lq % block_q == 0
+    k: jnp.ndarray,  # [B, Hkv, Lk, Dh]  Lk % block_k == 0
+    v: jnp.ndarray,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, lq, dh = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    assert lq % block_q == 0 and lk % block_k == 0, (lq, lk, block_q, block_k)
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    nq, nk = lq // block_q, lk // block_k
+    kv_len = lk if kv_len is None else kv_len
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, nk=nk,
+        q_offset=q_offset, kv_len=kv_len,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, dh),
+                lambda b, h, qi, ki: (b, h // group, ki, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, dh),
+                lambda b, h, qi, ki: (b, h // group, ki, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, dh), lambda b, h, qi, ki: (b, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, LANES), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_attention",
+    )(q, k, v)

@@ -1,0 +1,59 @@
+"""Jit'd public wrapper: padding, backend dispatch, block-size selection."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_seq(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(
+    q: jnp.ndarray,  # [B, Hq, Lq, Dh]
+    k: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    v: jnp.ndarray,
+    *,
+    scale: float | None = None,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    q_offset: int = 0,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Blockwise attention; pads seq dims to block multiples internally.
+
+    ``q_offset``: absolute position of q[..., 0, :] — used when the query
+    chunk is a suffix of the kv sequence (chunked prefill).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    lq, lk = q.shape[2], k.shape[2]
+    block_q = min(block_q, max(8, lq))
+    block_k = min(block_k, max(8, lk))
+    qp = _pad_seq(q, 2, block_q)
+    kp = _pad_seq(k, 2, block_k)
+    vp = _pad_seq(v, 2, block_k)
+    out = flash_attention_pallas(
+        qp, kp, vp,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k,
+        q_offset=q_offset, kv_len=lk,
+        interpret=interpret,
+    )
+    return out[:, :, :lq]

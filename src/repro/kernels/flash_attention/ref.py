@@ -1,0 +1,54 @@
+"""Dense pure-jnp oracle for the flash attention kernel.
+
+Semantics (shared with the kernel):
+- GQA: q heads grouped onto kv heads (Hq % Hkv == 0).
+- causal mask; optional sliding window (attend iff 0 <= q-k < window,
+  i.e. gemma-style backward window including self).
+- optional logit softcap: s <- cap * tanh(s / cap), applied after scale,
+  before masking (gemma2 convention).
+- rows with no attendable key return zeros.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+MASK_VALUE = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, Hq, Lq, Dh]
+    k: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    v: jnp.ndarray,  # [B, Hkv, Lk, Dh]
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    b, hq, lq, dh = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = q_offset + jnp.arange(lq)[:, None]
+    k_pos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, MASK_VALUE)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * mask[None, None]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    o = o / jnp.where(l == 0.0, 1.0, l)
+    return o.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.hsf_score.ops import hsf_score  # noqa: F401

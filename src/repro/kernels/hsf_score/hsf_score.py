@@ -1,0 +1,95 @@
+"""Fused HSF scoring kernel (Pallas TPU).
+
+One grid step scores a (block_docs × D) tile of the document matrix
+against a resident query:
+
+    VMEM working set per step:
+        docs tile   block_docs × D      (bf16/f32)   — MXU operand
+        sigs tile   block_docs × W      (int32)      — VPU operand
+        query       1 × D               (f32)
+        query sig   1 × W               (int32)
+        out tile    block_docs          (f32)
+
+    compute: cos  = docs @ qᵀ                     (MXU, D-contraction)
+             ind  = all((sigs & qsig) == qsig)    (VPU, bitwise+reduce)
+             out  = α·cos + β·ind                 (fused epilogue)
+
+Tiling constraints: D and W are multiples of 128 (lane alignment);
+block_docs a multiple of 8 (sublane).  Default block_docs=512, D=4096,
+W=128 → docs tile 4 MB (bf16) / 8 MB (f32), well inside a 16 MB VMEM
+with double buffering headroom at bf16.
+
+The fusion is the point: the unfused path reads the doc matrix for the
+matmul and the signature matrix for the boost in two HBM passes and
+materializes an [N] cosine intermediate; fused, every byte of ⟨V⟩ and ⟨I⟩
+regions is read exactly once and the boost costs zero extra bandwidth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _hsf_kernel(q_ref, qsig_ref, docs_ref, sigs_ref, out_ref, *, alpha, beta):
+    docs = docs_ref[...]
+    q = q_ref[...]  # [1, D]
+    # MXU: [B, D] x [D, 1] -> [B, 1]; accumulate in f32 regardless of
+    # operand dtype.
+    cos = jax.lax.dot_general(
+        docs,
+        q,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [B, 1]
+    qs = qsig_ref[...]  # [1, W] int32
+    hits = (sigs_ref[...] & qs) == qs  # [B, W] bool
+    ind = jnp.all(hits, axis=-1, keepdims=True).astype(jnp.float32)  # [B, 1]
+    out_ref[...] = alpha * cos + beta * ind
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "beta", "block_docs", "interpret")
+)
+def hsf_score_pallas(
+    doc_vecs: jnp.ndarray,  # [N, D], N % block_docs == 0
+    doc_sigs: jnp.ndarray,  # [N, W] int32
+    query_vec: jnp.ndarray,  # [D]
+    query_sig: jnp.ndarray,  # [W] int32
+    *,
+    alpha: float,
+    beta: float,
+    block_docs: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    n, d = doc_vecs.shape
+    w = doc_sigs.shape[1]
+    assert n % block_docs == 0, (n, block_docs)
+    grid = (n // block_docs,)
+
+    kernel = functools.partial(_hsf_kernel, alpha=alpha, beta=beta)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),  # query resident
+            pl.BlockSpec((1, w), lambda i: (0, 0)),  # query sig resident
+            pl.BlockSpec((block_docs, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_docs, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_docs, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="hsf_score",
+    )(
+        query_vec.reshape(1, d),
+        query_sig.reshape(1, w),
+        doc_vecs,
+        doc_sigs,
+    )[:, 0]

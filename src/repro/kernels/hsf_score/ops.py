@@ -1,0 +1,57 @@
+"""Jit'd public wrapper for the fused HSF kernel.
+
+Handles padding to the block size, backend dispatch (interpret mode on
+CPU hosts — the kernel body itself is what we validate), and restoring
+the caller's document count.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hsf_score.hsf_score import hsf_score_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hsf_score(
+    doc_vecs,
+    doc_sigs,
+    query_vec,
+    query_sig,
+    *,
+    alpha: float = 1.0,
+    beta: float = 1.0,
+    block_docs: int = 512,
+    interpret: bool | None = None,
+):
+    """Fused HSF scores, float32 [N].
+
+    Padding docs score α·0 + β·(empty-sig containment); they are sliced
+    off before returning so callers never see them.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n = doc_vecs.shape[0]
+    block = min(block_docs, max(8, 1 << (n - 1).bit_length())) if n else block_docs
+    pad = (-n) % block
+    if pad:
+        doc_vecs = jnp.concatenate(
+            [doc_vecs, jnp.zeros((pad, doc_vecs.shape[1]), doc_vecs.dtype)]
+        )
+        doc_sigs = jnp.concatenate(
+            [doc_sigs, jnp.zeros((pad, doc_sigs.shape[1]), doc_sigs.dtype)]
+        )
+    scores = hsf_score_pallas(
+        doc_vecs,
+        doc_sigs,
+        query_vec,
+        query_sig,
+        alpha=alpha,
+        beta=beta,
+        block_docs=block,
+        interpret=interpret,
+    )
+    return scores[:n]

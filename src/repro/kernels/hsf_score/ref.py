@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused HSF kernel (paper §4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hsf_score_ref(
+    doc_vecs: jnp.ndarray,  # [N, D] float
+    doc_sigs: jnp.ndarray,  # [N, W] int32
+    query_vec: jnp.ndarray,  # [D] float
+    query_sig: jnp.ndarray,  # [W] int32
+    alpha: float,
+    beta: float,
+) -> jnp.ndarray:
+    """α·(docs @ q) + β·bloom_containment — float32 [N]."""
+    cos = doc_vecs.astype(jnp.float32) @ query_vec.astype(jnp.float32)
+    hits = (doc_sigs & query_sig) == query_sig
+    ind = jnp.all(hits, axis=-1).astype(jnp.float32)
+    return alpha * cos + beta * ind

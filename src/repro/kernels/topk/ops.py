@@ -1,0 +1,36 @@
+"""Public top-k wrapper: padding + backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk.topk import top_k_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def top_k(
+    scores: jnp.ndarray,  # [N]
+    k: int,
+    block: int = 1024,
+    interpret: bool | None = None,
+):
+    """Streaming top-k; (values [k], indices [k] int32).
+
+    Requires k <= min(N, 128).  Padding scores are -inf and can never
+    displace real candidates (ids of padding are >= N and only appear
+    if k > N, which is rejected).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n = scores.shape[0]
+    assert k <= n, (k, n)
+    block = min(block, max(128, 1 << (n - 1).bit_length()))
+    pad = (-n) % block
+    if pad:
+        scores = jnp.concatenate(
+            [scores, jnp.full((pad,), -jnp.inf, scores.dtype)]
+        )
+    return top_k_pallas(scores, k=k, block=block, interpret=interpret)

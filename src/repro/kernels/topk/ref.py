@@ -1,0 +1,11 @@
+"""Oracle: jax.lax.top_k with (score desc, id asc) tie-breaking."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def top_k_ref(scores: jnp.ndarray, k: int):
+    """(values [k], indices [k] int32), ties broken toward lower index."""
+    ids = jnp.arange(scores.shape[0], dtype=jnp.int32)
+    order = jnp.lexsort((ids, -scores))[:k]
+    return scores[order], order.astype(jnp.int32)

@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture × input shape ×
+# mesh) cell and extract the roofline terms from the compiled artifact.
+#
+# MUST be run as a module entry point (``python -m repro.launch.dryrun``)
+# or imported before anything touches jax — the XLA_FLAGS line above has
+# to execute before jax locks the device count.  (Hence also: no module
+# docstring — the os.environ lines above are deliberately the first two
+# statements of the file, per the dry-run contract.)
+#
+# Per cell this prints/records:
+# - ``compiled.memory_analysis()``  → bytes/device (proves it fits)
+# - ``compiled.cost_analysis()``    → HLO FLOPs + HBM bytes
+# - collective bytes, parsed from the post-SPMD HLO text: the summed
+#   operand sizes of all-gather / all-reduce / reduce-scatter /
+#   all-to-all / collective-permute ops (cost_analysis does not report
+#   these).
+#
+# Results are dumped as JSON (one file per cell) for benchmarks/roofline.py.
+# (No ``from __future__`` import: the XLA_FLAGS lines must be the first
+# statements in the file, and __future__ imports may not follow them.)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCHS, get as get_arch  # noqa: E402
+from repro.configs import shapes as shp  # noqa: E402
+from repro.launch import mesh as meshlib  # noqa: E402
+from repro.launch import steps  # noqa: E402
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32"
+                       r"|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:[%\w.-]+ = )?"
+    r"(\([^=]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[.\w-]*\(",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes per collective kind over the HLO module.
+
+    Uses the op *result* shape (for all-gather / all-to-all this equals
+    the full exchanged payload; for all-reduce it equals the reduced
+    tensor, the standard 2(n-1)/n ring cost is applied by the roofline
+    model, not here).
+    """
+    out: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        out[kind] = out.get(kind, 0) + b
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# dry-run driver
+# ---------------------------------------------------------------------------
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool,
+             out_dir: str | None = None, verbose: bool = True) -> dict:
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = steps.build_cell(arch_id, shape_id, mesh)
+    lowered = cell.fn.lower(*cell.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    colls = collective_bytes(hlo)
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_id,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "kind": cell.meta.get("kind"),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", 0),
+        },
+        "collectives": colls,
+    }
+    if verbose:
+        print(f"[{rec['mesh']}] {arch_id} × {shape_id}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s  "
+              f"flops={rec['flops']:.3e}  "
+              f"coll={colls['total_bytes']:.3e}B "
+              f"({colls['counts']})", flush=True)
+        print(f"    memory_analysis: args={rec['memory']['argument_bytes']:.3e} "
+              f"temp={rec['memory']['temp_bytes']:.3e} "
+              f"out={rec['memory']['output_bytes']:.3e}", flush=True)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch_id}__{shape_id}__{rec['mesh']}".replace("/", "_")
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id")
+    ap.add_argument("--shape", default=None, help="single shape id")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-ragdb", action="store_true")
+    args = ap.parse_args()
+
+    if args.arch:
+        shapes = ([args.shape] if args.shape else
+                  list(shp.shapes_for_family(get_arch(args.arch).family)))
+        cells = [(args.arch, s) for s in shapes]
+    else:
+        from repro.configs import cells as all_cells
+
+        cells = all_cells()
+        if args.skip_ragdb:
+            cells = [c for c in cells if c[0] != "ragdb"]
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}
+    failures = []
+    for arch_id, shape_id in cells:
+        for multi_pod in meshes[args.mesh]:
+            try:
+                run_cell(arch_id, shape_id, multi_pod, args.out)
+            except Exception as e:  # noqa: BLE001 — report, keep going
+                failures.append((arch_id, shape_id, multi_pod, repr(e)))
+                print(f"FAIL [{'2x16x16' if multi_pod else '16x16'}] "
+                      f"{arch_id} × {shape_id}: {e}", flush=True)
+                traceback.print_exc()
+            finally:
+                # 84 compiles of ≤30 B-param graphs in one process: drop
+                # the executable caches or host RAM accumulates.
+                jax.clear_caches()
+                import gc
+
+                gc.collect()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUN CELLS PASSED")
+
+
+if __name__ == "__main__":
+    main()

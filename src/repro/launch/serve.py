@@ -1,0 +1,69 @@
+"""RAG serving driver: knowledge container + generation plane.
+
+Loads (or builds) a knowledge container, instantiates the retrieval
+tier and an LM, and serves batched requests: retrieve (HSF) → pack →
+prefill → decode.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --corpus /path/to/docs --queries "what is INV-2024?" ...
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get as get_arch
+from repro.core.ingest import KnowledgeBase
+from repro.core.rag import RAGPipeline
+from repro.models import transformer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--container", default=None, help=".ragdb to load")
+    ap.add_argument("--corpus", default=None, help="directory to ingest")
+    ap.add_argument("--save", default=None, help="save container here")
+    ap.add_argument("--queries", nargs="+", required=True)
+    ap.add_argument("--top-k", type=int, default=3)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route HSF scoring through the Pallas kernel")
+    args = ap.parse_args(argv)
+
+    if args.container:
+        kb = KnowledgeBase.load(args.container)
+        print(f"loaded container: {kb.n_docs} docs")
+    else:
+        kb = KnowledgeBase(dim=args.dim)
+    if args.corpus:
+        stats = kb.sync(args.corpus)
+        print(f"sync: +{stats.added} ~{stats.updated} -{stats.removed} "
+              f"(skipped {stats.skipped}) in {stats.seconds:.2f}s")
+    if args.save:
+        kb.save(args.save)
+        print(f"published container → {args.save}")
+
+    arch = get_arch(args.arch)
+    cfg = arch.smoke_config  # CPU host: reduced generator
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rag = RAGPipeline(kb, params, cfg, use_kernel=args.use_kernel)
+
+    for q in args.queries:
+        t0 = time.perf_counter()
+        out = rag.answer(q, max_new_tokens=args.max_new_tokens,
+                         top_k_docs=args.top_k)
+        dt = (time.perf_counter() - t0) * 1e3
+        print(f"\nQ: {q}   ({dt:.1f} ms)")
+        for r in out.retrieved:
+            mark = "*" if r.boosted else " "
+            print(f"  {mark} {r.doc_id:30s} score={r.score:.4f}")
+        print(f"  generated token ids: {out.token_ids}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""End-to-end training driver.
+
+Single-host entry point that exercises the full production loop on
+whatever devices exist: deterministic data pipeline → jitted sharded
+train step → async content-hashed checkpoints → exact restart-replay.
+On a real cluster each host runs this same program under its
+jax.distributed initialization; the mesh axes and sharding specs are
+identical (launch/steps.py), only the device count changes.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch llama3.2-3b --smoke --steps 50 --batch 8 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get as get_arch
+from repro.data.pipeline import DataCursor, lm_batch
+from repro.launch import mesh as meshlib
+from repro.launch import steps
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime.straggler import StragglerDetector
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-feasible)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--n-micro", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    assert arch.family == "lm", "train.py drives the LM family"
+    cfg = arch.smoke_config if args.smoke else arch.config
+    mesh = meshlib.make_host_mesh(args.model_parallel)
+    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name} "
+          f"({cfg.param_count() / 1e6:.1f} M params)")
+
+    params = T.init(jax.random.PRNGKey(args.seed), cfg)
+    opt = adamw_init(params)
+    cursor = DataCursor(seed=args.seed)
+
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ck and ck.latest_step() is not None:
+        state, start = ck.restore({"params": params, "opt": opt})
+        params, opt = state["params"], state["opt"]
+        cursor.step = start
+        print(f"restored checkpoint at step {start}")
+
+    step_fn = jax.jit(steps.make_lm_train_step(
+        cfg, mesh, args.n_micro, AdamWConfig(lr=args.lr, weight_decay=0.0)
+    ), donate_argnums=(0, 1))
+    detector = StragglerDetector()
+
+    micro = args.batch // args.n_micro
+    for s in range(start, args.steps):
+        toks, tgts = lm_batch(cursor, args.batch, args.seq, cfg.vocab)
+        toks = toks.reshape(args.n_micro, micro, args.seq)
+        tgts = tgts.reshape(args.n_micro, micro, args.seq)
+        t0 = time.perf_counter()
+        params, opt, loss = step_fn(params, opt, jnp.asarray(toks),
+                                    jnp.asarray(tgts))
+        loss = float(loss)
+        dt = time.perf_counter() - t0
+        detector.observe("worker0", dt)
+        if s % 10 == 0 or s == args.steps - 1:
+            print(f"step {s:5d}  loss {loss:.4f}  {dt * 1e3:7.1f} ms")
+        if ck and (s + 1) % args.ckpt_every == 0:
+            ck.save_async(s + 1, {"params": params, "opt": opt})
+    if ck:
+        ck.wait()
+    return float(loss)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: the generation plane (5 LM architectures) + the assigned
+GNN and recsys families.  Pure-pytree functional style: each model module
+exposes ``init(rng, cfg) -> params`` and step functions over plain dicts,
+so pjit sharding specs can be written directly against the tree.
+"""

@@ -1,0 +1,273 @@
+"""Attention math: XLA-lowerable flash paths + Pallas dispatch + decode.
+
+Three execution strategies, one semantics (tested against each other):
+
+- ``backend="pallas"``: the fused kernel (kernels/flash_attention) — the
+  TPU runtime path.  Not used for dry-run lowering: interpret-mode
+  pallas unrolls the grid into enormous HLO.
+- ``backend="xla"``: blockwise online-softmax attention as a
+  ``lax.scan`` over kv blocks — compact HLO, bounded live memory (no
+  L×L score materialization), correct FLOP accounting for the roofline.
+- sliding-window layers use the *banded* chunked form: query chunk i
+  attends key chunks {i-1, i} only, so window layers cost O(L·2w)
+  instead of O(L²) — this mirrors the kernel's block-skipping and is
+  what makes gemma3's 5:1 local:global stack cheap.
+
+GQA is computed in *grouped-einsum* form — queries reshaped to
+[B, Hkv, G, ...] against un-repeated KV — so KV is never materialized
+per-q-head (memory + HLO-FLOPs accuracy) and KV tensors shard cleanly
+on the head axis regardless of the q:kv ratio.
+
+Decode (single new token against a KV cache) is a separate, memory-bound
+path; its sequence-sharded distributed variant lives in launch/steps.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MASK_VALUE = -1e30
+
+# Roofline accounting mode: XLA's cost_analysis counts while-loop bodies
+# ONCE regardless of trip count, so the kv-block scan hides (nk-1)/nk of
+# the attention FLOPs from the report.  The cost-exact variants compiled
+# by benchmarks/roofline.py set this to True to fully unroll the scan
+# (identical arithmetic, exact op counting).  Never set for production
+# lowering — it inflates HLO size nk-fold.
+COST_EXACT_UNROLL = False
+
+
+def _softcap(s: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    return s if cap is None else cap * jnp.tanh(s / cap)
+
+
+def _group_q(q: jnp.ndarray, hkv: int) -> jnp.ndarray:
+    """[B, Hq, L, D] → [B, Hkv, G, L, D]."""
+    b, hq, l, d = q.shape
+    return q.reshape(b, hkv, hq // hkv, l, d)
+
+
+def _ungroup(o: jnp.ndarray) -> jnp.ndarray:
+    """[B, Hkv, G, L, D] → [B, Hq, L, D]."""
+    b, hkv, g, l, d = o.shape
+    return o.reshape(b, hkv * g, l, d)
+
+
+# --------------------------------------------------------------------------
+# XLA flash attention (scan over kv blocks)
+# --------------------------------------------------------------------------
+
+def flash_attention_xla(
+    q: jnp.ndarray,  # [B, Hq, Lq, D]
+    k: jnp.ndarray,  # [B, Hkv, Lk, D]
+    v: jnp.ndarray,
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    block_k: int = 1024,
+) -> jnp.ndarray:
+    b, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # may differ from d (MLA: qk dim != v dim)
+    g = hq // hkv
+    block_k = min(block_k, lk)
+    pad = (-lk) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = k.shape[2] // block_k
+    kb = k.reshape(b, hkv, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(b, hkv, nk, block_k, dv).transpose(2, 0, 1, 3, 4)
+
+    # operands stay in model dtype (bf16 on TPU → MXU-native); all
+    # reductions/accumulators are f32 via preferred_element_type — the
+    # canonical flash-attention mixed-precision recipe.
+    qf = _group_q(q, hkv)  # [B, Hkv, G, Lq, D]
+    q_pos = q_offset + jnp.arange(lq)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, ki = blk  # [B, Hkv, bk, D]
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        s = _softcap(s, softcap)
+        k_pos = ki * block_k + jnp.arange(block_k)
+        mask = (k_pos < lk)[None, :]
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window is not None:
+            mask = mask & ((q_pos[:, None] - k_pos[None, :]) < window)
+        mb = mask[None, None, None]  # [1,1,1,Lq,bk]
+        s = jnp.where(mb, s, MASK_VALUE)
+        m_curr = jnp.max(s, axis=-1, keepdims=True)
+        m_next = jnp.maximum(m_prev, m_curr)
+        p = jnp.exp(s - m_next) * mb
+        alpha = jnp.exp(m_prev - m_next)
+        l_next = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_next, l_next, acc), None
+
+    init = (
+        jnp.full((b, hkv, g, lq, 1), MASK_VALUE, jnp.float32),
+        jnp.zeros((b, hkv, g, lq, 1), jnp.float32),
+        jnp.zeros((b, hkv, g, lq, dv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (kb, vb, jnp.arange(nk)),
+        unroll=nk if COST_EXACT_UNROLL else 1,
+    )
+    out = acc / jnp.where(l == 0.0, 1.0, l)
+    return _ungroup(out).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# banded (sliding-window) attention: O(L · 2w) instead of O(L²)
+# --------------------------------------------------------------------------
+
+def local_attention_xla(
+    q: jnp.ndarray,  # [B, Hq, L, D]
+    k: jnp.ndarray,  # [B, Hkv, L, D]
+    v: jnp.ndarray,
+    *,
+    scale: float,
+    window: int,
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    """Causal sliding-window attention via chunked band matmuls.
+
+    Chunk size = window; query chunk i attends key chunks {i-1, i}.
+    Exact for the mask 0 <= q_pos - k_pos < window.
+    """
+    b, hq, l, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    w = window
+    pad = (-l) % w
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    lp = q.shape[2]
+    nb = lp // w
+    qb = _group_q(q, hkv).reshape(b, hkv, g, nb, w, d)
+    kb = k.reshape(b, hkv, nb, w, d)
+    vb = v.reshape(b, hkv, nb, w, d)
+    # previous chunk (zeros before chunk 0)
+    kprev = jnp.pad(kb[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))
+    vprev = jnp.pad(vb[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))
+    kext = jnp.concatenate([kprev, kb], axis=3)  # [B, Hkv, nb, 2w, D]
+    vext = jnp.concatenate([vprev, vb], axis=3)
+
+    s = jnp.einsum("bhgnqd,bhnkd->bhgnqk", qb, kext,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+
+    a = jnp.arange(w)[:, None]  # in-chunk q offset
+    bcol = jnp.arange(2 * w)[None, :]  # extended k offset
+    delta = a + w - bcol  # q_pos - k_pos
+    mask = (delta >= 0) & (delta < w)
+    chunk = jnp.arange(nb)[:, None, None]
+    k_pos = chunk * w + (bcol[None] - w)  # absolute key position
+    mask = mask[None] & (k_pos >= 0) & (k_pos < l)  # [nb, w, 2w]
+    mb = mask[None, None, None]  # [1,1,1,nb,w,2w]
+    s = jnp.where(mb, s, MASK_VALUE)
+
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * mb
+    lsum = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgnqk,bhnkd->bhgnqd", p.astype(vext.dtype), vext,
+                   preferred_element_type=jnp.float32)
+    o = o / jnp.where(lsum == 0.0, 1.0, lsum)
+    o = o.reshape(b, hkv, g, lp, d)[:, :, :, :l]
+    return _ungroup(o).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# unified entry point
+# --------------------------------------------------------------------------
+
+def attention(
+    q, k, v, *,
+    scale: float,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_offset: int = 0,
+    backend: str = "xla",
+):
+    if backend == "pallas":
+        from repro.kernels.flash_attention import ops as _ops
+
+        return _ops.flash_attention(
+            q, k, v, scale=scale, causal=causal, window=window,
+            softcap=softcap, q_offset=q_offset,
+        )
+    if window is not None and causal and q_offset == 0 \
+            and q.shape[2] == k.shape[2] and q.shape[2] > window:
+        return local_attention_xla(
+            q, k, v, scale=scale, window=window, softcap=softcap
+        )
+    return flash_attention_xla(
+        q, k, v, scale=scale, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset,
+    )
+
+
+# --------------------------------------------------------------------------
+# decode attention (one query token against a KV cache)
+# --------------------------------------------------------------------------
+
+def decode_attention(
+    q: jnp.ndarray,  # [B, Hq, 1, D]
+    k_cache: jnp.ndarray,  # [B, Hkv, S, D]
+    v_cache: jnp.ndarray,
+    length: jnp.ndarray | int,  # current cache fill (scalar or [B])
+    *,
+    scale: float,
+    window: int | None = None,
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    """Memory-bound decode attention (the query position is length-1)."""
+    b, hq, _, d = q.shape
+    hkv, s_max = k_cache.shape[1], k_cache.shape[2]
+    if isinstance(length, int):
+        length = jnp.full((b,), length, jnp.int32)
+    k_pos = jnp.arange(s_max)
+    q_pos = (length - 1)[:, None]  # [B, 1]
+    mask = k_pos[None, :] < length[:, None]
+    if window is not None:
+        mask &= (q_pos - k_pos[None, :]) < window
+    return masked_decode_attention(q, k_cache, v_cache, mask,
+                                   scale=scale, softcap=softcap)
+
+
+def masked_decode_attention(
+    q: jnp.ndarray,  # [B, Hq, 1, D]
+    k_cache: jnp.ndarray,  # [B, Hkv, S, D]
+    v_cache: jnp.ndarray,
+    mask: jnp.ndarray,  # [B, S] bool — slot validity
+    *,
+    scale: float,
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    qg = _group_q(q, hkv)  # [B, Hkv, G, 1, D]
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = _softcap(s, softcap)
+    mb = mask[:, None, None, None, :]
+    s = jnp.where(mb, s, MASK_VALUE)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * mb
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    o = o / jnp.where(l == 0.0, 1.0, l)
+    return _ungroup(o).astype(q.dtype)

@@ -1,0 +1,99 @@
+"""Shared neural building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(rng, d_in: int, d_out: int, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale)
+
+
+def embed_init(rng, vocab: int, d_model: int):
+    return jax.random.normal(rng, (vocab, d_model), jnp.float32) * 0.01
+
+
+# --------------------------------------------------------------------------
+# normalization
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             unit_offset: bool = False) -> jnp.ndarray:
+    """RMSNorm.  ``unit_offset=True`` uses the gemma convention
+    (weights parameterized around 0, applied as 1 + w)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + weight) if unit_offset else weight
+    return (x * w).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary position embedding
+# --------------------------------------------------------------------------
+
+def rope_table(positions: jnp.ndarray, head_dim: int, base: float):
+    """(sin, cos) tables for positions [..., L] → [..., L, head_dim/2]."""
+    half = head_dim // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, base: float) -> jnp.ndarray:
+    """Rotate pairs (split-half convention).  x: [B, H, L, D],
+    positions: [B, L]."""
+    sin, cos = rope_table(positions, x.shape[-1], base)
+    sin = sin[:, None, :, :]  # [B, 1, L, D/2]
+    cos = cos[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------
+
+def mlp_init(rng, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff),
+        "w_up": dense_init(k2, d_model, d_ff),
+        "w_down": dense_init(k3, d_ff, d_model),
+    }
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, activation: str = "silu") -> jnp.ndarray:
+    dtype = x.dtype
+    gate = x @ params["w_gate"].astype(dtype)
+    up = x @ params["w_up"].astype(dtype)
+    act = jax.nn.gelu(gate) if activation == "gelu" else jax.nn.silu(gate)
+    return (act * up) @ params["w_down"].astype(dtype)
+
+
+def dense_mlp_init(rng, dims: tuple[int, ...]) -> dict:
+    """Plain MLP (recsys towers): dims = (in, h1, ..., out)."""
+    keys = jax.random.split(rng, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(keys[i], dims[i], dims[i + 1])
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), jnp.float32)
+        for i in range(len(dims) - 1)
+    }
+
+
+def dense_mlp_apply(params: dict, x: jnp.ndarray, n_layers: int,
+                    final_activation: bool = False) -> jnp.ndarray:
+    for i in range(n_layers):
+        x = x @ params[f"w{i}"].astype(x.dtype) + params[f"b{i}"].astype(x.dtype)
+        if i + 1 < n_layers or final_activation:
+            x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,156 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+KV compression: x → c_kv (kv_lora_rank) + a decoupled shared RoPE key
+(rope_dim).  The cache stores only [c_kv ; k_rope] — (512+64) floats per
+token instead of 2·H·128 = 4096 — the paper's 93 % KV-cache reduction.
+
+Two execution paths:
+- ``apply`` (train/prefill): up-project c_kv to per-head K/V and run
+  ordinary attention (clearer, and the one-off up-projection amortizes
+  over the whole sequence).
+- ``decode_absorbed``: the production decode path.  The up-projection
+  matrices are *absorbed* into the query/output projections
+  (q_nope·W_uk → query in latent space; attn·W_uv → output), so each
+  step reads only the compressed cache and never materializes per-head
+  K/V — this is what makes MLA decode memory-bound on the small cache
+  instead of the expanded one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import layers
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    q_lora_rank: int | None = None  # V2-Lite: queries uncompressed
+
+
+def init(rng, cfg: MLAConfig, d_model: int, n_heads: int) -> dict:
+    ks = jax.random.split(rng, 6)
+    qdim = cfg.nope_head_dim + cfg.rope_head_dim
+    return {
+        "w_q": layers.dense_init(ks[0], d_model, n_heads * qdim),
+        "w_dkv": layers.dense_init(ks[1], d_model, cfg.kv_lora_rank),
+        "w_kr": layers.dense_init(ks[2], d_model, cfg.rope_head_dim),
+        "kv_norm": jnp.zeros((cfg.kv_lora_rank,), jnp.float32),
+        "w_uk": layers.dense_init(
+            ks[3], cfg.kv_lora_rank, n_heads * cfg.nope_head_dim
+        ),
+        "w_uv": layers.dense_init(
+            ks[4], cfg.kv_lora_rank, n_heads * cfg.v_head_dim
+        ),
+        "w_o": layers.dense_init(ks[5], n_heads * cfg.v_head_dim, d_model),
+    }
+
+
+def _project_q(params, x, cfg: MLAConfig, n_heads: int, positions, rope_base):
+    b, l, _ = x.shape
+    qdim = cfg.nope_head_dim + cfg.rope_head_dim
+    q = (x @ params["w_q"].astype(x.dtype)).reshape(b, l, n_heads, qdim)
+    q = q.transpose(0, 2, 1, 3)  # [B, H, L, qdim]
+    q_nope = q[..., : cfg.nope_head_dim]
+    q_rope = layers.apply_rope(
+        q[..., cfg.nope_head_dim:], positions, rope_base
+    )
+    return q_nope, q_rope
+
+
+def compress_kv(params, x, cfg: MLAConfig, positions, rope_base):
+    """x → (c_kv [B, L, R] normalized, k_rope [B, 1, L, rope_dim])."""
+    c_kv = x @ params["w_dkv"].astype(x.dtype)
+    c_kv = layers.rms_norm(c_kv, params["kv_norm"].astype(jnp.float32) + 1.0)
+    k_rope = (x @ params["w_kr"].astype(x.dtype))[:, None]  # 1 shared head
+    k_rope = layers.apply_rope(k_rope, positions, rope_base)
+    return c_kv, k_rope
+
+
+def apply(
+    params, x, cfg: MLAConfig, n_heads: int, positions, rope_base: float,
+    backend: str = "xla",
+):
+    """Train/prefill path.  Returns (out [B, L, D], (c_kv, k_rope))."""
+    b, l, _ = x.shape
+    q_nope, q_rope = _project_q(params, x, cfg, n_heads, positions, rope_base)
+    c_kv, k_rope = compress_kv(params, x, cfg, positions, rope_base)
+
+    k_nope = (c_kv @ params["w_uk"].astype(x.dtype)).reshape(
+        b, l, n_heads, cfg.nope_head_dim
+    ).transpose(0, 2, 1, 3)
+    v = (c_kv @ params["w_uv"].astype(x.dtype)).reshape(
+        b, l, n_heads, cfg.v_head_dim
+    ).transpose(0, 2, 1, 3)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, n_heads, l, cfg.rope_head_dim))],
+        axis=-1,
+    )
+    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+    o = attn.attention(q, k, v, scale=scale, causal=True, backend=backend)
+    o = o.transpose(0, 2, 1, 3).reshape(b, l, n_heads * cfg.v_head_dim)
+    return o @ params["w_o"].astype(x.dtype), (c_kv, k_rope)
+
+
+def decode_absorbed(
+    params, x, cfg: MLAConfig, n_heads: int,
+    c_kv_cache: jnp.ndarray,  # [B, S, R]
+    k_rope_cache: jnp.ndarray,  # [B, 1, S, rope_dim]
+    length,  # scalar/[B] current fill AFTER inserting this token
+    positions,  # [B, 1] position of the new token
+    rope_base: float,
+):
+    """Absorbed decode: one token, compressed-cache-resident attention.
+
+    Returns (out [B, 1, D], (c_kv_cache, k_rope_cache) updated).
+    """
+    b = x.shape[0]
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _project_q(params, x, cfg, n_heads, positions, rope_base)
+
+    # insert new compressed kv at position length-1 (scatter: in-place-
+    # aliasable under donation, touches one slot per sequence)
+    c_new, kr_new = compress_kv(params, x, cfg, positions, rope_base)
+    if isinstance(length, int):
+        length = jnp.full((b,), length, jnp.int32)
+    idx = length - 1  # [B]
+    s_max = c_kv_cache.shape[1]
+    b_idx = jnp.arange(b)
+    c_kv_cache = c_kv_cache.at[b_idx, idx, :].set(
+        c_new[:, 0, :].astype(c_kv_cache.dtype))
+    k_rope_cache = k_rope_cache.at[b_idx, :, idx, :].set(
+        kr_new[:, :, 0, :].astype(k_rope_cache.dtype))
+
+    # absorb W_uk into the query:  q_c[b,h,r] = q_nope[b,h,d] · W_uk[r, h*d]
+    w_uk = params["w_uk"].astype(x.dtype).reshape(r, n_heads, cfg.nope_head_dim)
+    q_c = jnp.einsum("bhqd,rhd->bhqr", q_nope, w_uk)  # [B, H, 1, R]
+
+    scale = (cfg.nope_head_dim + cfg.rope_head_dim) ** -0.5
+    s_c = jnp.einsum("bhqr,bsr->bhqs", q_c, c_kv_cache,
+                     preferred_element_type=jnp.float32)
+    s_r = jnp.einsum("bhqd,bosd->bhqs", q_rope, k_rope_cache,
+                     preferred_element_type=jnp.float32)
+    s = (s_c + s_r) * scale  # [B, H, 1, S]
+    mask = jnp.arange(s_max)[None, :] < length[:, None]
+    s = jnp.where(mask[:, None, None, :], s, attn.MASK_VALUE)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * mask[:, None, None, :]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    attn_c = jnp.einsum("bhqs,bsr->bhqr", p.astype(c_kv_cache.dtype),
+                        c_kv_cache, preferred_element_type=jnp.float32)
+    attn_c = attn_c / jnp.where(l == 0.0, 1.0, l)  # [B, H, 1, R]
+
+    # absorb W_uv into the output projection
+    w_uv = params["w_uv"].astype(x.dtype).reshape(r, n_heads, cfg.v_head_dim)
+    o = jnp.einsum("bhqr,rhd->bhqd", attn_c.astype(x.dtype), w_uv)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, n_heads * cfg.v_head_dim)
+    return o @ params["w_o"].astype(x.dtype), (c_kv_cache, k_rope_cache)

@@ -1,0 +1,283 @@
+"""Mixture-of-Experts layer: dropless sort + grouped-GEMM formulation.
+
+Routing: softmax router → top-k experts per token (optionally
+renormalized, qwen3 style).  Dispatch: flatten (token, slot) pairs, sort
+by expert id, run both expert matmuls as ``jax.lax.ragged_dot`` grouped
+GEMMs over the expert-sorted rows, unsort, combine with gate weights.
+
+Why this formulation (vs GShard capacity dispatch):
+- static shapes: the sorted buffer is exactly T·k rows — no capacity
+  one-hot [T, E, C] tensor (which at qwen3 scale would be ~300 MB/layer);
+- dropless: no token overflow, so loss curves match the dense-equivalent;
+- TPU-native: ragged_dot is the grouped-GEMM primitive MegaBlocks-style
+  kernels implement; XLA lowers it onto the MXU directly.
+
+Sharding: expert weights [E, D, F] are sharded on F over the model axis
+(TP inside each expert); tokens ride the data axis.  The second
+ragged_dot contracts F → SPMD inserts one reduce-scatter/all-reduce per
+layer, same as a dense FFN.  Shared experts (deepseek) are plain MLPs.
+
+Aux: load-balancing loss (Switch-style mean(prob)·mean(assignment)·E)
+returned alongside so the trainer can weight it.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+
+# ---------------------------------------------------------------------------
+# distribution context: when set, the dispatch/compute core runs inside a
+# shard_map that is MANUAL over the token (data) axes and AUTO over the
+# rest (model/TP).  This pins the expert sort + bincount + grouped GEMMs
+# to be shard-local — the SPMD partitioner otherwise has no way to know
+# the sort need not be global.  Set by launch/steps.py around tracing.
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+# Cost-exact surrogate (roofline only): XLA cost_analysis charges
+# lax.ragged_dot as if every row visited every expert (measured (G+1)×
+# the true 2·M·K·N — probe in EXPERIMENTS §Roofline).  When set, the
+# grouped GEMMs are replaced by one dense matmul against expert 0 —
+# *identical true FLOP count* (each row × one expert), counted
+# correctly.  Never set outside benchmarks/roofline.py; weight-READ
+# bytes are undercounted by (E−1)·D·F per call under the surrogate
+# (documented).
+COST_EXACT_SURROGATE = False
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, token_axes: tuple[str, ...]):
+    prev = getattr(_CTX, "value", None)
+    _CTX.value = (mesh, tuple(token_axes))
+    try:
+        yield
+    finally:
+        _CTX.value = prev
+
+
+def _get_ctx():
+    return getattr(_CTX, "value", None)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    norm_topk: bool = True
+    router_dtype: str = "float32"
+    aux_loss_weight: float = 0.001
+
+
+def init(rng, cfg: MoEConfig, d_model: int) -> dict:
+    ks = jax.random.split(rng, 5)
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    scale = (1.0 / d_model) ** 0.5
+    params = {
+        "router": layers.dense_init(ks[0], d_model, e),
+        "w_gate": jax.random.normal(ks[1], (e, d_model, f), jnp.float32) * scale,
+        "w_up": jax.random.normal(ks[2], (e, d_model, f), jnp.float32) * scale,
+        "w_down": jax.random.normal(ks[3], (e, f, d_model), jnp.float32)
+        * (1.0 / f) ** 0.5,
+    }
+    if cfg.n_shared:
+        params["shared"] = layers.mlp_init(
+            ks[4], d_model, f * cfg.n_shared
+        )
+    return params
+
+
+def _dispatch_compute(x, expert_idx, gate_vals, w_gate, w_up, w_down,
+                      cfg: MoEConfig):
+    """Shard-local dropless MoE core: sort → grouped GEMM → combine.
+
+    x [T, D], expert_idx [T, k], gate_vals [T, k] — T is the *local*
+    token count when running under shard_map.
+    """
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    flat_expert = expert_idx.reshape(-1)  # [T*k]
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_token = flat_token[order]
+    xs = jnp.take(x, sorted_token, axis=0)  # [T*k, D] gather
+
+    group_sizes = jnp.bincount(flat_expert, length=e).astype(jnp.int32)
+
+    dtype = x.dtype
+    if COST_EXACT_SURROGATE:
+        # flop-equivalent dense surrogate (see flag docstring)
+        gate = xs @ w_gate[0].astype(dtype)
+        up = xs @ w_up[0].astype(dtype)
+        h = jax.nn.silu(gate) * up
+        ys = h @ w_down[0].astype(dtype)
+    else:
+        gate = jax.lax.ragged_dot(xs, w_gate.astype(dtype), group_sizes)
+        up = jax.lax.ragged_dot(xs, w_up.astype(dtype), group_sizes)
+        h = jax.nn.silu(gate) * up  # [T*k, F]
+        ys = jax.lax.ragged_dot(h, w_down.astype(dtype), group_sizes)
+
+    gates_sorted = gate_vals.reshape(-1)[order].astype(ys.dtype)
+    return jax.ops.segment_sum(
+        ys * gates_sorted[:, None], sorted_token, num_segments=t
+    ).astype(dtype)
+
+
+def _ep_compute(x, expert_idx, gate_vals, w_gate, w_up, w_down,
+                cfg: MoEConfig, ep_axis: str, capacity: int):
+    """Expert-parallel core (runs manual over token axes AND ep_axis).
+
+    Each ep shard owns E/n_ep experts (weights fully resident — no FSDP
+    weight gathers, the measured collective bound of MoE training).
+    Tokens are replicated over ep_axis by construction (activations are
+    batch-sharded over 'data' only), so "dispatch" is a local masked
+    gather of the ≤capacity rows routed to resident experts; a psum over
+    ep_axis re-combines the top-k contributions.  Capacity-bounded:
+    overflow tokens drop (GShard semantics) — exact vs. dropless when
+    capacity is not exceeded (tested).
+
+    x [T, D]; w_gate/w_up/w_down are the LOCAL expert slices [E_loc,...].
+    """
+    t, d = x.shape
+    k = cfg.top_k
+    e_loc = w_gate.shape[0]
+    shard = jax.lax.axis_index(ep_axis)
+    lo = shard * e_loc
+
+    flat_expert = expert_idx.reshape(-1)  # [T*k]
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_gate = gate_vals.reshape(-1)
+    local_e = flat_expert - lo
+    mine = (local_e >= 0) & (local_e < e_loc)
+
+    # stable capacity-bounded selection of my (token, slot) pairs:
+    # sort by (not-mine, expert) so resident rows come first, grouped.
+    order = jnp.argsort(jnp.where(mine, local_e, e_loc + 1), stable=True)
+    sel = order[:capacity]
+    sel_valid = jnp.take(mine, sel)
+    sel_token = jnp.take(flat_token, sel)
+    sel_e = jnp.clip(jnp.take(local_e, sel), 0, e_loc - 1)
+    sel_gate = jnp.take(flat_gate, sel) * sel_valid.astype(flat_gate.dtype)
+
+    xs = jnp.take(x, sel_token, axis=0)  # [C, D]
+    group_sizes = jnp.bincount(
+        jnp.where(sel_valid, sel_e, e_loc), length=e_loc + 1
+    ).astype(jnp.int32)[:e_loc]
+    # rows are sorted by sel_e with invalid rows at the tail; pad group
+    # accounting: ragged_dot processes rows per group — tail rows fall
+    # outside all groups and yield zeros.
+    dtype = x.dtype
+    gate = jax.lax.ragged_dot(xs, w_gate.astype(dtype), group_sizes)
+    up = jax.lax.ragged_dot(xs, w_up.astype(dtype), group_sizes)
+    h = jax.nn.silu(gate) * up
+    ys = jax.lax.ragged_dot(h, w_down.astype(dtype), group_sizes)
+
+    out = jax.ops.segment_sum(
+        ys * sel_gate[:, None].astype(ys.dtype), sel_token, num_segments=t
+    )
+    return jax.lax.psum(out, ep_axis).astype(dtype)
+
+
+def apply_expert_parallel(params: dict, x: jnp.ndarray, cfg: MoEConfig,
+                          mesh, token_axes: tuple[str, ...],
+                          ep_axis: str = "model",
+                          capacity_factor: float = 2.0):
+    """Expert-parallel MoE layer (beyond-paper §Perf variant).
+
+    Routing is computed under plain SPMD (cheap); the expert compute
+    runs in a shard_map manual over token_axes + ep_axis with expert
+    weights sharded on dim 0 over ep_axis.
+    """
+    e, k = cfg.n_experts, cfg.top_k
+    router_logits = (
+        x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)
+    if cfg.norm_topk:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    n_ep = mesh.shape[ep_axis]
+    dpn = 1
+    for a in token_axes:
+        dpn *= mesh.shape[a]
+    t_local = x.shape[0] // max(dpn, 1)
+    capacity = max(int(t_local * k / n_ep * capacity_factor), 8)
+
+    core = jax.shard_map(
+        lambda xx, ei, gv, wg, wu, wd: _ep_compute(
+            xx, ei, gv, wg, wu, wd, cfg, ep_axis, capacity
+        ),
+        mesh=mesh,
+        in_specs=(P(token_axes), P(token_axes), P(token_axes),
+                  P(ep_axis), P(ep_axis), P(ep_axis)),
+        out_specs=P(token_axes),
+        axis_names=set(token_axes) | {ep_axis},
+        check_vma=False,
+    )
+    out = core(x, expert_idx, gate_vals,
+               params["w_gate"], params["w_up"], params["w_down"])
+
+    if cfg.n_shared:
+        out = out + layers.mlp_apply(params["shared"], x)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum(axis=1), axis=0
+    ) / k
+    aux = cfg.aux_loss_weight * e * jnp.sum(me * ce)
+    return out, aux
+
+
+def apply(params: dict, x: jnp.ndarray, cfg: MoEConfig):
+    """x: [T, D] (already flattened). Returns (out [T, D], aux_loss)."""
+    e, k = cfg.n_experts, cfg.top_k
+
+    router_logits = (
+        x.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    )  # [T, E]
+    probs = jax.nn.softmax(router_logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)  # [T, k]
+    if cfg.norm_topk:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    ctx = _get_ctx()
+    if ctx is None:
+        out = _dispatch_compute(
+            x, expert_idx, gate_vals,
+            params["w_gate"], params["w_up"], params["w_down"], cfg,
+        )
+    else:
+        mesh, token_axes = ctx
+        core = jax.shard_map(
+            lambda xx, ei, gv, wg, wu, wd: _dispatch_compute(
+                xx, ei, gv, wg, wu, wd, cfg
+            ),
+            mesh=mesh,
+            in_specs=(P(token_axes), P(token_axes), P(token_axes),
+                      P(), P(), P()),
+            out_specs=P(token_axes),
+            axis_names=set(token_axes),
+            check_vma=False,
+        )
+        out = core(x, expert_idx, gate_vals,
+                   params["w_gate"], params["w_up"], params["w_down"])
+
+    if cfg.n_shared:
+        out = out + layers.mlp_apply(params["shared"], x)
+
+    # Switch-style load balance loss.
+    me = jnp.mean(probs, axis=0)  # [E] mean router prob
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx, e, dtype=jnp.float32).sum(axis=1), axis=0
+    ) / k  # [E] fraction routed
+    aux = cfg.aux_loss_weight * e * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,60 @@
+"""AutoInt (arXiv:1810.11921): multi-head self-attention over field
+embeddings with residual connections, then a linear scoring head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.recsys import embedding
+from repro.models.recsys.base import RecsysConfig
+
+
+def init(rng, cfg: RecsysConfig) -> dict:
+    ks = jax.random.split(rng, 2 + cfg.n_attn_layers)
+    tables = embedding.init_tables(ks[0], cfg.vocab_sizes, cfg.embed_dim)
+    params = {"table": tables["table"], "layers": []}
+    d_in = cfg.embed_dim
+    for i in range(cfg.n_attn_layers):
+        lk = jax.random.split(ks[1 + i], 4)
+        params["layers"].append({
+            "w_q": layers.dense_init(lk[0], d_in, cfg.d_attn),
+            "w_k": layers.dense_init(lk[1], d_in, cfg.d_attn),
+            "w_v": layers.dense_init(lk[2], d_in, cfg.d_attn),
+            "w_res": layers.dense_init(lk[3], d_in, cfg.d_attn),
+        })
+        d_in = cfg.d_attn
+    params["head"] = layers.dense_init(ks[-1], cfg.n_sparse * d_in, 1)
+    return params
+
+
+def forward(params, dense, sparse_idx: jnp.ndarray,
+            cfg: RecsysConfig) -> jnp.ndarray:
+    dt = jnp.dtype(cfg.dtype)
+    x = embedding.lookup(params["table"].astype(dt), embedding.field_offsets(cfg.vocab_sizes),
+                         sparse_idx)  # [B, F, D]
+    b, f, _ = x.shape
+    h = cfg.n_attn_heads
+    dh = cfg.d_attn // h
+    for lp in params["layers"]:
+        q = (x @ lp["w_q"].astype(dt)).reshape(b, f, h, dh)
+        k = (x @ lp["w_k"].astype(dt)).reshape(b, f, h, dh)
+        v = (x @ lp["w_v"].astype(dt)).reshape(b, f, h, dh)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, f, cfg.d_attn)
+        x = jax.nn.relu(o + x @ lp["w_res"].astype(dt))
+    return (x.reshape(b, -1) @ params["head"].astype(dt))[:, 0]
+
+
+def retrieval_scores(params, dense_query, candidate_ids, cfg: RecsysConfig,
+                     field: int = 0) -> jnp.ndarray:
+    dt = jnp.dtype(cfg.dtype)
+    q_emb = embedding.lookup_rows(
+        params["table"].astype(dt),
+        dense_query.astype(jnp.int32)
+        + embedding.field_offsets(cfg.vocab_sizes)[None, :],
+    ).mean(axis=1)  # [1, D]
+    offs = embedding.field_offsets(cfg.vocab_sizes)[field]
+    return embedding.lookup_scores(params["table"].astype(dt),
+                                   candidate_ids + offs, q_emb[0])

@@ -1,0 +1,62 @@
+"""DeepFM (arXiv:1703.04247): shared embeddings feeding an FM branch and
+a deep MLP branch; logit = first_order + fm + deep."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.recsys import embedding
+from repro.models.recsys.base import RecsysConfig
+
+
+def init(rng, cfg: RecsysConfig) -> dict:
+    k_emb, k_w, k_deep = jax.random.split(rng, 3)
+    tables = embedding.init_tables(k_emb, cfg.vocab_sizes, cfg.embed_dim)
+    return {
+        "table": tables["table"],
+        "first_order": jax.random.normal(
+            k_w, (embedding.padded_rows(cfg.vocab_sizes),), jnp.float32
+        ) * 0.01,
+        "deep": layers.dense_mlp_init(
+            k_deep, (cfg.n_sparse * cfg.embed_dim,) + cfg.mlp_dims + (1,)
+        ),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def forward(params, dense: jnp.ndarray | None, sparse_idx: jnp.ndarray,
+            cfg: RecsysConfig) -> jnp.ndarray:
+    """sparse_idx [B, F] int → logits [B] (dense unused: 39-field form)."""
+    dt = jnp.dtype(cfg.dtype)
+    flat = sparse_idx.astype(jnp.int32) + embedding.field_offsets(cfg.vocab_sizes)[None, :]
+    emb = embedding.lookup_rows(params["table"].astype(dt), flat)  # [B, F, D]
+
+    first = embedding.lookup_rows(
+        params["first_order"].astype(dt)[:, None], flat
+    )[..., 0].sum(-1)
+
+    # FM second order: ½ Σ_d [(Σ_f v)² − Σ_f v²]
+    sum_v = emb.sum(axis=1)
+    sum_sq = jnp.square(emb).sum(axis=1)
+    fm = 0.5 * (jnp.square(sum_v) - sum_sq).sum(axis=-1)
+
+    deep = layers.dense_mlp_apply(
+        params["deep"], emb.reshape(emb.shape[0], -1), len(cfg.mlp_dims) + 1
+    )[:, 0]
+    return first + fm + deep + params["bias"].astype(dt)
+
+
+def retrieval_scores(params, dense_query, candidate_ids, cfg: RecsysConfig,
+                     field: int = 0) -> jnp.ndarray:
+    """Score candidates by FM affinity with a fixed query field-context:
+    dot of candidate embedding against the query's summed field vector."""
+    dt = jnp.dtype(cfg.dtype)
+    q_emb = embedding.lookup_rows(
+        params["table"].astype(dt),
+        dense_query.astype(jnp.int32)
+        + embedding.field_offsets(cfg.vocab_sizes)[None, :],
+    ).sum(axis=1)  # [1, D]
+    offs = embedding.field_offsets(cfg.vocab_sizes)[field]
+    return embedding.lookup_scores(params["table"].astype(dt),
+                                   candidate_ids + offs, q_emb[0])

@@ -1,0 +1,59 @@
+"""DLRM (arXiv:1906.00091): bottom MLP ∥ embedding lookups → dot
+interaction → top MLP.  Covers dlrm-rm2 and dlrm-mlperf via config."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.recsys import embedding
+from repro.models.recsys.base import RecsysConfig
+
+
+def init(rng, cfg: RecsysConfig) -> dict:
+    k_emb, k_bot, k_top = jax.random.split(rng, 3)
+    tables = embedding.init_tables(k_emb, cfg.vocab_sizes, cfg.embed_dim)
+    n_inter = cfg.n_sparse + 1  # sparse fields + bottom output
+    d_top_in = n_inter * (n_inter - 1) // 2 + cfg.bot_mlp[-1]
+    return {
+        "table": tables["table"],
+        "bot": layers.dense_mlp_init(k_bot, (cfg.n_dense,) + cfg.bot_mlp),
+        "top": layers.dense_mlp_init(k_top, (d_top_in,) + cfg.top_mlp),
+    }
+
+
+def _interact_dot(feats: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise dot interaction: feats [B, F, D] → [B, F(F-1)/2]."""
+    b, f, _ = feats.shape
+    z = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(f, k=1)
+    return z[:, iu, ju]
+
+
+def forward(params, dense: jnp.ndarray, sparse_idx: jnp.ndarray,
+            cfg: RecsysConfig) -> jnp.ndarray:
+    """dense [B, n_dense] f32, sparse_idx [B, F] int → logits [B]."""
+    dt = jnp.dtype(cfg.dtype)
+    bot = layers.dense_mlp_apply(params["bot"], dense.astype(dt),
+                                 len(cfg.bot_mlp), final_activation=True)
+    emb = embedding.lookup(params["table"].astype(dt), embedding.field_offsets(cfg.vocab_sizes),
+                           sparse_idx)  # [B, F, D]
+    feats = jnp.concatenate([bot[:, None, :], emb], axis=1)
+    inter = _interact_dot(feats)
+    top_in = jnp.concatenate([inter, bot], axis=-1)
+    out = layers.dense_mlp_apply(params["top"], top_in, len(cfg.top_mlp))
+    return out[:, 0]
+
+
+def retrieval_scores(params, dense_query: jnp.ndarray,
+                     candidate_ids: jnp.ndarray, cfg: RecsysConfig,
+                     field: int = 0) -> jnp.ndarray:
+    """retrieval_cand shape: one query against n candidates — the query
+    tower (bottom MLP) dotted with candidate embedding rows.  Batched
+    MXU dot, not a loop; merges with the paper's top-k machinery."""
+    dt = jnp.dtype(cfg.dtype)
+    q = layers.dense_mlp_apply(params["bot"], dense_query.astype(dt),
+                               len(cfg.bot_mlp), final_activation=True)  # [1, D]
+    offs = embedding.field_offsets(cfg.vocab_sizes)[field]
+    return embedding.lookup_scores(params["table"].astype(dt),
+                                   candidate_ids + offs, q[0])

@@ -1,0 +1,149 @@
+"""Sparse embedding substrate for the recsys family.
+
+JAX has no native EmbeddingBag / CSR tables — this module IS that
+substrate (task rules; kernel_taxonomy §RecSys):
+
+- all categorical fields share one fused row table [Σ vocab_f, dim] with
+  per-field offsets (the FBGEMM table-batched layout), so one gather
+  serves every field;
+- multi-hot fields reduce via the embedding_bag kernel path
+  (jnp.take + segment_sum on CPU/dry-run, kernels/embedding_bag on TPU);
+- distribution: rows are range-sharded over the model axis.  Under the
+  ``sharding_ctx`` the lookup runs a shard_map that is MANUAL over the
+  row axis and AUTO elsewhere: each shard gathers the rows it owns
+  (out-of-range → zero) and a psum over the row axis assembles the
+  result.  Collective payload = the looked-up rows, never the table.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+TABLE_ROW_MULTIPLE = 512  # rows padded so any mesh axis divides evenly
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, row_axis: str = "model"):
+    prev = getattr(_CTX, "value", None)
+    _CTX.value = (mesh, row_axis)
+    try:
+        yield
+    finally:
+        _CTX.value = prev
+
+
+def _get_ctx():
+    return getattr(_CTX, "value", None)
+
+
+def field_offsets(vocab_sizes: tuple[int, ...]) -> jnp.ndarray:
+    """Static per-field row offsets into the fused table (trace-time
+    constant — never a trainable leaf, so grads stay float-only)."""
+    offsets = np.zeros(len(vocab_sizes), np.int64)
+    np.cumsum(vocab_sizes[:-1], out=offsets[1:])
+    return jnp.asarray(offsets, jnp.int32)
+
+
+def padded_rows(vocab_sizes: tuple[int, ...]) -> int:
+    total = int(sum(vocab_sizes))
+    return total + (-total) % TABLE_ROW_MULTIPLE
+
+
+def init_tables(rng, vocab_sizes: tuple[int, ...], dim: int) -> dict:
+    return {
+        "table": jax.random.normal(
+            rng, (padded_rows(vocab_sizes), dim), jnp.float32
+        ) * (1.0 / dim) ** 0.5,
+    }
+
+
+def lookup_rows(table: jnp.ndarray, flat_idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather rows by already-offset indices; ctx-aware.
+
+    table [V, E]; flat_idx int32 [...]; returns [..., E].
+    """
+    ctx = _get_ctx()
+    if ctx is None:
+        return jnp.take(table, flat_idx, axis=0)
+    mesh, axis = ctx
+
+    def local(tshard, idx):
+        v_local = tshard.shape[0]
+        lo = jax.lax.axis_index(axis) * v_local
+        li = idx - lo
+        valid = (li >= 0) & (li < v_local)
+        rows = jnp.take(tshard, jnp.clip(li, 0, v_local - 1), axis=0)
+        rows = rows * valid[..., None].astype(rows.dtype)
+        return jax.lax.psum(rows, axis)
+
+    # check_vma=True: the psum result is provably invariant over the row
+    # axis, and the varying-manual-axes typing is what lets jax transpose
+    # this shard_map for gradients in eager mode.
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P()),
+        out_specs=P(),
+        axis_names={axis},
+    )(table, flat_idx.astype(jnp.int32))
+
+
+def lookup(table: jnp.ndarray, offsets: jnp.ndarray,
+           sparse_idx: jnp.ndarray) -> jnp.ndarray:
+    """One-hot-per-field lookup: sparse_idx [B, F] → [B, F, dim]."""
+    flat = sparse_idx.astype(jnp.int32) + offsets[None, :]
+    return lookup_rows(table, flat)
+
+
+def lookup_scores(table: jnp.ndarray, flat_idx: jnp.ndarray,
+                  q_vec: jnp.ndarray) -> jnp.ndarray:
+    """Fused lookup-and-score: out[i] = table[idx[i]] · q — WITHOUT
+    materializing the gathered rows across shards.
+
+    This is the paper's retrieval-plane insight applied to candidate
+    scoring (RAGdb: score at the shard, move scores): each shard dots
+    the candidate rows it owns against the query locally and the psum
+    carries [n_cand] scalars instead of [n_cand, dim] rows — dim× less
+    collective payload and no replicated row matrix.
+    """
+    ctx = _get_ctx()
+    if ctx is None:
+        return jnp.take(table, flat_idx, axis=0) @ q_vec
+    mesh, axis = ctx
+
+    def local(tshard, idx, q):
+        v_local = tshard.shape[0]
+        lo = jax.lax.axis_index(axis) * v_local
+        li = idx - lo
+        valid = (li >= 0) & (li < v_local)
+        rows = jnp.take(tshard, jnp.clip(li, 0, v_local - 1), axis=0)
+        s = rows @ q  # [n] — scored before any communication
+        return jax.lax.psum(s * valid.astype(s.dtype), axis)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(), P()),
+        out_specs=P(),
+        axis_names={axis},
+    )(table, flat_idx.astype(jnp.int32), q_vec)
+
+
+def lookup_bags(table, offsets, indices, field_ids, bag_ids, n_bags,
+                weights=None, use_kernel: bool = False):
+    """Multi-hot lookup: ragged (bag, field, index) triples reduced per
+    bag — the EmbeddingBag path."""
+    flat = indices.astype(jnp.int32) + offsets[field_ids]
+    if use_kernel:
+        from repro.kernels.embedding_bag import ops as _ops
+
+        return _ops.embedding_bag(table, flat, bag_ids, n_bags, weights)
+    rows = lookup_rows(table, flat)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    return jax.ops.segment_sum(rows, bag_ids, num_segments=n_bags)

@@ -1,0 +1,664 @@
+"""Decoder-only LM covering the five assigned architectures.
+
+One config drives: GQA vs MLA attention, dense vs MoE FFN, uniform vs
+local:global layer patterns (gemma2/3), qk-norm, logit softcaps, per-kind
+RoPE bases, tied embeddings.
+
+HLO-size discipline (the dry-run compiles 27 B–30 B models on one host):
+layers are scanned, not unrolled.  The scan unit is the architecture's
+repeating *pattern* (gemma3: 5 local + 1 global = 6 layers/unit; uniform
+archs: 1 layer/unit); pattern remainders and deepseek's leading dense
+layer(s) are unrolled as head/tail layers.  Remat (jax.checkpoint) wraps
+the scan body, so backward memory is O(units · layer-boundary), not
+O(layers · activations).
+
+KV caches: global layers cache the full horizon; sliding-window layers
+cache a *ring buffer of exactly window slots* — at long_500k this is the
+difference between a 24 GB and a ~0.1 GB cache for gemma3's 51 local
+layers.  Ring indexing: position p lives in slot p mod W; slot validity
+and masking are recomputed from the current length, so no positions
+tensor is stored.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import attention as attn
+from repro.models import layers, mla as mla_mod, moe as moe_mod
+from repro.models.moe import MoEConfig
+from repro.models.mla import MLAConfig
+
+# ---------------------------------------------------------------------------
+# activation-sharding context.  The embedding gather (vocab-sharded table
+# × batch-sharded tokens) gives the SPMD partitioner a reason to abandon
+# batch sharding for the whole downstream graph (observed: activations
+# replicated over 'data', logits at 4.3 GB/device).  An explicit
+# with_sharding_constraint on the embedding output (and the pre-unembed
+# hidden state) pins activations to batch-over-data, which propagation
+# then carries through every layer.  Set by launch/steps.py.
+# ---------------------------------------------------------------------------
+
+# Cost-exact mode (see attention.COST_EXACT_UNROLL): unroll the layer
+# scans so XLA cost_analysis counts every trip.  Set only by the
+# roofline variant builder, never for production lowering.
+COST_EXACT_UNROLL = False
+
+
+def _scan_unroll() -> bool | int:
+    return True if COST_EXACT_UNROLL else 1
+
+
+_ACT_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def act_sharding_ctx(mesh, dp_axes: tuple[str, ...]):
+    prev = getattr(_ACT_CTX, "value", None)
+    _ACT_CTX.value = (mesh, tuple(dp_axes))
+    try:
+        yield
+    finally:
+        _ACT_CTX.value = prev
+
+
+def _constrain_batch(x: jnp.ndarray) -> jnp.ndarray:
+    """Pin dim 0 (batch) to the data axes; no-op without context or when
+    the batch does not divide the axis."""
+    ctx = getattr(_ACT_CTX, "value", None)
+    if ctx is None:
+        return x
+    mesh, dp = ctx
+    dpn = 1
+    for a in dp:
+        dpn *= mesh.shape[a]
+    if dpn <= 1 or x.shape[0] % dpn != 0 or x.shape[0] < dpn:
+        return x
+    spec = P(dp, *((None,) * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: tuple[str, ...] = ("global",)
+    window: int | None = None
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    qk_norm: bool = False
+    post_norms: bool = False
+    rope_base: float = 10000.0
+    rope_base_local: float | None = None
+    activation: str = "silu"
+    embed_scale: bool = False
+    tie_embeddings: bool = True
+    query_scale: float | None = None
+    moe: MoEConfig | None = None
+    n_dense_head_layers: int = 0  # leading dense layers when moe != None
+    dense_d_ff: int | None = None
+    mla: MLAConfig | None = None
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # KV-head replication factor for tensor parallelism: when
+    # n_kv_heads < TP degree, caches/attention replicate each KV head
+    # kv_repeat× so the head axis shards cleanly (llama2-70B-style KV
+    # replication).  Exact — pure layout change.  Set by launch/steps.py
+    # from the mesh; 1 = paper-faithful baseline.
+    kv_repeat: int = 1
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_scan_layers(self) -> int:
+        return self.n_layers - self.n_dense_head_layers
+
+    @property
+    def n_units(self) -> int:
+        return self.n_scan_layers // len(self.pattern)
+
+    @property
+    def tail_kinds(self) -> tuple[str, ...]:
+        r = self.n_scan_layers % len(self.pattern)
+        return self.pattern[:r]
+
+    def kind_of(self, pos_in_pattern: int) -> str:
+        return self.pattern[pos_in_pattern]
+
+    @property
+    def n_kv_eff(self) -> int:
+        return self.n_kv_heads * self.kv_repeat
+
+    @property
+    def attn_scale(self) -> float:
+        if self.query_scale is not None:
+            return self.query_scale
+        if self.mla is not None:
+            return (self.mla.nope_head_dim + self.mla.rope_head_dim) ** -0.5
+        return self.head_dim ** -0.5
+
+    def param_count(self) -> int:
+        """Total parameters (for 6·N·D roofline accounting)."""
+        d, hd = self.d_model, self.head_dim
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        n = emb + d  # final norm
+        def attn_params():
+            if self.mla is not None:
+                m = self.mla
+                qdim = m.nope_head_dim + m.rope_head_dim
+                return (d * self.n_heads * qdim + d * m.kv_lora_rank
+                        + d * m.rope_head_dim + m.kv_lora_rank
+                        + m.kv_lora_rank * self.n_heads * m.nope_head_dim
+                        + m.kv_lora_rank * self.n_heads * m.v_head_dim
+                        + self.n_heads * m.v_head_dim * d)
+            p = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+                + self.n_heads * hd * d
+            if self.qk_norm:
+                p += 2 * hd
+            return p
+        def mlp_params(moe_layer: bool):
+            if moe_layer and self.moe is not None:
+                m = self.moe
+                p = d * m.n_experts + 3 * m.n_experts * d * m.d_ff_expert
+                if m.n_shared:
+                    p += 3 * d * m.d_ff_expert * m.n_shared
+                return p
+            ff = self.dense_d_ff or self.d_ff
+            return 3 * d * ff
+        norms = d * (4 if self.post_norms else 2)
+        for i in range(self.n_layers):
+            moe_layer = self.moe is not None and i >= self.n_dense_head_layers
+            n += attn_params() + mlp_params(moe_layer) + norms
+        return n
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full_expert = 3 * m.n_experts * self.d_model * m.d_ff_expert
+        active_expert = 3 * m.top_k * self.d_model * m.d_ff_expert
+        n_moe_layers = self.n_layers - self.n_dense_head_layers
+        return self.param_count() - n_moe_layers * (full_expert - active_expert)
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_gqa(rng, cfg: LMConfig) -> dict:
+    ks = jax.random.split(rng, 4)
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "w_q": layers.dense_init(ks[0], d, h * hd),
+        "w_k": layers.dense_init(ks[1], d, hkv * hd),
+        "w_v": layers.dense_init(ks[2], d, hkv * hd),
+        "w_o": layers.dense_init(ks[3], h * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _init_layer(rng, cfg: LMConfig, moe_layer: bool) -> dict:
+    k_attn, k_mlp = jax.random.split(rng)
+    d = cfg.d_model
+    p = {"ln1": jnp.zeros((d,), jnp.float32), "ln2": jnp.zeros((d,), jnp.float32)}
+    if cfg.post_norms:
+        p["post_ln1"] = jnp.zeros((d,), jnp.float32)
+        p["post_ln2"] = jnp.zeros((d,), jnp.float32)
+    if cfg.mla is not None:
+        p["attn"] = mla_mod.init(k_attn, cfg.mla, d, cfg.n_heads)
+    else:
+        p["attn"] = _init_gqa(k_attn, cfg)
+    if moe_layer:
+        p["mlp"] = moe_mod.init(k_mlp, cfg.moe, d)
+    else:
+        p["mlp"] = layers.mlp_init(k_mlp, d, cfg.dense_d_ff or cfg.d_ff)
+    return p
+
+
+def init(rng, cfg: LMConfig) -> dict:
+    k_embed, k_head, k_scan, k_tail, k_lmh = jax.random.split(rng, 5)
+    params = {"embed": layers.embed_init(k_embed, cfg.vocab, cfg.d_model),
+              "final_norm": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(k_lmh, cfg.d_model, cfg.vocab)
+    params["head"] = [
+        _init_layer(k, cfg, moe_layer=False)
+        for k in jax.random.split(k_head, max(cfg.n_dense_head_layers, 1))
+    ][: cfg.n_dense_head_layers]
+
+    def init_unit(rng):
+        ks = jax.random.split(rng, len(cfg.pattern))
+        return {
+            f"l{j}": _init_layer(ks[j], cfg, moe_layer=cfg.moe is not None)
+            for j in range(len(cfg.pattern))
+        }
+
+    if cfg.n_units > 0:
+        params["scan"] = jax.vmap(init_unit)(
+            jax.random.split(k_scan, cfg.n_units)
+        )
+    params["tail"] = [
+        _init_layer(k, cfg, moe_layer=cfg.moe is not None)
+        for k in jax.random.split(k_tail, max(len(cfg.tail_kinds), 1))
+    ][: len(cfg.tail_kinds)]
+    return params
+
+
+# --------------------------------------------------------------------------
+# layer application
+# --------------------------------------------------------------------------
+
+def _norm(x, w, cfg):
+    return layers.rms_norm(x, w, unit_offset=True)
+
+
+def _gqa_project(lp, x, cfg: LMConfig, positions, base):
+    b, l, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ lp["w_q"].astype(dt)).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ lp["w_k"].astype(dt)).reshape(b, l, hkv, hd).transpose(0, 2, 1, 3)
+    v = (x @ lp["w_v"].astype(dt)).reshape(b, l, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, lp["q_norm"], unit_offset=True)
+        k = layers.rms_norm(k, lp["k_norm"], unit_offset=True)
+    q = layers.apply_rope(q, positions, base)
+    k = layers.apply_rope(k, positions, base)
+    if cfg.kv_repeat > 1:
+        k = jnp.repeat(k, cfg.kv_repeat, axis=1)
+        v = jnp.repeat(v, cfg.kv_repeat, axis=1)
+    return q, k, v
+
+
+def _rope_base_for(cfg: LMConfig, kind: str) -> float:
+    if kind == "local" and cfg.rope_base_local is not None:
+        return cfg.rope_base_local
+    return cfg.rope_base
+
+
+def _attn_sublayer_train(lp, x, cfg: LMConfig, kind: str, positions, backend):
+    window = cfg.window if kind == "local" else None
+    if cfg.mla is not None:
+        o, _ = mla_mod.apply(
+            lp["attn"], x, cfg.mla, cfg.n_heads, positions,
+            _rope_base_for(cfg, kind), backend=backend,
+        )
+        return o
+    q, k, v = _gqa_project(lp["attn"], x, cfg, positions,
+                           _rope_base_for(cfg, kind))
+    o = attn.attention(
+        q, k, v, scale=cfg.attn_scale, causal=True, window=window,
+        softcap=cfg.attn_softcap, backend=backend,
+    )
+    b, h, l, hd = o.shape
+    o = o.transpose(0, 2, 1, 3).reshape(b, l, h * hd)
+    return o @ lp["attn"]["w_o"].astype(x.dtype)
+
+
+def _layer_train(lp, x, cfg: LMConfig, kind: str, positions, backend):
+    a = _attn_sublayer_train(lp, _norm(x, lp["ln1"], cfg), cfg, kind,
+                             positions, backend)
+    if cfg.post_norms:
+        a = _norm(a, lp["post_ln1"], cfg)
+    x = x + a
+    h_in = _norm(x, lp["ln2"], cfg)
+    if cfg.moe is not None and "router" in lp["mlp"]:
+        b, l, d = h_in.shape
+        m, aux = moe_mod.apply(lp["mlp"], h_in.reshape(b * l, d), cfg.moe)
+        m = m.reshape(b, l, d)
+    else:
+        m = layers.mlp_apply(lp["mlp"], h_in, activation=cfg.activation)
+        aux = jnp.zeros((), jnp.float32)
+    if cfg.post_norms:
+        m = _norm(m, lp["post_ln2"], cfg)
+    return x + m, aux
+
+
+# --------------------------------------------------------------------------
+# training / scoring forward
+# --------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: LMConfig):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.compute_dtype)
+    return _constrain_batch(x)
+
+
+def _unembed(params, x, cfg: LMConfig):
+    x = _constrain_batch(x)
+    x = layers.rms_norm(x, params["final_norm"], unit_offset=True)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    if cfg.final_softcap is not None:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def forward(params, tokens, cfg: LMConfig, backend: str = "xla"):
+    """Full-sequence forward.  tokens [B, L] → logits [B, L, V] f32,
+    plus summed MoE aux loss."""
+    b, l = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(l), (b, l))
+    x = _embed(params, tokens, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for i, lp in enumerate(params["head"]):
+        x, aux = _layer_train(lp, x, cfg, cfg.pattern[0], positions, backend)
+        aux_total += aux
+
+    if cfg.n_units > 0:
+        def unit_body(x, unit_params):
+            aux_sum = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(cfg.pattern):
+                x, aux = _layer_train(
+                    unit_params[f"l{j}"], x, cfg, kind, positions, backend
+                )
+                aux_sum += aux
+            return x, aux_sum
+
+        body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+        x, auxs = jax.lax.scan(body, x, params["scan"], unroll=_scan_unroll())
+        aux_total += auxs.sum()
+
+    for j, kind in enumerate(cfg.tail_kinds):
+        x, aux = _layer_train(params["tail"][j], x, cfg, kind, positions,
+                              backend)
+        aux_total += aux
+
+    return _unembed(params, x, cfg), aux_total
+
+
+def lm_loss(params, tokens, targets, cfg: LMConfig, backend: str = "xla"):
+    """Next-token cross entropy (mean over tokens) + MoE aux.
+
+    The gold-logit pick uses a broadcast-compare mask instead of
+    take_along_axis: a gather along the vocab dim would force the SPMD
+    partitioner to all-gather the (huge, vocab-sharded) logits, while
+    the masked sum partitions shard-locally.
+    """
+    logits, aux = forward(params, tokens, cfg, backend)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+    gold = jnp.sum(
+        jnp.where(vocab_iota == targets[..., None], logits, 0.0), axis=-1
+    )
+    return (logz - gold).mean() + aux
+
+
+# --------------------------------------------------------------------------
+# KV-cache serving: prefill + decode
+# --------------------------------------------------------------------------
+
+def _cache_len(cfg: LMConfig, kind: str, max_len: int) -> int:
+    if kind == "local" and cfg.window is not None:
+        return min(cfg.window, max_len)
+    return max_len
+
+
+def _ring_slot_positions(n_slots: int, length) -> jnp.ndarray:
+    """Absolute position held by each ring slot given current fill
+    ``length`` ([B] or scalar): largest p < length with p ≡ slot (mod W).
+    Slots never written have negative p."""
+    s = jnp.arange(n_slots)
+    length = jnp.asarray(length)
+    lm1 = length[..., None] - 1  # [B?,1]
+    return s + n_slots * jnp.floor_divide(lm1 - s, n_slots)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    """Cache pytree matching the params tree structure."""
+    dtype = dtype or cfg.compute_dtype
+
+    def one(kind: str):
+        s = _cache_len(cfg, kind, max_len)
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {
+                "c_kv": jnp.zeros((batch, s, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, 1, s, m.rope_head_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((batch, cfg.n_kv_eff, s, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, cfg.n_kv_eff, s, cfg.head_dim), dtype),
+        }
+
+    caches = {
+        "head": [one(cfg.pattern[0]) for _ in range(cfg.n_dense_head_layers)],
+        "tail": [one(k) for k in cfg.tail_kinds],
+    }
+    if cfg.n_units > 0:
+        unit = {f"l{j}": one(k) for j, k in enumerate(cfg.pattern)}
+        caches["scan"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_units,) + a.shape), unit
+        )
+    return caches
+
+
+def _fill_cache_from_seq(k_seq, n_slots: int, length: int):
+    """Write the last n_slots entries of k_seq [B, H, L, D] into ring
+    order (slot = p mod n_slots)."""
+    l = k_seq.shape[2]
+    p = _ring_slot_positions(n_slots, length)  # [n_slots]
+    p = jnp.clip(p, 0, l - 1).astype(jnp.int32)
+    return jnp.take(k_seq, p, axis=2)
+
+
+def _layer_prefill(lp, x, cfg: LMConfig, kind: str, positions, max_len,
+                   backend):
+    """Like _layer_train but also returns this layer's filled cache."""
+    b, l, _ = x.shape
+    n_slots = _cache_len(cfg, kind, max_len)
+    xin = _norm(x, lp["ln1"], cfg)
+    base = _rope_base_for(cfg, kind)
+    window = cfg.window if kind == "local" else None
+    if cfg.mla is not None:
+        o, (c_kv, k_rope) = mla_mod.apply(
+            lp["attn"], xin, cfg.mla, cfg.n_heads, positions, base, backend=backend
+        )
+        pad = n_slots - l
+        if pad >= 0:
+            cache = {
+                "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                "k_rope": jnp.pad(k_rope, ((0, 0), (0, 0), (0, pad), (0, 0))),
+            }
+        else:
+            cache = {
+                "c_kv": _fill_cache_from_seq(
+                    c_kv[:, None], n_slots, l
+                )[:, 0],
+                "k_rope": _fill_cache_from_seq(k_rope, n_slots, l),
+            }
+        a = o
+    else:
+        q, k, v = _gqa_project(lp["attn"], xin, cfg, positions, base)
+        o = attn.attention(
+            q, k, v, scale=cfg.attn_scale, causal=True, window=window,
+            softcap=cfg.attn_softcap, backend=backend,
+        )
+        o = o.transpose(0, 2, 1, 3).reshape(b, l, -1)
+        a = o @ lp["attn"]["w_o"].astype(x.dtype)
+        if n_slots >= l:
+            pad = n_slots - l
+            cache = {
+                "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))),
+            }
+        else:
+            cache = {
+                "k": _fill_cache_from_seq(k, n_slots, l),
+                "v": _fill_cache_from_seq(v, n_slots, l),
+            }
+    if cfg.post_norms:
+        a = _norm(a, lp["post_ln1"], cfg)
+    x = x + a
+    h_in = _norm(x, lp["ln2"], cfg)
+    if cfg.moe is not None and "router" in lp["mlp"]:
+        m, _ = moe_mod.apply(lp["mlp"], h_in.reshape(b * l, -1), cfg.moe)
+        m = m.reshape(b, l, -1)
+    else:
+        m = layers.mlp_apply(lp["mlp"], h_in, activation=cfg.activation)
+    if cfg.post_norms:
+        m = _norm(m, lp["post_ln2"], cfg)
+    return x + m, cache
+
+
+def prefill(params, tokens, cfg: LMConfig, max_len: int,
+            backend: str = "xla"):
+    """Process the prompt; returns (logits [B, L, V], caches, lengths)."""
+    b, l = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(l), (b, l))
+    x = _embed(params, tokens, cfg)
+    caches = {"head": [], "tail": []}
+
+    for lp in params["head"]:
+        x, c = _layer_prefill(lp, x, cfg, cfg.pattern[0], positions, max_len,
+                              backend)
+        caches["head"].append(c)
+
+    if cfg.n_units > 0:
+        def unit_body(x, unit_params):
+            cs = {}
+            for j, kind in enumerate(cfg.pattern):
+                x, c = _layer_prefill(
+                    unit_params[f"l{j}"], x, cfg, kind, positions, max_len,
+                    backend,
+                )
+                cs[f"l{j}"] = c
+            return x, cs
+
+        body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+        x, scan_caches = jax.lax.scan(body, x, params["scan"],
+                                      unroll=_scan_unroll())
+        caches["scan"] = scan_caches
+
+    for j, kind in enumerate(cfg.tail_kinds):
+        x, c = _layer_prefill(params["tail"][j], x, cfg, kind, positions,
+                              max_len, backend)
+        caches["tail"].append(c)
+
+    logits = _unembed(params, x, cfg)
+    lengths = jnp.full((b,), l, jnp.int32)
+    return logits, caches, lengths
+
+
+def _layer_decode(lp, x, cache, cfg: LMConfig, kind: str, lengths, backend):
+    """One decoded token through one layer; returns (x, new_cache)."""
+    b = x.shape[0]
+    xin = _norm(x, lp["ln1"], cfg)
+    base = _rope_base_for(cfg, kind)
+    positions = (lengths - 1)[:, None]  # [B, 1]
+    if cfg.mla is not None:
+        a, (c_kv, k_rope) = mla_mod.decode_absorbed(
+            lp["attn"], xin, cfg.mla, cfg.n_heads, cache["c_kv"], cache["k_rope"],
+            lengths, positions, base,
+        )
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        q, k_new, v_new = _gqa_project(lp["attn"], xin, cfg, positions, base)
+        n_slots = cache["k"].shape[2]
+        slot = (lengths - 1) % n_slots  # [B]
+        # scatter update (one slot per sequence): in-place-aliasable
+        # under buffer donation, touching O(B·H·hd) bytes per step —
+        # a one-hot multiply would read+rewrite the entire cache
+        b_idx = jnp.arange(b)
+        k_cache = cache["k"].at[b_idx, :, slot, :].set(
+            k_new[:, :, 0, :].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[b_idx, :, slot, :].set(
+            v_new[:, :, 0, :].astype(cache["v"].dtype))
+        if kind == "local" and cfg.window is not None \
+                and n_slots == min(cfg.window, n_slots):
+            # ring cache: validity = slot holds a real position
+            slot_pos = _ring_slot_positions(n_slots, lengths)  # [B, S]
+            mask = (slot_pos >= 0) & (slot_pos < lengths[:, None])
+            o = _masked_decode(q, k_cache, v_cache, mask, cfg)
+        else:
+            o = attn.decode_attention(
+                q, k_cache, v_cache, lengths, scale=cfg.attn_scale,
+                window=cfg.window if kind == "local" else None,
+                softcap=cfg.attn_softcap,
+            )
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+        a = o @ lp["attn"]["w_o"].astype(x.dtype)
+        new_cache = {"k": k_cache, "v": v_cache}
+    if cfg.post_norms:
+        a = _norm(a, lp["post_ln1"], cfg)
+    x = x + a
+    h_in = _norm(x, lp["ln2"], cfg)
+    if cfg.moe is not None and "router" in lp["mlp"]:
+        m, _ = moe_mod.apply(lp["mlp"], h_in.reshape(b, -1), cfg.moe)
+        m = m.reshape(b, 1, -1)
+    else:
+        m = layers.mlp_apply(lp["mlp"], h_in, activation=cfg.activation)
+    if cfg.post_norms:
+        m = _norm(m, lp["post_ln2"], cfg)
+    return x + m, new_cache
+
+
+def _masked_decode(q, k_cache, v_cache, mask, cfg: LMConfig):
+    """Decode attention with an explicit slot-validity mask [B, S]."""
+    return attn.masked_decode_attention(
+        q, k_cache, v_cache, mask, scale=cfg.attn_scale,
+        softcap=cfg.attn_softcap,
+    )
+
+
+def decode_step(params, caches, tokens, lengths, cfg: LMConfig,
+                backend: str = "xla"):
+    """One decode step.  tokens [B, 1] (the token just sampled), lengths
+    [B] = cache fill INCLUDING this token.  Returns (logits [B, 1, V],
+    new caches)."""
+    x = _embed(params, tokens, cfg)
+
+    new_head = []
+    for i, lp in enumerate(params["head"]):
+        x, c = _layer_decode(lp, x, caches["head"][i], cfg, cfg.pattern[0],
+                             lengths, backend)
+        new_head.append(c)
+
+    new_scan = None
+    if cfg.n_units > 0:
+        def unit_body(x, xs):
+            unit_params, unit_caches = xs
+            ncs = {}
+            for j, kind in enumerate(cfg.pattern):
+                x, c = _layer_decode(
+                    unit_params[f"l{j}"], x, unit_caches[f"l{j}"], cfg, kind,
+                    lengths, backend,
+                )
+                ncs[f"l{j}"] = c
+            return x, ncs
+
+        x, new_scan = jax.lax.scan(
+            unit_body, x, (params["scan"], caches["scan"]),
+            unroll=_scan_unroll(),
+        )
+
+    new_tail = []
+    for j, kind in enumerate(cfg.tail_kinds):
+        x, c = _layer_decode(params["tail"][j], x, caches["tail"][j], cfg,
+                             kind, lengths, backend)
+        new_tail.append(c)
+
+    logits = _unembed(params, x, cfg)
+    new_caches = {"head": new_head, "tail": new_tail}
+    if new_scan is not None:
+        new_caches["scan"] = new_scan
+    return logits, new_caches

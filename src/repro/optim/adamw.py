@@ -1,0 +1,68 @@
+"""AdamW over raw pytrees.
+
+Optimizer state mirrors the parameter tree leaf-for-leaf, so the same
+PartitionSpecs shard both (ZeRO-1 falls out of sharding m/v like the
+FSDP-sharded params — no separate partitioning code path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def adamw_init(params) -> dict:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr: jnp.ndarray | float | None = None):
+    """One step; returns (new_params, new_state).  ``lr`` overrides
+    cfg.lr (schedules pass the per-step value)."""
+    lr = cfg.lr if lr is None else lr
+    step = state["step"] + 1
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        new_p = p - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                          + cfg.weight_decay * p)
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_params, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run, and only the
+# dry-run, uses the 512-device XLA flag).  Sharded-equivalence tests
+# spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

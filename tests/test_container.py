@@ -1,0 +1,95 @@
+"""Knowledge-container format: integrity, atomicity, generations."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import container as C
+
+
+def _segs(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "vec": rng.normal(size=(4, 8)).astype(np.float32),
+        "sig": rng.integers(0, 100, size=(4, 16)).astype(np.int32),
+        **C.encode_texts(["hello", "world", "", "κόσμος"]),
+    }
+
+
+def test_roundtrip(tmp_path):
+    p = str(tmp_path / "k.ragdb")
+    segs = _segs()
+    C.write_container(p, segs, meta={"x": 1}, generation=7)
+    c = C.Container.open(p)
+    assert c.generation == 7 and c.meta == {"x": 1}
+    out = c.read_all()
+    for k in segs:
+        np.testing.assert_array_equal(out[k], segs[k])
+    texts = C.decode_texts(out["content_blob"], out["content_offsets"])
+    assert texts == ["hello", "world", "", "κόσμος"]
+
+
+def test_corruption_detected(tmp_path):
+    p = str(tmp_path / "k.ragdb")
+    C.write_container(p, _segs())
+    c = C.Container.open(p)
+    data = bytearray(open(p, "rb").read())
+    data[-3] ^= 0xFF  # flip a bit in the last segment
+    open(p, "wb").write(bytes(data))
+    c = C.Container.open(p)
+    with pytest.raises(IOError, match="sha256 mismatch"):
+        c.read_all(verify=True)
+
+
+def test_bad_magic(tmp_path):
+    p = str(tmp_path / "k.ragdb")
+    open(p, "wb").write(b"NOTRAGDB" + b"\0" * 64)
+    with pytest.raises(ValueError, match="bad magic"):
+        C.Container.open(p)
+
+
+def test_atomic_write_never_torn(tmp_path, monkeypatch):
+    """A crash mid-write leaves the previous container byte-identical
+    and no temp litter behind."""
+    p = str(tmp_path / "k.ragdb")
+    C.write_container(p, _segs(0))
+    before = open(p, "rb").read()
+
+    class Boom(Exception):
+        pass
+
+    def boom(_fd):
+        raise Boom("simulated crash before publish")
+
+    monkeypatch.setattr(os, "fsync", boom)
+    with pytest.raises(Boom):
+        C.write_container(p, _segs(1))
+    monkeypatch.undo()
+    assert open(p, "rb").read() == before
+    assert not [f for f in os.listdir(tmp_path) if f.startswith(".ragdb-tmp")]
+
+
+def test_sharded_generations(tmp_path):
+    root = str(tmp_path / "kc")
+    g0 = C.publish_sharded(root, [_segs(0), _segs(1)], meta={"v": 0})
+    reader = C.ShardedContainer.open(root)  # pin generation 0
+    g1 = C.publish_sharded(root, [_segs(2), _segs(3)], meta={"v": 1})
+    assert (g0, g1) == (0, 1)
+    # pinned reader still reads its generation's files
+    assert reader.generation == 0
+    np.testing.assert_array_equal(
+        reader.open_shard(0).read("vec"), _segs(0)["vec"]
+    )
+    fresh = C.ShardedContainer.open(root)
+    assert fresh.generation == 1 and fresh.meta == {"v": 1}
+
+
+def test_content_addressing(tmp_path):
+    """Identical shard data → identical file name (dedup-by-hash)."""
+    root = str(tmp_path / "kc")
+    C.publish_sharded(root, [_segs(5)])
+    m1 = json.load(open(os.path.join(root, "manifest.json")))
+    C.publish_sharded(root, [_segs(5)])
+    m2 = json.load(open(os.path.join(root, "manifest.json")))
+    assert m1["shards"][0]["file"] == m2["shards"][0]["file"]

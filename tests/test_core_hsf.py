@@ -1,0 +1,143 @@
+"""Paper §4 semantics: tokenizer, hashed TF-IDF, Bloom signatures, HSF."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing, hsf, signature as sigmod, tokenizer
+from repro.core.vectorizer import HashedTfIdf
+from repro.core.tokenizer import TermCounts
+
+TEXTS = st.text(
+    alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+    min_size=0, max_size=200,
+)
+
+
+def test_tokenize_basic():
+    assert tokenizer.tokenize("Hello, World! INV-2024") == \
+        ["hello", "world", "inv", "2024"]
+
+
+def test_fnv_deterministic():
+    assert hashing.fnv1a64("token") == hashing.fnv1a64("token")
+    assert hashing.fnv1a64("a") != hashing.fnv1a64("b")
+    # reference value of FNV-1a 64 for empty input is the offset basis
+    assert hashing.fnv1a64_bytes(b"") == 0xCBF29CE484222325
+
+
+def test_rolling_hash_matches_position_independent():
+    h1 = hashing.rolling_ngram_hashes(b"abcdef", 3)
+    h2 = hashing.rolling_ngram_hashes(b"xxabcdefyy", 3)
+    # every gram of the substring appears among the grams of the superstring
+    assert set(h1.tolist()) <= set(h2.tolist())
+
+
+@settings(max_examples=50, deadline=None)
+@given(doc=TEXTS, start=st.integers(0, 199), length=st.integers(4, 60))
+def test_bloom_never_false_negative(doc, start, length):
+    """The paper's guarantee: a true substring is never missed."""
+    if len(doc) < 8:
+        doc = doc + "padding-padding"
+    start = start % max(len(doc) - 4, 1)
+    query = doc[start: start + length]
+    d = sigmod.signature_of_text(doc)
+    q = sigmod.query_signature(query)
+    assert sigmod.contains(d[None, :], q)[0]
+
+
+def test_bloom_discriminates():
+    d = sigmod.signature_of_text("the quick brown fox INVOICE_777")
+    q_in = sigmod.query_signature("INVOICE_777")
+    q_out = sigmod.query_signature("COMPLETELY_DIFFERENT_CODE_123456")
+    assert sigmod.contains(d[None, :], q_in)[0]
+    assert not sigmod.contains(d[None, :], q_out)[0]
+
+
+def test_tfidf_formulas():
+    """tf = 1 + ln f; idf = ln(N/(1+df)) + 1 — checked against a manual
+    two-doc corpus."""
+    v = HashedTfIdf(dim=512)
+    tc1 = TermCounts.from_text("alpha alpha beta")
+    tc2 = TermCounts.from_text("beta gamma")
+    v.add_doc(tc1)
+    v.add_doc(tc2)
+    idf = v.idf()
+    from repro.core.vectorizer import bucket_sign
+
+    b_alpha = bucket_sign(hashing.hash_tokens(["alpha"]), 512)[0][0]
+    b_beta = bucket_sign(hashing.hash_tokens(["beta"]), 512)[0][0]
+    np.testing.assert_allclose(idf[b_alpha], np.log(2 / 2) + 1, rtol=1e-6)
+    np.testing.assert_allclose(idf[b_beta], np.log(2 / 3) + 1, rtol=1e-6)
+    vec = v.doc_vector(tc1)
+    np.testing.assert_allclose(np.linalg.norm(vec), 1.0, rtol=1e-5)
+
+
+def test_incremental_df_matches_batch():
+    """add_doc/remove_doc incremental df == recomputed-from-scratch df."""
+    docs = [f"word{i} word{(i*7) % 13} common" for i in range(20)]
+    tcs = [TermCounts.from_text(d) for d in docs]
+    v1 = HashedTfIdf(dim=256)
+    for tc in tcs:
+        v1.add_doc(tc)
+    v1.remove_doc(tcs[3])
+    v1.remove_doc(tcs[7])
+    v2 = HashedTfIdf(dim=256)
+    for i, tc in enumerate(tcs):
+        if i not in (3, 7):
+            v2.add_doc(tc)
+    np.testing.assert_array_equal(v1.df, v2.df)
+    assert v1.n_docs == v2.n_docs
+
+
+def test_build_matrix_matches_doc_vector():
+    docs = ["alpha beta", "gamma delta epsilon", "alpha alpha gamma"]
+    tcs = [TermCounts.from_text(d) for d in docs]
+    v = HashedTfIdf(dim=256)
+    for tc in tcs:
+        v.add_doc(tc)
+    mat = v.build_matrix(tcs)
+    for i, tc in enumerate(tcs):
+        np.testing.assert_allclose(mat[i], v.doc_vector(tc), rtol=1e-5,
+                                   atol=1e-7)
+
+
+def test_hsf_score_decomposition():
+    """Score = α·cos + β·indicator, exactly (paper eq. in §4.2)."""
+    rng = np.random.default_rng(0)
+    dv = rng.normal(size=(10, 256)).astype(np.float32)
+    dv /= np.linalg.norm(dv, axis=1, keepdims=True)
+    ds = rng.integers(0, 2**31, size=(10, 128)).astype(np.int32)
+    qv = dv[4]
+    qs = ds[4]  # contained in doc 4 by construction
+    scores = np.asarray(hsf.hsf_scores(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv), jnp.asarray(qs),
+        alpha=0.7, beta=2.0,
+    ))
+    ref = hsf.numpy_reference(dv, ds, qv, qs, 0.7, 2.0)
+    np.testing.assert_allclose(scores, ref, rtol=1e-5, atol=1e-6)
+    assert scores[4] == pytest.approx(0.7 * 1.0 + 2.0, rel=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_entity_always_top1(seed):
+    """Property behind RQ2: an injected unique entity code is ALWAYS
+    rank 1 for its own query, whatever the corpus (β ≥ α bounds cosine)."""
+    from repro.core.ingest import KnowledgeBase
+    from repro.core.retrieval import Retriever
+
+    rng = np.random.default_rng(seed)
+    words = [f"w{i}" for i in range(50)]
+    kb = KnowledgeBase(dim=512)
+    n = int(rng.integers(3, 30))
+    target = int(rng.integers(0, n))
+    code = f"UNIQUE_ENTITY_{seed % 100000}_X"
+    for i in range(n):
+        text = " ".join(rng.choice(words, size=30))
+        if i == target:
+            text += " " + code
+        kb.add_text(f"doc{i}", text)
+    res = Retriever(kb).query(code, k=1)
+    assert res[0].doc_id == f"doc{target}"
+    assert res[0].boosted

@@ -1,0 +1,180 @@
+"""Per-kernel shape/dtype sweeps against the ref.py oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.embedding_bag import ops as bag_ops
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.hsf_score import ops as hsf_ops
+from repro.kernels.hsf_score.ref import hsf_score_ref
+from repro.kernels.topk import ops as topk_ops
+from repro.kernels.topk.ref import top_k_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# hsf_score
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,w", [
+    (64, 256, 128), (100, 512, 128), (1024, 1024, 256), (5, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_hsf_score_sweep(n, d, w, dtype):
+    dv = RNG.normal(size=(n, d)).astype(np.float32)
+    dv /= np.linalg.norm(dv, axis=1, keepdims=True)
+    ds = RNG.integers(0, 2**31, size=(n, w)).astype(np.int32)
+    qv = RNG.normal(size=(d,)).astype(np.float32)
+    qs = (ds[0] & ds[min(1, n - 1)]).astype(np.int32)
+    out = hsf_ops.hsf_score(
+        jnp.asarray(dv, dtype), jnp.asarray(ds), jnp.asarray(qv, dtype),
+        jnp.asarray(qs), alpha=0.9, beta=1.3,
+    )
+    ref = hsf_score_ref(jnp.asarray(dv, dtype), jnp.asarray(ds),
+                        jnp.asarray(qv, dtype), jnp.asarray(qs), 0.9, 1.3)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+def test_hsf_score_boost_exactness():
+    """The boost term is exactly β — never approximated by the kernel."""
+    n, d, w = 32, 128, 128
+    dv = np.zeros((n, d), np.float32)
+    ds = RNG.integers(0, 2**31, size=(n, w)).astype(np.int32)
+    qs = ds[7]
+    out = np.asarray(hsf_ops.hsf_score(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.zeros(d, jnp.float32),
+        jnp.asarray(qs), alpha=1.0, beta=1.0,
+    ))
+    assert out[7] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,l,dh,causal,window,softcap", [
+    (2, 4, 2, 128, 64, True, None, None),
+    (1, 8, 1, 256, 32, True, None, None),
+    (2, 4, 4, 128, 64, True, 32, None),
+    (1, 2, 2, 160, 64, True, None, 50.0),
+    (1, 4, 2, 96, 64, False, None, None),
+    (1, 2, 1, 100, 32, True, 24, 30.0),
+])
+def test_flash_attention_sweep(b, hq, hkv, l, dh, causal, window, softcap):
+    q = RNG.normal(size=(b, hq, l, dh)).astype(np.float32)
+    k = RNG.normal(size=(b, hkv, l, dh)).astype(np.float32)
+    v = RNG.normal(size=(b, hkv, l, dh)).astype(np.float32)
+    out = fa_ops.flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=causal, window=window, softcap=softcap,
+        block_q=64, block_k=64,
+    )
+    ref = attention_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                        scale=dh**-0.5, causal=causal, window=window,
+                        softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = RNG.normal(size=(1, 2, 128, 64)).astype(np.float32)
+    out = fa_ops.flash_attention(
+        jnp.asarray(q, jnp.bfloat16), jnp.asarray(q, jnp.bfloat16),
+        jnp.asarray(q, jnp.bfloat16), block_q=64, block_k=64)
+    ref = attention_ref(jnp.asarray(q, jnp.bfloat16),
+                        jnp.asarray(q, jnp.bfloat16),
+                        jnp.asarray(q, jnp.bfloat16), scale=64**-0.5)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_flash_matches_xla_path():
+    """Kernel and XLA-scan attention implement the same semantics."""
+    from repro.models.attention import flash_attention_xla
+
+    q = jnp.asarray(RNG.normal(size=(2, 4, 128, 32)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, 2, 128, 32)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, 2, 128, 32)).astype(np.float32))
+    a = fa_ops.flash_attention(q, k, v, causal=True, window=48,
+                               block_q=64, block_k=64)
+    b = flash_attention_xla(q, k, v, scale=32**-0.5, causal=True, window=48,
+                            block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# embedding bag
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("v,e,n,bags,mode", [
+    (128, 128, 64, 16, "sum"), (1000, 64, 300, 50, "sum"),
+    (64, 256, 40, 8, "mean"), (32, 128, 5, 10, "sum"),
+])
+def test_embedding_bag_sweep(v, e, n, bags, mode):
+    table = RNG.normal(size=(v, e)).astype(np.float32)
+    idx = RNG.integers(0, v, size=n).astype(np.int32)
+    seg = RNG.integers(0, bags, size=n).astype(np.int32)
+    w = RNG.normal(size=n).astype(np.float32)
+    out = bag_ops.embedding_bag(jnp.asarray(table), jnp.asarray(idx),
+                                jnp.asarray(seg), bags, jnp.asarray(w),
+                                mode=mode)
+    seg_s = np.sort(seg)
+    order = np.argsort(seg, kind="stable")
+    ref = embedding_bag_ref(jnp.asarray(table), jnp.asarray(idx[order]),
+                            jnp.asarray(seg_s), bags,
+                            jnp.asarray(w[order]), mode=mode)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), bags=st.integers(1, 12))
+def test_embedding_bag_property_matches_dense(seed, bags):
+    """bag(table, idx, seg) == one_hot-matmul reference."""
+    rng = np.random.default_rng(seed)
+    v, e, n = 20, 128, 30
+    table = rng.normal(size=(v, e)).astype(np.float32)
+    idx = rng.integers(0, v, size=n).astype(np.int32)
+    seg = rng.integers(0, bags, size=n).astype(np.int32)
+    out = np.asarray(bag_ops.embedding_bag(
+        jnp.asarray(table), jnp.asarray(idx), jnp.asarray(seg), bags))
+    dense = np.zeros((bags, v), np.float32)
+    for i, s in zip(idx, seg):
+        dense[s, i] += 1
+    np.testing.assert_allclose(out, dense @ table, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# topk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k", [(512, 4), (3000, 17), (128, 128), (129, 1)])
+def test_topk_sweep(n, k):
+    s = RNG.normal(size=n).astype(np.float32)
+    v, i = topk_ops.top_k(jnp.asarray(s), k)
+    rv, ri = top_k_ref(jnp.asarray(s), k)
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 32))
+def test_topk_property(seed, k):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(k, 2000))
+    # duplicate-heavy distribution to stress tie-breaking
+    s = rng.integers(0, 5, size=n).astype(np.float32)
+    v, i = topk_ops.top_k(jnp.asarray(s), k)
+    rv, ri = top_k_ref(jnp.asarray(s), k)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(rv))

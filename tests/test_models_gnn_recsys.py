@@ -1,0 +1,198 @@
+"""MACE equivariance properties, neighbor sampler, recsys smoke tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS
+from repro.models.gnn import mace as M
+from repro.models.gnn.sampler import CSRGraph, sample_subgraph
+from repro.models.recsys import autoint, deepfm, dlrm, embedding
+from repro.models.recsys.base import bce_with_logits
+
+RNG = np.random.default_rng(0)
+
+
+def _random_rotation(seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(3, 3))
+    q, r = np.linalg.qr(a)
+    q *= np.sign(np.diag(r))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q.astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def mace_setup():
+    cfg = ARCHS["mace"].smoke_config
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    N, E = 24, 80
+    feats = jnp.asarray(RNG.normal(size=(N, cfg.d_feat)).astype(np.float32))
+    pos = jnp.asarray(RNG.normal(size=(N, 3)).astype(np.float32) * 2)
+    snd = jnp.asarray(RNG.integers(0, N, size=E).astype(np.int32))
+    rcv = jnp.asarray(RNG.integers(0, N, size=E).astype(np.int32))
+    return cfg, params, feats, pos, snd, rcv
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_mace_e3_invariance(seed):
+    """Energy invariant under any rotation + translation (exact property
+    of the invariant product basis)."""
+    cfg = ARCHS["mace"].smoke_config
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    N, E = 16, 40
+    feats = jnp.asarray(rng.normal(size=(N, cfg.d_feat)).astype(np.float32))
+    pos = rng.normal(size=(N, 3)).astype(np.float32)
+    snd = jnp.asarray(rng.integers(0, N, size=E).astype(np.int32))
+    rcv = jnp.asarray(rng.integers(0, N, size=E).astype(np.int32))
+    R = _random_rotation(seed)
+    t = rng.normal(size=(1, 3)).astype(np.float32)
+    _, e0 = M.forward(params, feats, jnp.asarray(pos), snd, rcv, cfg)
+    _, e1 = M.forward(params, feats, jnp.asarray(pos @ R.T + t), snd, rcv,
+                      cfg)
+    np.testing.assert_allclose(float(e0[0]), float(e1[0]), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_mace_force_equivariance(mace_setup):
+    cfg, params, feats, pos, snd, rcv = mace_setup
+    R = jnp.asarray(_random_rotation(3))
+    e1, f1 = M.energy_and_forces(params, feats, pos, snd, rcv, cfg)
+    e2, f2 = M.energy_and_forces(params, feats, pos @ R.T, snd, rcv, cfg)
+    np.testing.assert_allclose(float(e1), float(e2), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(f2), np.asarray(f1 @ R.T),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mace_edge_mask_drops_edges(mace_setup):
+    cfg, params, feats, pos, snd, rcv = mace_setup
+    E = snd.shape[0]
+    mask = jnp.ones((E,)).at[10:].set(0.0)
+    _, e_masked = M.forward(params, feats, pos, snd, rcv, cfg,
+                            edge_mask=mask)
+    _, e_trunc = M.forward(params, feats, pos, snd[:10], rcv[:10], cfg)
+    np.testing.assert_allclose(float(e_masked[0]), float(e_trunc[0]),
+                               rtol=1e-5)
+
+
+def test_mace_batched_graphs_independent(mace_setup):
+    """Energies of disjoint graphs don't leak into each other."""
+    cfg, params, feats, pos, snd, rcv = mace_setup
+    N = feats.shape[0]
+    gid = jnp.asarray((np.arange(N) >= N // 2).astype(np.int32))
+    # edges only within first half
+    snd2 = snd % (N // 2)
+    rcv2 = rcv % (N // 2)
+    _, both = M.forward(params, feats, pos, snd2, rcv2, cfg,
+                        graph_ids=gid, n_graphs=2)
+    _, first = M.forward(params, feats[: N // 2], pos[: N // 2],
+                         snd2, rcv2, cfg)
+    np.testing.assert_allclose(float(both[0]), float(first[0]), rtol=1e-5)
+
+
+def test_sampler_shapes_and_validity():
+    n, e = 200, 1200
+    snd = RNG.integers(0, n, size=e)
+    rcv = RNG.integers(0, n, size=e)
+    g = CSRGraph(n, snd, rcv)
+    sub = sample_subgraph(g, np.arange(16), (5, 3), np.random.default_rng(1))
+    assert sub.node_ids.shape == (16 * (1 + 5 + 15),)
+    assert sub.senders.shape == (16 * (5 + 15),)
+    # every valid edge points at a valid node slot
+    ok = sub.edge_mask
+    assert (sub.receivers[ok] < len(sub.node_mask)).all()
+    assert sub.node_mask[sub.receivers[ok]].all()
+    assert sub.node_mask[sub.senders[ok]].all()
+    assert sub.seed_mask.sum() == 16
+
+
+def test_sampler_deterministic():
+    g = CSRGraph(50, RNG.integers(0, 50, 300), RNG.integers(0, 50, 300))
+    s1 = sample_subgraph(g, np.arange(4), (3, 2), np.random.default_rng(7))
+    s2 = sample_subgraph(g, np.arange(4), (3, 2), np.random.default_rng(7))
+    np.testing.assert_array_equal(s1.node_ids, s2.node_ids)
+    np.testing.assert_array_equal(s1.senders, s2.senders)
+
+
+# ---------------------------------------------------------------------------
+# recsys
+# ---------------------------------------------------------------------------
+
+RECSYS = {"dlrm-rm2": dlrm, "dlrm-mlperf": dlrm, "deepfm": deepfm,
+          "autoint": autoint}
+
+
+@pytest.mark.parametrize("arch_id", sorted(RECSYS))
+def test_recsys_smoke_train_step(arch_id):
+    cfg = ARCHS[arch_id].smoke_config
+    mod = RECSYS[arch_id]
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    B = 16
+    sparse = jnp.asarray(np.stack(
+        [RNG.integers(0, v, size=B) for v in cfg.vocab_sizes], axis=1
+    ).astype(np.int32))
+    dense = jnp.asarray(RNG.normal(size=(B, cfg.n_dense)).astype(np.float32)) \
+        if cfg.n_dense else None
+    labels = jnp.asarray(RNG.integers(0, 2, size=B).astype(np.float32))
+
+    def loss_fn(p):
+        return bce_with_logits(mod.forward(p, dense, sparse, cfg), labels)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(g)).all()
+               for g in jax.tree.leaves(grads))
+    out = mod.forward(params, dense, sparse, cfg)
+    assert out.shape == (B,)
+    # training for a few steps reduces loss on a fixed batch
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    opt = adamw_init(params)
+    acfg = AdamWConfig(lr=3e-2, weight_decay=0.0)
+    l0 = float(loss_fn(params))
+    for _ in range(8):
+        _, g = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw_update(g, opt, params, acfg)
+    assert float(loss_fn(params)) < l0
+
+
+@pytest.mark.parametrize("arch_id", sorted(RECSYS))
+def test_recsys_retrieval_scores(arch_id):
+    cfg = ARCHS[arch_id].smoke_config
+    mod = RECSYS[arch_id]
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    n_cand = 100
+    if cfg.n_dense:
+        q = jnp.asarray(RNG.normal(size=(1, cfg.n_dense)).astype(np.float32))
+    else:
+        q = jnp.asarray(np.stack(
+            [RNG.integers(0, v, size=1) for v in cfg.vocab_sizes], axis=1
+        ).astype(np.int32))
+    scores = mod.retrieval_scores(params, q, jnp.arange(n_cand), cfg)
+    assert scores.shape == (n_cand,)
+    v, i = jax.lax.top_k(scores, 5)
+    assert np.unique(np.asarray(i)).size == 5
+
+
+def test_embedding_bag_path_matches_lookup():
+    """Multi-hot bag with one index per bag == one-hot lookup."""
+    vocabs = (20, 30)
+    table = embedding.init_tables(jax.random.PRNGKey(0), vocabs, 16)["table"]
+    offs = embedding.field_offsets(vocabs)
+    idx = jnp.asarray([[3, 7], [11, 2]], jnp.int32)  # [B=2, F=2]
+    ref = embedding.lookup(table, offs, idx).sum(axis=1)
+    flat_idx = idx.reshape(-1)
+    field_ids = jnp.asarray([0, 1, 0, 1], jnp.int32)
+    bag_ids = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    out = embedding.lookup_bags(table, offs, flat_idx, field_ids, bag_ids, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+    # kernel path agrees
+    out_k = embedding.lookup_bags(table, offs, flat_idx, field_ids, bag_ids,
+                                  2, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(ref), rtol=1e-4)

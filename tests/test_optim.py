@@ -1,0 +1,88 @@
+"""Optimizer substrate: AdamW, schedules, error-feedback compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.optim.compress import (
+    dequantize, ef_roundtrip, quantize,
+)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0, 2.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    loss = lambda p: jnp.sum(jnp.square(p["w"] - 1.0))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(g, opt, params, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), 1.0, atol=1e-2)
+    assert int(opt["step"]) == 200
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros(3)}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=1.0, grad_clip=1e-6, weight_decay=0.0)
+    g = {"w": jnp.asarray([1e9, 1e9, 1e9])}
+    p2, _ = adamw_update(g, opt, params, cfg)
+    assert np.abs(np.asarray(p2["w"])).max() < 2.0  # clip kept it sane
+
+
+def test_schedule_shape():
+    lrs = [float(warmup_cosine(s, 1e-3, 10, 100)) for s in range(100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1e-3) < 1e-9  # peak at end of warmup
+    assert lrs[99] < lrs[50] < lrs[11]
+    assert lrs[99] >= 1e-4 * 0.99  # min_ratio floor
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=64).astype(np.float32) * 10)
+    q, s = quantize(x)
+    err = np.abs(np.asarray(dequantize(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6  # half-ULP of the int8 grid
+
+
+def test_error_feedback_unbiased_over_time():
+    """Accumulated compressed updates converge to accumulated true
+    updates — the EF guarantee (residual is bounded, not growing)."""
+    rng = np.random.default_rng(0)
+    g_true = [rng.normal(size=32).astype(np.float32) for _ in range(50)]
+    err = {"g": jnp.zeros(32)}
+    acc_c = np.zeros(32)
+    acc_t = np.zeros(32)
+    for g in g_true:
+        gq, err = ef_roundtrip({"g": jnp.asarray(g)}, err)
+        acc_c += np.asarray(gq["g"])
+        acc_t += g
+    # total drift equals the final residual (telescoping sum), which is
+    # bounded by one quantization step — NOT 50 of them
+    drift = np.abs(acc_c - acc_t)
+    assert drift.max() <= np.abs(np.asarray(err["g"])).max() + 1e-5
+
+
+def test_ef_training_matches_uncompressed_loss():
+    """Quadratic descent with int8+EF gradients reaches the same loss
+    neighbourhood as exact gradients."""
+    target = jnp.asarray(np.linspace(-2, 2, 16), jnp.float32)
+
+    def run(compressed: bool):
+        params = {"w": jnp.zeros(16)}
+        opt = adamw_init(params)
+        cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+        err = {"w": jnp.zeros(16)}
+        for _ in range(150):
+            g = jax.grad(lambda p: jnp.sum(jnp.square(p["w"] - target)))(
+                params)
+            if compressed:
+                g, err = ef_roundtrip(g, err)
+            params, opt = adamw_update(g, opt, params, cfg)
+        return float(jnp.sum(jnp.square(params["w"] - target)))
+
+    assert run(True) < run(False) + 1e-2

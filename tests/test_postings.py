@@ -1,0 +1,77 @@
+"""⟨I⟩-region postings index + prefiltered retrieval path."""
+import time
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ingest import KnowledgeBase
+from repro.core.postings import PostingsIndex
+from repro.core.retrieval import Retriever
+from repro.core.tokenizer import TermCounts
+from repro.data.corpus import make_corpus
+
+
+def test_postings_build_and_lookup():
+    docs = ["alpha beta", "beta gamma", "alpha gamma delta"]
+    tcs = [TermCounts.from_text(d) for d in docs]
+    pi = PostingsIndex.build(tcs)
+    assert list(pi.docs_with_term("alpha")) == [0, 2]
+    assert list(pi.docs_with_term("beta")) == [0, 1]
+    assert list(pi.docs_with_term("nothere")) == []
+    assert list(pi.candidates("alpha beta")) == [0, 1, 2]
+    assert list(pi.candidates("alpha gamma", mode="intersect")) == [2]
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_postings_complete_per_doc(seed):
+    """Every (term, doc) pair is recoverable — the index is lossless."""
+    rng = np.random.default_rng(seed)
+    words = [f"w{i}" for i in range(30)]
+    docs = [" ".join(rng.choice(words, size=rng.integers(1, 20)))
+            for _ in range(rng.integers(1, 15))]
+    tcs = [TermCounts.from_text(d) for d in docs]
+    pi = PostingsIndex.build(tcs)
+    for i, d in enumerate(docs):
+        for w in set(d.split()):
+            assert i in pi.docs_with_term(w), (w, i)
+
+
+def test_prefiltered_query_matches_full_scan():
+    """For whole-token queries (entity codes), prefilter returns the
+    same top-1 as the full HSF scan."""
+    docs, entities = make_corpus(n_docs=300, n_entities=10, seed=2)
+    kb = KnowledgeBase(dim=2048)
+    for i, d in enumerate(docs):
+        kb.add_text(f"doc_{i:05d}.txt", d)
+    full = Retriever(kb)
+    fast = Retriever(kb, prefilter=True)
+    for code, idx in entities.items():
+        a = full.query(code, k=1)[0]
+        b = fast.query(code, k=1)[0]
+        assert a.doc_id == b.doc_id == f"doc_{idx:05d}.txt"
+        assert abs(a.score - b.score) < 1e-5
+
+
+def test_postings_survive_container_roundtrip(tmp_path):
+    kb = KnowledgeBase(dim=512)
+    kb.add_text("a", "alpha CODE9 beta")
+    kb.add_text("b", "gamma delta")
+    p = str(tmp_path / "k.ragdb")
+    kb.save(p)
+    kb2 = KnowledgeBase.load(p)
+    assert list(kb2.postings().docs_with_term("code9")) == [0]
+    r = Retriever(kb2, prefilter=True)
+    assert r.query("CODE9", k=1)[0].doc_id == "a"
+
+
+def test_unselective_query_falls_back():
+    """A query hitting most docs returns None from candidates() (full
+    scan is cheaper) and the retriever still answers correctly."""
+    kb = KnowledgeBase(dim=512)
+    for i in range(50):
+        kb.add_text(f"d{i}", f"common filler words item{i}")
+    pi = kb.postings()
+    assert pi.candidates("common", max_candidates=10) is None
+    r = Retriever(kb, prefilter=True)
+    assert r.query("common item7", k=1)[0].doc_id == "d7"
