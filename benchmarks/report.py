@@ -74,9 +74,17 @@ def compare_table(base_path: str, opt_path: str, cells) -> str:
     return "\n".join(out)
 
 
+def _read_fragment(path):
+    """Optional prose fragment — reports render without it."""
+    if os.path.exists(path):
+        with open(path) as f:
+            return f.read()
+    return f"<!-- {path} not present -->\n"
+
+
 def main():
     parts = []
-    parts.append(open("EXPERIMENTS.header.md").read())
+    parts.append(_read_fragment("EXPERIMENTS.header.md"))
 
     parts.append("\n## §Dry-run — per-cell compiled artifacts\n")
     parts.append(
@@ -101,7 +109,7 @@ def main():
          ("dlrm-mlperf", "retrieval_cand")],
     ))
 
-    parts.append("\n" + open("EXPERIMENTS.perf.md").read())
+    parts.append("\n" + _read_fragment("EXPERIMENTS.perf.md"))
 
     with open("EXPERIMENTS.md", "w") as f:
         f.write("\n".join(parts))

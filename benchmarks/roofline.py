@@ -1,7 +1,8 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
-# Roofline analysis (EXPERIMENTS.md §Roofline).
+# Roofline analysis (feeds the EXPERIMENTS.md report rendered by
+# benchmarks/report.py from archived results).
 #
 # Terms per (arch × shape) on the single-pod 16×16 mesh, v5e constants:
 #     compute    = FLOPs/device            / 197e12  (bf16 peak)

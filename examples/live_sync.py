@@ -1,13 +1,15 @@
 """'Live Sync' (paper §3.3): the container as a continuous background
-process — watch a directory, re-index only the delta each round.
+process — watch a directory, re-index only the delta each round, and
+keep the serving plane hot: the QueryEngine patches its device-resident
+arrays from the same delta (O(changed docs), not O(corpus)).
 
     PYTHONPATH=src python examples/live_sync.py
 """
 import os
 import tempfile
 
+from repro.core.engine import QueryEngine
 from repro.core.ingest import KnowledgeBase
-from repro.core.retrieval import Retriever
 from repro.data.corpus import make_corpus, write_corpus_dir
 
 
@@ -17,6 +19,7 @@ def main():
         docs, _ = make_corpus(n_docs=400, seed=0)
         write_corpus_dir(corpus_dir, docs)
         kb = KnowledgeBase(dim=2048)
+        engine = QueryEngine(kb)  # serving plane, built once
 
         events = [
             ("initial scan", lambda: None),
@@ -34,11 +37,14 @@ def main():
         for label, mutate in events:
             mutate()
             s = kb.sync(corpus_dir)
+            r = engine.refresh()
             print(f"{label:15s} → scanned={s.scanned:4d} "
                   f"skipped={s.skipped:4d} +{s.added} ~{s.updated} "
-                  f"-{s.removed}  ({s.seconds * 1e3:.1f} ms)")
+                  f"-{s.removed}  (sync {s.seconds * 1e3:.1f} ms, "
+                  f"engine refresh {r.changed} rows "
+                  f"{r.seconds * 1e3:.1f} ms)")
 
-        top = Retriever(kb).query("TICKET-4821", k=1)[0]
+        top = engine.query_batch(["TICKET-4821"], k=1)[0][0]
         print(f"\nquery TICKET-4821 → {top.doc_id} "
               f"(boosted={top.boosted}) — the live delta is queryable")
 

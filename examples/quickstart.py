@@ -37,13 +37,22 @@ def main():
         assert retriever.query(code, k=1)[0].doc_id == \
             f"doc_{target:05d}.txt"
 
+        # --- batched serving (QueryEngine: one dispatch, many queries) -
+        engine = retriever.engine
+        codes = list(entities)[:3]
+        for code_, results in zip(codes, engine.query_batch(codes, k=1)):
+            print(f"batched query {code_!r} → {results[0].doc_id}")
+
         # --- incremental sync: O(U), not O(N) --------------------------
         with open(os.path.join(corpus_dir, "doc_00007.txt"), "a") as f:
             f.write(" freshly added INV-2026 reference")
         stats = kb.sync(corpus_dir)
+        refresh = engine.refresh()  # patches 1 device row, not 500
         print(f"\nincremental : {stats.updated} updated, "
-              f"{stats.skipped} skipped in {stats.seconds:.3f}s")
-        top = Retriever(kb).query("INV-2026", k=1)[0]
+              f"{stats.skipped} skipped in {stats.seconds:.3f}s "
+              f"(engine refresh: {refresh.changed} row, "
+              f"{refresh.seconds * 1e3:.1f} ms)")
+        top = engine.query_batch(["INV-2026"], k=1)[0][0]
         print(f"query INV-2026 → {top.doc_id} (score {top.score:.3f})")
 
         # --- single-file container (§3.1) -------------------------------

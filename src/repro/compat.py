@@ -1,0 +1,112 @@
+"""Compatibility shims for older JAX releases.
+
+The codebase targets the current JAX API surface (``jax.shard_map``,
+``jax.sharding.AxisType``, ``jax.make_mesh(..., axis_types=...)``,
+``check_vma=``).  Some deployment images pin older releases (0.4.x)
+where those still live under ``jax.experimental.shard_map`` /
+``check_rep=`` or do not exist at all.  ``install()`` patches the
+missing names onto the ``jax`` namespace so the rest of the code (and
+the tests) can be written against one API.
+
+Every shim is gated on a feature probe — on a current JAX this module
+is a no-op, and it never *changes* existing behaviour, it only fills
+holes.  Called once from ``repro/__init__.py``.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+
+def _install_shard_map(jax) -> None:
+    try:
+        jax.shard_map  # noqa: B018 — probe (old releases raise here)
+        return
+    except AttributeError:
+        pass
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True,
+                  axis_names=None, **kwargs):
+        # check_vma was named check_rep before the varying-manual-axes
+        # rework; semantics are close enough for "turn the check off".
+        #
+        # axis_names (the set of MANUAL axes) has no reliable old-API
+        # equivalent: `auto=` partial mode lowers axis_index to a
+        # PartitionId the 0.4.x SPMD partitioner rejects.  We run FULL
+        # manual instead, which is equivalent as long as the in/out
+        # specs never mention a non-manual axis (inputs are then simply
+        # replicated over those axes — true for every call site here).
+        if axis_names is not None:
+            for spec in jax.tree_util.tree_leaves(
+                (in_specs, out_specs),
+                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+            ):
+                for entry in spec:
+                    names = entry if isinstance(entry, tuple) else (entry,)
+                    assert all(n is None or n in axis_names for n in names), (
+                        f"compat shard_map: spec {spec} mentions an axis "
+                        f"outside axis_names={axis_names}; full-manual "
+                        "fallback would change semantics"
+                    )
+        return _shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=bool(check_vma), **kwargs,
+        )
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_type(jax) -> None:
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "make_mesh"):
+        from jax.experimental import mesh_utils
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            devs = mesh_utils.create_device_mesh(
+                tuple(axis_shapes), devices=devices
+            )
+            return jax.sharding.Mesh(devs, tuple(axis_names))
+
+        jax.make_mesh = make_mesh
+        return
+
+    params = inspect.signature(jax.make_mesh).parameters
+    if "axis_types" not in params:
+        orig = jax.make_mesh
+
+        @functools.wraps(orig)
+        def make_mesh(axis_shapes, axis_names, *args, axis_types=None, **kw):
+            # Old releases have no axis-type concept: every axis behaves
+            # as Auto, which is the only type this repo requests.
+            return orig(axis_shapes, axis_names, *args, **kw)
+
+        jax.make_mesh = make_mesh
+
+
+def _install_pallas_names() -> None:
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+    except ImportError:  # pallas not built for this backend
+        return
+    if not hasattr(pltpu, "CompilerParams") and hasattr(
+        pltpu, "TPUCompilerParams"
+    ):
+        pltpu.CompilerParams = pltpu.TPUCompilerParams
+
+
+def install() -> None:
+    import jax
+
+    _install_shard_map(jax)
+    _install_axis_type(jax)
+    _install_pallas_names()

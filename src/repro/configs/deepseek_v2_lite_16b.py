@@ -5,7 +5,7 @@ decoupled RoPE key dim 64, nope 128, v 128 (queries uncompressed in
 Lite).  MoE: 64 routed + 2 shared experts, top-6, d_ff(expert) 1408;
 layer 0 is a dense MLP with d_ff 10944.  ~15.7 B total / ~2.4 B active.
 
-Assignment-line note (recorded per DESIGN.md): the line says both
+Assignment-line note (recorded here for traceability): the line says both
 "64e top-6" and "160 routed" — 160 routed belongs to full V2; the Lite
 model named here has 64 routed + 2 shared, which we use.
 """

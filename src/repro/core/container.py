@@ -17,7 +17,7 @@ Design goals carried over from the paper:
   a torn container.
 - **Right to be forgotten**: deleting the file deletes all regions.
 
-Scale-out (DESIGN.md §3): a *sharded* container is a directory with a
+Scale-out (docs/ARCHITECTURE.md §1): a *sharded* container is a directory with a
 ``manifest.json`` naming content-addressed shard files.  The manifest is
 itself atomically replaced, and carries a monotonically increasing
 ``generation`` — the WAL-mode analogue: readers pin a generation; the

@@ -1,0 +1,408 @@
+"""Batched query engine with incremental materialization (serving plane).
+
+This is the single entry point for retrieval at serving time.  It owns
+the device-resident copies of the ⟨V⟩/⟨I⟩ regions and adds three things
+the single-query `Retriever` could not give a multi-user deployment:
+
+1. **Batched queries** — ``query_batch(texts, k)`` vectorizes query
+   embedding + signature construction on the host, pads the batch to a
+   power-of-two bucket (so jit recompiles are bounded by
+   log2(max_batch) shapes, not one per batch size), and scores all
+   queries in one dispatch.
+
+   Determinism contract: the default scoring path maps the *single-query*
+   HSF formulation over the batch (``lax.map`` of a [N,D]·[D] matvec),
+   so each query's scores are **bit-identical** to `Retriever.query` on
+   the same corpus regardless of batch size.  A [B,D]×[D,N] GEMM is
+   mathematically equal but not bit-stable across batch sizes (BLAS
+   reduction order depends on the M dimension); deployments that prefer
+   MXU-saturating throughput over bit-stability opt in via
+   ``gemm_batch=True``.
+
+2. **Incremental materialization** — the `KnowledgeBase` logs dirty rows
+   on ``add_text``/``sync``/remove (``changes_since``); ``refresh()``
+   re-vectorizes only those documents and patches the device arrays in
+   place.  The factored form ``v_d = normalize(u_d ⊙ idf)``
+   (vectorizer.py) is what makes this exact: per-doc ``u_d`` rows are
+   cached, and the global idf reweight is a cheap elementwise pass —
+   the same O(U) split the paper uses for ingest (§3.3), applied to the
+   query plane.  The refreshed arrays are bit-identical to a cold
+   ``materialize()`` rebuild.
+
+3. **Query-vector LRU cache** — keyed on the canonicalized query text
+   (tokenizer.normalize), invalidated only when the idf statistics
+   actually change.  Repeated queries skip tokenize/hash/scatter.
+
+See docs/ARCHITECTURE.md §5 for how this composes with the
+mesh-sharded path (retrieval.py).
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hsf, signature as sigmod
+from repro.core.ingest import KnowledgeBase
+from repro.core.tokenizer import normalize
+
+
+@dataclass
+class RetrievalResult:
+    """One retrieved document (re-exported by retrieval.py for compat)."""
+
+    doc_id: str
+    score: float
+    cosine: float
+    boosted: bool
+
+
+@dataclass
+class RefreshStats:
+    """What one ``refresh()`` actually did."""
+
+    changed: int = 0        # docs re-vectorized (the O(U) part)
+    removed: int = 0        # docs dropped
+    rows_patched: int = 0   # device rows updated in place (.at[].set)
+    restacked: bool = False  # row layout changed (add/remove) → host restack
+    reweighted: bool = False  # idf changed → global reweight pass
+    n_docs: int = 0
+    seconds: float = 0.0
+
+    @property
+    def no_op(self) -> bool:
+        return self.changed == 0 and self.removed == 0
+
+
+# --------------------------------------------------------------------------
+# jitted scoring core (module-level so all engines share the jit cache)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("k", "alpha", "beta", "gemm"))
+def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, *, k, alpha, beta, gemm):
+    """HSF scores + top-k for a padded query batch.
+
+    Returns (vals [B,k], idx [B,k], cos [B,k]).  The non-gemm path keeps
+    each query's reduction identical to the single-query matvec.
+    """
+    dv = doc_vecs.astype(jnp.float32)
+    if gemm:
+        cos = q_vecs.astype(jnp.float32) @ dv.T
+    else:
+        cos = jax.lax.map(lambda q: dv @ q.astype(jnp.float32), q_vecs)
+    ind = jax.vmap(lambda s: hsf.containment(doc_sigs, s))(q_sigs)
+    scores = alpha * cos + beta * ind
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx, jnp.take_along_axis(cos, idx, axis=1)
+
+
+@partial(jax.jit, static_argnames=("k", "alpha", "beta"))
+def _score_topk_pallas(doc_vecs, doc_sigs, q_vecs, q_sigs, *, k, alpha, beta):
+    """Pallas-kernel scoring, mapped per query (kernels/hsf_score).
+
+    ``lax.map`` keeps each query's kernel invocation identical to the
+    single-query path, preserving the bit-stability contract.
+    """
+    def one(args):
+        q, s = args
+        scores = hsf.hsf_scores_kernel(
+            doc_vecs, doc_sigs, q, s, alpha=alpha, beta=beta
+        )
+        c = doc_vecs.astype(jnp.float32) @ q.astype(jnp.float32)
+        v, i = jax.lax.top_k(scores, k)
+        return v, i, jnp.take(c, i)
+
+    return jax.lax.map(one, (q_vecs, q_sigs))
+
+
+def _bucket(b: int) -> int:
+    """Next power of two ≥ b (query-batch shape bucket)."""
+    return 1 << max(b - 1, 0).bit_length() if b > 1 else 1
+
+
+def _pad_row_update(rows: np.ndarray, block: np.ndarray):
+    """Pad a row-scatter update to a power-of-two row count.
+
+    Device row patches jit-compile per rows-shape; bucketing bounds the
+    compile count just like query batching.  Padding duplicates row 0 —
+    a scatter-set writing identical content twice is deterministic.
+    """
+    pad = _bucket(len(rows)) - len(rows)
+    if pad:
+        rows = np.concatenate([rows, np.repeat(rows[:1], pad)])
+        block = np.concatenate([block, np.repeat(block[:1], pad, axis=0)])
+    return rows, block
+
+
+class QueryEngine:
+    """Batched retrieval over a live KnowledgeBase.
+
+    ``query_batch`` auto-refreshes from the KB's dirty log first, so an
+    engine constructed once keeps serving correct results across
+    ``add_text``/``sync``/removal — that is the point: refresh cost is
+    O(changed docs), not O(corpus).
+    """
+
+    def __init__(
+        self,
+        kb: KnowledgeBase,
+        alpha: float = hsf.DEFAULT_ALPHA,
+        beta: float = hsf.DEFAULT_BETA,
+        use_kernel: bool = False,
+        gemm_batch: bool = False,
+        cache_size: int = 256,
+        max_batch: int = 256,
+    ):
+        self.kb = kb
+        self.alpha = float(alpha)
+        self.beta = float(beta)
+        self.use_kernel = use_kernel
+        self.gemm_batch = gemm_batch
+        self.cache_size = cache_size
+        self.max_batch = max_batch
+
+        self.doc_ids: list[str] = []
+        self.doc_vecs = jnp.zeros((0, kb.dim), jnp.float32)
+        self.doc_sigs = jnp.zeros((0, kb.sig_words), jnp.int32)
+        self._row_of: dict[str, int] = {}
+        self._u = np.zeros((0, kb.dim), np.float32)  # cached tf·sign rows
+        self._idf = np.zeros((0,), np.float32)
+        self._synced = -1  # KB version the device arrays reflect
+
+        self._qcache: OrderedDict[str, tuple[np.ndarray, np.ndarray]] = (
+            OrderedDict()
+        )
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+        self.refresh()
+
+    # ---- incremental materialization -----------------------------------
+
+    def refresh(self) -> RefreshStats:
+        """Bring device arrays up to date with the KB (O(changed docs))."""
+        t0 = time.perf_counter()
+        kb = self.kb
+        stats = RefreshStats()
+        target = kb.version
+        if self._synced < 0:
+            stats.changed = kb.n_docs
+            stats.restacked = True
+            self._cold_build()
+            stats.reweighted = True
+        elif target != self._synced:
+            changed, removed = kb.changes_since(self._synced)
+            stats.changed, stats.removed = len(changed), len(removed)
+            self._apply_delta(changed, stats)
+        self._synced = target
+        stats.n_docs = len(self.doc_ids)
+        stats.seconds = time.perf_counter() - t0
+        return stats
+
+    def _cold_build(self) -> None:
+        kb = self.kb
+        if not kb._dirty and kb._matrix is not None:
+            # a clean materialized matrix exists (e.g. a container loaded
+            # with include_matrix=True): adopt it instead of re-vectorizing
+            # — that skip is the whole point of persisting ⟨V⟩ (RQ3).
+            # The u-row cache is built lazily on the first delta.
+            matrix, sigs, ids = kb.materialize()
+            self._u = None
+            self._idf = kb.vectorizer.idf()
+            self.doc_vecs = jnp.asarray(matrix)
+            self.doc_sigs = jnp.asarray(sigs)
+        else:
+            ids = sorted(kb.records)
+            tcs = [kb.term_counts[i] for i in ids]
+            self._u = kb.vectorizer.build_unweighted_matrix(tcs)
+            self._idf = kb.vectorizer.idf()
+            self.doc_vecs = jnp.asarray(kb.vectorizer.finalize_matrix(self._u))
+            self.doc_sigs = jnp.asarray(
+                np.stack([kb.signatures[i] for i in ids])
+                if ids
+                else np.zeros((0, kb.sig_words), np.int32)
+            )
+        self.doc_ids = ids
+        self._row_of = {i: r for r, i in enumerate(ids)}
+
+    def _ensure_u(self) -> None:
+        """Materialize the u-row cache for the engine's current layout.
+
+        Deferred when the cold build adopted a persisted matrix; rows for
+        docs since removed from the KB are left zero (they are never read
+        — the restack path only copies rows for surviving ids), and rows
+        for since-changed docs are recomputed from the new term counts,
+        identical to the values the delta is about to write anyway.
+        """
+        if self._u is not None:
+            return
+        kb = self.kb
+        rows = np.zeros((len(self.doc_ids), kb.dim), np.float32)
+        for r, i in enumerate(self.doc_ids):
+            tc = kb.term_counts.get(i)
+            if tc is not None:
+                rows[r] = kb.vectorizer.unweighted_row(tc)
+        self._u = rows
+
+    def _apply_delta(self, changed: list[str], stats: RefreshStats) -> None:
+        kb = self.kb
+        self._ensure_u()
+        # the O(U) part: re-vectorize only the dirty docs
+        new_u = {
+            i: kb.vectorizer.unweighted_row(kb.term_counts[i])
+            for i in changed
+        }
+        new_ids = sorted(kb.records)
+        if new_ids == self.doc_ids:
+            if changed:
+                rows = np.array(
+                    [self._row_of[i] for i in changed], np.int32
+                )
+                for r, i in zip(rows, changed):
+                    self._u[r] = new_u[i]
+                sig_block = np.stack([kb.signatures[i] for i in changed])
+                rows_p, sig_p = _pad_row_update(rows, sig_block)
+                self.doc_sigs = self.doc_sigs.at[rows_p].set(
+                    jnp.asarray(sig_p)
+                )
+        else:
+            # layout changed: restack cached rows on the host (pure
+            # memcpy for unchanged docs — no re-vectorization)
+            u = np.zeros((len(new_ids), kb.dim), np.float32)
+            sig = np.zeros((len(new_ids), kb.sig_words), np.int32)
+            old_sig = np.asarray(self.doc_sigs)
+            for r, i in enumerate(new_ids):
+                if i in new_u:
+                    u[r] = new_u[i]
+                    sig[r] = kb.signatures[i]
+                else:
+                    old_r = self._row_of[i]
+                    u[r] = self._u[old_r]
+                    sig[r] = old_sig[old_r]
+            self._u = u
+            self.doc_sigs = jnp.asarray(sig)
+            self.doc_ids = new_ids
+            self._row_of = {i: r for r, i in enumerate(new_ids)}
+            stats.restacked = True
+
+        idf = kb.vectorizer.idf()
+        if stats.restacked or not np.array_equal(idf, self._idf):
+            # idf moved: the cheap global stage — elementwise reweight +
+            # renormalize of the cached U, nothing re-vectorized
+            self._idf = idf
+            self.doc_vecs = jnp.asarray(kb.vectorizer.finalize_matrix(self._u))
+            stats.reweighted = True
+            self._qcache.clear()  # query vectors depend on idf
+        elif changed:
+            # idf stable: patch only the dirty rows on device
+            rows = np.array([self._row_of[i] for i in changed], np.int32)
+            block = kb.vectorizer.finalize_matrix(self._u[rows])
+            rows_p, block_p = _pad_row_update(rows, block)
+            self.doc_vecs = self.doc_vecs.at[rows_p].set(jnp.asarray(block_p))
+            stats.rows_patched = len(rows)
+
+    # ---- query-vector cache --------------------------------------------
+
+    def _query_arrays(self, text: str) -> tuple[np.ndarray, np.ndarray]:
+        key = normalize(text)
+        hit = self._qcache.get(key)
+        if hit is not None:
+            self._qcache.move_to_end(key)
+            self.cache_hits += 1
+            return hit
+        self.cache_misses += 1
+        out = (
+            self.kb.vectorizer.query_vector(text),
+            sigmod.query_signature(text, width_words=self.kb.sig_words),
+        )
+        self._qcache[key] = out
+        if len(self._qcache) > self.cache_size:
+            self._qcache.popitem(last=False)
+        return out
+
+    # ---- batched queries ------------------------------------------------
+
+    def query_batch(
+        self, texts: list[str], k: int = 5
+    ) -> list[list[RetrievalResult]]:
+        """Retrieve top-k for every query; one device dispatch per chunk.
+
+        Results per query are identical (bit-identical with the default
+        ``gemm_batch=False``) to ``Retriever.query`` on the same KB.
+        """
+        self.refresh()
+        if not self.doc_ids or not texts:
+            return [[] for _ in texts]
+        out: list[list[RetrievalResult]] = []
+        for start in range(0, len(texts), self.max_batch):
+            out.extend(self._query_chunk(texts[start: start + self.max_batch], k))
+        return out
+
+    def query(self, text: str, k: int = 5) -> list[RetrievalResult]:
+        """Single-query convenience wrapper (batch of one)."""
+        return self.query_batch([text], k)[0]
+
+    def _query_chunk(
+        self, texts: list[str], k: int
+    ) -> list[list[RetrievalResult]]:
+        b = len(texts)
+        pairs = [self._query_arrays(t) for t in texts]
+        bucket = _bucket(b)
+        qv = np.zeros((bucket, self.kb.dim), np.float32)
+        qs = np.zeros((bucket, self.kb.sig_words), np.int32)
+        for i, (v, s) in enumerate(pairs):
+            qv[i] = v
+            qs[i] = s
+        n = len(self.doc_ids)
+        k_eff = min(k, n)
+        if self.use_kernel:
+            vals, idx, cos = _score_topk_pallas(
+                self.doc_vecs, self.doc_sigs,
+                jnp.asarray(qv), jnp.asarray(qs),
+                k=k_eff, alpha=self.alpha, beta=self.beta,
+            )
+        else:
+            vals, idx, cos = _score_topk(
+                self.doc_vecs, self.doc_sigs,
+                jnp.asarray(qv), jnp.asarray(qs),
+                k=k_eff, alpha=self.alpha, beta=self.beta,
+                gemm=self.gemm_batch,
+            )
+        vals = np.asarray(vals)
+        idx = np.asarray(idx)
+        cos = np.asarray(cos)
+        out = []
+        for i in range(b):
+            row = []
+            for v, j, c in zip(vals[i], idx[i], cos[i]):
+                row.append(
+                    RetrievalResult(
+                        doc_id=self.doc_ids[int(j)],
+                        score=float(v),
+                        cosine=float(c),
+                        boosted=bool(
+                            float(v) - self.alpha * float(c) > 0.5 * self.beta
+                        ),
+                    )
+                )
+            out.append(row)
+        return out
+
+    # ---- introspection ---------------------------------------------------
+
+    @property
+    def n_docs(self) -> int:
+        return len(self.doc_ids)
+
+    def cache_stats(self) -> dict:
+        return {
+            "hits": self.cache_hits,
+            "misses": self.cache_misses,
+            "entries": len(self._qcache),
+            "capacity": self.cache_size,
+        }

@@ -13,7 +13,9 @@ Cost is O(U) in *updated* files — the expensive stages (extraction,
 tokenization, signature construction) are only run for the delta.  The
 cheap global stage (IDF re-weighting + matrix materialization) is a single
 vectorized pass; it is deferred until `materialize()` so a burst of syncs
-pays it once.
+pays it once.  Every mutation is also recorded in a dirty-row change log
+(`version` / `changes_since`) so the serving plane (core/engine.py) can
+patch its device-resident arrays incrementally instead of rebuilding.
 
 Modality frontends: text/CSV/JSON extractors are real; PDF/image/DOCX are
 **stubs** per the task rules (the paper uses ONNX OCR — a model frontend
@@ -163,6 +165,8 @@ class DocRecord:
     sha256: str
     modality: str
     mtime: float
+    size: int = -1      # -1 = unknown (pre-size containers, add_text docs)
+    mtime_ns: int = -1  # ns mtime for the O(stat) quick check; -1 = unarmed
 
 
 @dataclass
@@ -185,6 +189,12 @@ class KnowledgeBase:
     _doc_ids: list[str] | None = None
     _sig_matrix: np.ndarray | None = None
     _postings: PostingsIndex | None = None
+    # dirty-row change log for incremental query-plane refresh
+    # (core/engine.py): doc id → version of the mutation that last
+    # touched it.  ``version`` increases on every add/update/remove.
+    _version: int = 0
+    _changed_at: dict[str, int] = field(default_factory=dict)
+    _removed_at: dict[str, int] = field(default_factory=dict)
 
     def __post_init__(self):
         if self.vectorizer is None:
@@ -192,30 +202,82 @@ class KnowledgeBase:
 
     # ---- pipeline for a single document --------------------------------
 
-    def _ingest_doc(self, path: str, data: bytes, digest: str, mtime: float):
+    def _ingest_doc(self, path: str, data: bytes, digest: str, mtime: float,
+                    size: int = -1, mtime_ns: int = -1):
         text, kind = extract(data, path)
         if path in self.term_counts:  # changed file: retire old stats
             self.vectorizer.remove_doc(self.term_counts[path])
         tc = TermCounts.from_text(text)
         self.vectorizer.add_doc(tc)
-        self.records[path] = DocRecord(path, digest, kind, mtime)
+        self.records[path] = DocRecord(path, digest, kind, mtime, size,
+                                       mtime_ns)
         self.texts[path] = text
         self.term_counts[path] = tc
         self.signatures[path] = sigmod.signature_of_text(
             text, width_words=self.sig_words
         )
+        self._version += 1
+        self._changed_at[path] = self._version
+        self._removed_at.pop(path, None)
         self._dirty = True
+
+    # Removal-log bound: entries beyond this are dropped oldest-first.
+    # Consumers must treat the removed list as advisory (the engine
+    # derives actual removals from the doc-id set, see core/engine.py);
+    # only removal *stats* can undercount for consumers further than
+    # this many deletions behind.
+    REMOVED_LOG_MAX = 4096
 
     def _remove_doc(self, path: str):
         self.vectorizer.remove_doc(self.term_counts.pop(path))
         self.records.pop(path)
         self.texts.pop(path)
         self.signatures.pop(path)
+        self._version += 1
+        self._changed_at.pop(path, None)
+        self._removed_at[path] = self._version
+        while len(self._removed_at) > self.REMOVED_LOG_MAX:
+            self._removed_at.pop(next(iter(self._removed_at)))
         self._dirty = True
+
+    # ---- dirty-row accounting (consumed by core/engine.py) --------------
+
+    @property
+    def version(self) -> int:
+        """Monotonic mutation counter (0 = as-constructed/loaded)."""
+        return self._version
+
+    def changes_since(self, version: int) -> tuple[list[str], list[str]]:
+        """(changed_ids, removed_ids) strictly after ``version``.
+
+        ``changed`` covers both new and updated documents; a doc that
+        was removed and re-added since ``version`` appears only in
+        ``changed``.  Ids are sorted for deterministic consumption.
+        ``removed`` is advisory (bounded by ``REMOVED_LOG_MAX``):
+        consumers must derive authoritative removals from the current
+        ``records`` key set, as core/engine.py does.
+        """
+        changed = sorted(
+            p for p, v in self._changed_at.items() if v > version
+        )
+        removed = sorted(
+            p for p, v in self._removed_at.items() if v > version
+        )
+        return changed, removed
 
     # ---- the paper's incremental sync ----------------------------------
 
-    def sync(self, source_dir: str) -> IngestStats:
+    def sync(self, source_dir: str, verify_hashes: bool = False) -> IngestStats:
+        """Incremental directory sync (paper §3.3).
+
+        Unchanged files are skipped by an O(stat) quick check
+        (size + nanosecond mtime, rsync-style) before falling back to
+        the content hash.  On filesystems with coarse mtime granularity
+        a same-size in-place edit inside one timestamp tick could evade
+        the quick check — pass ``verify_hashes=True`` to force content
+        hashing for every scanned file (the paper's original O(N·hash)
+        scan).
+        """
         t0 = time.perf_counter()
         stats = IngestStats()
         seen: set[str] = set()
@@ -225,14 +287,26 @@ class KnowledgeBase:
                 rel = os.path.relpath(full, source_dir)
                 seen.add(rel)
                 stats.scanned += 1
+                rec = self.records.get(rel)
+                st = os.stat(full)
+                if (not verify_hashes
+                        and rec is not None and rec.size >= 0
+                        and rec.mtime_ns >= 0
+                        and rec.size == st.st_size
+                        and rec.mtime_ns == st.st_mtime_ns):
+                    stats.skipped += 1  # O(stat) fast path: no read, no hash
+                    continue
                 with open(full, "rb") as f:
                     data = f.read()
                 digest = hashlib.sha256(data).hexdigest()
-                rec = self.records.get(rel)
                 if rec is not None and rec.sha256 == digest:
-                    stats.skipped += 1  # the O(U) fast path
+                    stats.skipped += 1  # content unchanged (e.g. touch)
+                    rec.mtime = st.st_mtime  # re-arm the stat fast path
+                    rec.size = st.st_size
+                    rec.mtime_ns = st.st_mtime_ns
                     continue
-                self._ingest_doc(rel, data, digest, os.path.getmtime(full))
+                self._ingest_doc(rel, data, digest, st.st_mtime, st.st_size,
+                                 st.st_mtime_ns)
                 if rec is None:
                     stats.added += 1
                 else:

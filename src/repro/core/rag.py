@@ -6,6 +6,12 @@ LM serving path (prefill + greedy decode with KV caches) — the paper
 treats the LLM as a black box; we treat it as the generation plane of
 the same framework.
 
+Serving is batched at the retrieval tier: ``answer_batch`` scores all
+questions in one ``QueryEngine.query_batch`` dispatch (core/engine.py),
+then generates per question (prompt lengths differ, so generation stays
+per-request; retrieval is where multi-user batching pays — see
+docs/ARCHITECTURE.md §5).
+
 Tokenization for the LM uses the same stable hashing as the retrieval
 plane (word → fnv1a64 mod vocab): real deployments plug a trained
 subword tokenizer here (one `text_to_tokens` function), and nothing
@@ -19,8 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hashing
+from repro.core.engine import QueryEngine
 from repro.core.ingest import KnowledgeBase
-from repro.core.retrieval import RetrievalResult, Retriever
+from repro.core.retrieval import RetrievalResult
 from repro.core.tokenizer import tokenize
 from repro.models import transformer as T
 
@@ -45,11 +52,11 @@ class RAGPipeline:
     alpha: float = 1.0
     beta: float = 1.0
     use_kernel: bool = False
-    _retriever: Retriever = field(default=None, init=False, repr=False)
+    engine: QueryEngine = field(default=None, init=False, repr=False)
 
     def __post_init__(self):
-        self._retriever = Retriever(self.kb, self.alpha, self.beta,
-                                    use_kernel=self.use_kernel)
+        self.engine = QueryEngine(self.kb, self.alpha, self.beta,
+                                  use_kernel=self.use_kernel)
 
     def _pack_context(self, results: list[RetrievalResult]) -> list[int]:
         """Greedy context packing: best-scored docs first, truncated to
@@ -66,7 +73,30 @@ class RAGPipeline:
 
     def answer(self, question: str, max_new_tokens: int = 16,
                top_k_docs: int = 3) -> RAGOutput:
-        results = self._retriever.query(question, k=top_k_docs)
+        return self.answer_batch([question], max_new_tokens=max_new_tokens,
+                                 top_k_docs=top_k_docs)[0]
+
+    def answer_batch(self, questions: list[str], max_new_tokens: int = 16,
+                     top_k_docs: int = 3) -> list[RAGOutput]:
+        """Serve a request batch: one retrieval dispatch, then generate.
+
+        Retrieval results per question are identical to serial
+        ``answer`` calls (the engine's bit-stability contract), so
+        batching changes throughput, never answers.
+        """
+        retrieved = self.engine.query_batch(questions, k=top_k_docs)
+        return [
+            self.generate(question, results, max_new_tokens)
+            for question, results in zip(questions, retrieved)
+        ]
+
+    def generate(self, question: str, results: list[RetrievalResult],
+                 max_new_tokens: int) -> RAGOutput:
+        """Generation stage alone: pack pre-retrieved context + decode.
+
+        Public so drivers can time retrieval (``engine.query_batch``)
+        and generation separately while staying on the library path.
+        """
         prompt = self._pack_context(results) + text_to_tokens(
             question, self.cfg.vocab
         )

@@ -1,9 +1,9 @@
 """Retrieval engine: edge-parity single-device path + mesh-sharded path.
 
-Sharding design (DESIGN.md §5): documents are range-partitioned along the
-*flattened* mesh (every axis participates — retrieval has no tensor
-dimension worth model-parallelism, so all 256/512 devices hold disjoint
-doc shards).  Per query:
+Sharding design (docs/ARCHITECTURE.md §4): documents are
+range-partitioned along the *flattened* mesh (every axis participates —
+retrieval has no tensor dimension worth model-parallelism, so all
+256/512 devices hold disjoint doc shards).  Per query:
 
     local HSF scores  →  local top-k  →  all_gather((k vals, k ids))
                       →  global top-k merge (replicated)
@@ -12,22 +12,25 @@ The collective payload is O(k · n_shards) scalars — independent of corpus
 size — which is what makes retrieval collective-trivial at pod scale.
 
 Determinism: HSF is pure arithmetic, so the sharded result equals the
-single-device result exactly (tested in tests/test_retrieval_sharded.py).
+single-device result exactly (tested in tests/test_sharded.py).
 Ties are broken by document index (lower wins) to keep that equality
 bit-stable.
+
+The single-process ``Retriever`` here is a thin compatibility wrapper
+over the batched ``QueryEngine`` (core/engine.py) — the serving-time
+entry point with incremental materialization and a query cache.
 """
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import hsf, signature as sigmod
+from repro.core import hsf
+from repro.core.engine import QueryEngine, RetrievalResult  # noqa: F401 — re-export
 from repro.core.ingest import KnowledgeBase
 
 shard_map = jax.shard_map
@@ -53,16 +56,14 @@ def _stable_top_k(scores: jnp.ndarray, ids: jnp.ndarray, k: int):
 # edge-parity retriever (the paper's laptop deployment)
 # --------------------------------------------------------------------------
 
-@dataclass
-class RetrievalResult:
-    doc_id: str
-    score: float
-    cosine: float
-    boosted: bool
-
-
 class Retriever:
     """Single-process retriever over a KnowledgeBase (paper's deployment).
+
+    Thin single-query wrapper over the batched ``QueryEngine`` — kept
+    for API compatibility; multi-query serving should call
+    ``QueryEngine.query_batch`` directly.  Unlike the pre-engine
+    implementation, queries see KB mutations automatically (the engine
+    refreshes incrementally from the KB's dirty log).
 
     ``prefilter=True`` uses the ⟨I⟩-region postings to restrict HSF
     scoring to documents sharing at least one query term — sub-linear
@@ -70,6 +71,9 @@ class Retriever:
     substring matches inside *longer tokens* have no shared term and are
     only found by the full scan, so prefiltering is an opt-in
     accelerator (exact for whole-token queries, e.g. entity codes).
+    The prefilter path keeps its own candidate-subset scoring (dynamic
+    shapes don't batch) and is not part of the engine's bit-stability
+    contract.
     """
 
     def __init__(
@@ -79,30 +83,57 @@ class Retriever:
         beta: float = hsf.DEFAULT_BETA,
         use_kernel: bool = False,
         prefilter: bool = False,
+        engine: QueryEngine | None = None,
     ):
         self.kb = kb
         self.alpha = alpha
         self.beta = beta
         self.use_kernel = use_kernel
         self.prefilter = prefilter
-        matrix, sigs, ids = kb.materialize()
-        self.doc_vecs = jnp.asarray(matrix)
-        self.doc_sigs = jnp.asarray(sigs)
-        self.doc_ids = ids
+        if engine is not None and (
+            engine.kb is not kb
+            or engine.alpha != alpha
+            or engine.beta != beta
+            or engine.use_kernel != use_kernel
+            or engine.gemm_batch  # would break single-query bit-stability
+        ):
+            raise ValueError(
+                "shared engine disagrees with Retriever parameters "
+                f"(engine: same_kb={engine.kb is kb} alpha={engine.alpha} "
+                f"beta={engine.beta} use_kernel={engine.use_kernel})"
+            )
+        self.engine = engine or QueryEngine(
+            kb, alpha=alpha, beta=beta, use_kernel=use_kernel
+        )
+
+    # materialized state lives in the engine; expose it for compat
+    @property
+    def doc_vecs(self):
+        return self.engine.doc_vecs
+
+    @property
+    def doc_sigs(self):
+        return self.engine.doc_sigs
+
+    @property
+    def doc_ids(self):
+        return self.engine.doc_ids
 
     def query(self, text: str, k: int = 5) -> list[RetrievalResult]:
+        if not self.prefilter:
+            return self.engine.query(text, k)
+        return self._query_prefiltered(text, k)
+
+    def _query_prefiltered(self, text: str, k: int) -> list[RetrievalResult]:
+        self.engine.refresh()
         if not self.doc_ids:
             return []
-        q_vec = jnp.asarray(self.kb.vectorizer.query_vector(text))
-        q_sig = jnp.asarray(
-            sigmod.query_signature(text, width_words=self.kb.sig_words)
+        qv, qs = self.engine._query_arrays(text)
+        q_vec, q_sig = jnp.asarray(qv), jnp.asarray(qs)
+        cand = self.kb.postings().candidates(
+            text, mode="union",
+            max_candidates=max(256, len(self.doc_ids) // 4),
         )
-        cand = None
-        if self.prefilter:
-            cand = self.kb.postings().candidates(
-                text, mode="union",
-                max_candidates=max(256, len(self.doc_ids) // 4),
-            )
         if cand is not None and len(cand) == 0:
             return []
         doc_vecs, doc_sigs = self.doc_vecs, self.doc_sigs

@@ -1,5 +1,5 @@
 """N-gram Bloom signatures — the TPU-native form of the paper's substring
-indicator (DESIGN.md §3).
+indicator (docs/ARCHITECTURE.md §3).
 
 Paper (§4.2): ``1_substr(Q, D) = 1 if lowercase(Q) ⊆ lowercase(D)``.
 A byte-scan is unvectorizable on a TPU VPU, so we encode each document's

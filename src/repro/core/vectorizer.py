@@ -6,7 +6,7 @@ Paper formulas (kept exactly):
     idf(t)    = ln(N / (1 + df_t)) + 1
     v_d       = l2_normalize( [tf·idf]_t )
 
-Adaptation (DESIGN.md §3): the paper stores vocabulary-dimensional sparse
+Adaptation (docs/ARCHITECTURE.md §2): the paper stores vocabulary-dimensional sparse
 vectors; a TPU MXU wants dense, bounded-width operands.  We apply *signed
 feature hashing* (hashing trick): term t → bucket ``h(t) mod D`` with sign
 ``±1`` from a decorrelated hash bit.  Cosine similarity is preserved in
@@ -75,27 +75,32 @@ class HashedTfIdf:
             np.float32
         )
 
-    def _weights(self, tc: TermCounts, idf: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        buckets, signs = bucket_sign(tc.term_hashes, self.dim)
-        tf = 1.0 + np.log(tc.counts.astype(np.float32))
-        w = tf * idf[buckets] * signs.astype(np.float32)
-        return buckets, w
+    # ---- factored materialization: U (per-doc) × idf (global) ----------
+    #
+    # The weighted row of a document factors as
+    #     v_d = normalize( u_d ⊙ idf ),   u_d[b] = Σ_{t: h(t)=b} tf(t)·sign(t)
+    # where u_d depends ONLY on the document and idf ONLY on global df.
+    # That split is what makes query-plane refresh O(U): unchanged docs
+    # keep their cached u_d rows and only the cheap elementwise
+    # reweight + renormalize pass is global (core/engine.py).  The sign
+    # multiply is exact (±1), so the factored form is deterministic.
 
-    def doc_vector(self, tc: TermCounts, idf: np.ndarray | None = None) -> np.ndarray:
-        """Dense ℓ2-normalized doc vector (float32 [dim])."""
-        if idf is None:
-            idf = self.idf()
+    def unweighted_row(self, tc: TermCounts) -> np.ndarray:
+        """tf·sign scatter of one document — no idf, no normalization.
+
+        Bit-identical to the corresponding row of
+        ``build_unweighted_matrix`` (same scatter-add order), which is
+        what lets the incremental engine patch single rows.
+        """
         v = np.zeros((self.dim,), dtype=np.float32)
         if tc.term_hashes.size:
-            buckets, w = self._weights(tc, idf)
-            np.add.at(v, buckets, w)
-            norm = np.linalg.norm(v)
-            if norm > 0:
-                v /= norm
+            buckets, signs = bucket_sign(tc.term_hashes, self.dim)
+            tf = 1.0 + np.log(tc.counts.astype(np.float32))
+            np.add.at(v, buckets, tf * signs.astype(np.float32))
         return v
 
-    def build_matrix(self, term_counts: list[TermCounts]) -> np.ndarray:
-        """Vectorized batch build of the weighted doc matrix [n, dim].
+    def build_unweighted_matrix(self, term_counts: list[TermCounts]) -> np.ndarray:
+        """Batch tf·sign scatter, float32 [n, dim].
 
         One concatenated scatter-add instead of a per-doc loop — this is
         the same bag-accumulation dataflow as the recsys EmbeddingBag
@@ -106,21 +111,41 @@ class HashedTfIdf:
         out = np.zeros((n, self.dim), dtype=np.float32)
         if n == 0:
             return out
-        idf = self.idf()
         rows, cols, vals = [], [], []
         for i, tc in enumerate(term_counts):
             if tc.term_hashes.size == 0:
                 continue
-            buckets, w = self._weights(tc, idf)
+            buckets, signs = bucket_sign(tc.term_hashes, self.dim)
+            tf = 1.0 + np.log(tc.counts.astype(np.float32))
             rows.append(np.full(buckets.shape, i, dtype=np.int64))
             cols.append(buckets.astype(np.int64))
-            vals.append(w)
+            vals.append(tf * signs.astype(np.float32))
         if rows:
             flat = np.concatenate(rows) * self.dim + np.concatenate(cols)
             np.add.at(out.reshape(-1), flat, np.concatenate(vals))
+        return out
+
+    def finalize_matrix(self, unweighted: np.ndarray,
+                        idf: np.ndarray | None = None) -> np.ndarray:
+        """idf reweight + row ℓ2-normalize (the cheap global stage).
+
+        ``idf`` defaults to the live statistics; pass a snapshot to
+        reproduce vectors against archived df state.
+        """
+        if idf is None:
+            idf = self.idf()
+        out = unweighted * idf[None, :]
         norms = np.linalg.norm(out, axis=1, keepdims=True)
         np.divide(out, norms, out=out, where=norms > 0)
         return out
+
+    def doc_vector(self, tc: TermCounts, idf: np.ndarray | None = None) -> np.ndarray:
+        """Dense ℓ2-normalized doc vector (float32 [dim])."""
+        return self.finalize_matrix(self.unweighted_row(tc)[None, :], idf)[0]
+
+    def build_matrix(self, term_counts: list[TermCounts]) -> np.ndarray:
+        """Weighted, normalized doc matrix [n, dim] (cold build)."""
+        return self.finalize_matrix(self.build_unweighted_matrix(term_counts))
 
     def query_vector(self, query: str) -> np.ndarray:
         """Vectorize a query with the *current* idf statistics."""

@@ -1,11 +1,13 @@
 """RAG serving driver: knowledge container + generation plane.
 
 Loads (or builds) a knowledge container, instantiates the retrieval
-tier and an LM, and serves batched requests: retrieve (HSF) → pack →
-prefill → decode.
+tier and an LM, and serves batched requests: batched retrieve (one
+QueryEngine dispatch per request batch) → pack → prefill → decode,
+with per-batch timing split into retrieval vs generation.
 
     PYTHONPATH=src python -m repro.launch.serve \
-        --corpus /path/to/docs --queries "what is INV-2024?" ...
+        --corpus /path/to/docs --batch-size 8 \
+        --queries "what is INV-2024?" ...
 """
 from __future__ import annotations
 
@@ -30,6 +32,8 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=3)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--dim", type=int, default=4096)
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="requests per retrieval dispatch")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route HSF scoring through the Pallas kernel")
     args = ap.parse_args(argv)
@@ -52,16 +56,31 @@ def main(argv=None):
     params = T.init(jax.random.PRNGKey(0), cfg)
     rag = RAGPipeline(kb, params, cfg, use_kernel=args.use_kernel)
 
-    for q in args.queries:
+    queries = args.queries
+    batch_size = max(1, args.batch_size)
+    for start in range(0, len(queries), batch_size):
+        batch = queries[start: start + batch_size]
         t0 = time.perf_counter()
-        out = rag.answer(q, max_new_tokens=args.max_new_tokens,
-                         top_k_docs=args.top_k)
-        dt = (time.perf_counter() - t0) * 1e3
-        print(f"\nQ: {q}   ({dt:.1f} ms)")
-        for r in out.retrieved:
-            mark = "*" if r.boosted else " "
-            print(f"  {mark} {r.doc_id:30s} score={r.score:.4f}")
-        print(f"  generated token ids: {out.token_ids}")
+        retrieved = rag.engine.query_batch(batch, k=args.top_k)
+        t_retrieve = time.perf_counter() - t0
+        outs = [
+            rag.generate(q, res, args.max_new_tokens)
+            for q, res in zip(batch, retrieved)
+        ]
+        t_batch = time.perf_counter() - t0
+        print(f"\nbatch [{start}:{start + len(batch)}]: "
+              f"retrieve {t_retrieve * 1e3:.1f} ms "
+              f"({t_retrieve / len(batch) * 1e3:.2f} ms/q), "
+              f"total {t_batch * 1e3:.1f} ms")
+        for q, out in zip(batch, outs):
+            print(f"Q: {q}")
+            for r in out.retrieved:
+                mark = "*" if r.boosted else " "
+                print(f"  {mark} {r.doc_id:30s} score={r.score:.4f}")
+            print(f"  generated token ids: {out.token_ids}")
+    hits = rag.engine.cache_stats()
+    print(f"\nquery cache: {hits['hits']} hits / "
+          f"{hits['hits'] + hits['misses']} lookups")
     return 0
 
 

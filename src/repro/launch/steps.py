@@ -7,7 +7,7 @@ returns (jitted step, abstract args) such that
 param/optimizer sharding, input sharding, KV-cache sharding, MoE
 dispatch locality, embedding-table psum lookups — is coherent.
 
-Sharding scheme (DESIGN.md §5):
+Sharding scheme (docs/ARCHITECTURE.md §6):
 - params: FSDP over 'data' × TP over 'model' per matrix (rules below);
   optimizer m/v mirror params (ZeRO via specs).
 - LM train: grad-accumulation scan over microbatches (per-device live
@@ -188,8 +188,9 @@ def kv_repeat_for(cfg: T.LMConfig, mesh) -> int:
     """KV replication factor giving clean head sharding, if one exists.
 
     Requires q heads to divide TP (else attention is head-misaligned
-    regardless — e.g. llama3.2's 24 q heads on TP=16, noted in
-    EXPERIMENTS.md) and the replicated KV head count to divide q heads.
+    regardless — e.g. llama3.2's 24 q heads on TP=16, noted in the
+    generated EXPERIMENTS.md report) and the replicated KV head count
+    to divide q heads.
     """
     tp = mesh.shape.get("model", 1)
     if cfg.mla is not None or tp <= 1:

@@ -15,7 +15,7 @@ Structure kept from the paper:
   within each l is orthogonal),
 - per-layer residual update + linear readout, summed per graph.
 
-Simplification vs. full MACE (recorded in DESIGN.md): inter-layer
+Simplification vs. full MACE (recorded here for traceability): inter-layer
 messages carry the scalar channel only — the full Clebsch-Gordan
 recoupling of l>0 features across layers is replaced by the complete set
 of degree-≤3 invariant products.  Consequence: the model is exactly

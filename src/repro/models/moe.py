@@ -44,7 +44,7 @@ _CTX = threading.local()
 
 # Cost-exact surrogate (roofline only): XLA cost_analysis charges
 # lax.ragged_dot as if every row visited every expert (measured (G+1)×
-# the true 2·M·K·N — probe in EXPERIMENTS §Roofline).  When set, the
+# the true 2·M·K·N — probed by benchmarks/roofline.py).  When set, the
 # grouped GEMMs are replaced by one dense matmul against expert 0 —
 # *identical true FLOP count* (each row × one expert), counted
 # correctly.  Never set outside benchmarks/roofline.py; weight-READ

@@ -10,8 +10,8 @@ At 1000+ nodes, node loss is routine; the framework's contract is:
      DataCursor step to resume from;
   4. workers restart, restore bit-exact state, and replay the data
      stream from the cursor — the loss curve continues as if the
-     failure never happened (tested in tests/test_fault.py via a
-     simulated kill-restore-replay cycle).
+     failure never happened (tested in tests/test_checkpoint_runtime.py
+     via a simulated kill-restore-replay cycle).
 
 This module is runnable logic (driven by the tests and by
 launch/train.py's single-host simulation), not a daemon — the

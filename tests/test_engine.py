@@ -1,0 +1,327 @@
+"""QueryEngine contracts: batched scoring is bit-identical to the
+single-query Retriever, incremental materialization equals a cold
+rebuild bit-exactly, and the query cache never changes results."""
+import numpy as np
+import pytest
+
+from repro.core.engine import QueryEngine, _bucket
+from repro.core.ingest import KnowledgeBase
+from repro.core.retrieval import Retriever
+from repro.data.corpus import make_corpus
+
+
+def _kb(n_docs=80, dim=1024, n_entities=6, seed=0):
+    docs, entities = make_corpus(n_docs=n_docs, n_entities=n_entities,
+                                 seed=seed)
+    kb = KnowledgeBase(dim=dim)
+    for i, d in enumerate(docs):
+        kb.add_text(f"doc_{i:05d}.txt", d)
+    return kb, entities
+
+
+def _queries(entities):
+    return (
+        [code for code in entities]
+        + [f"lookup {code} record" for code in entities]
+        + ["quarterly forecast", "unrelated text", ""]
+    )
+
+
+# --------------------------------------------------------------------------
+# batched == looped (scores, ids, tie order — bit-identical)
+# --------------------------------------------------------------------------
+
+def test_query_batch_bit_identical_to_looped_retriever():
+    kb, entities = _kb()
+    engine = QueryEngine(kb)
+    retriever = Retriever(kb)
+    queries = _queries(entities)
+
+    batch = engine.query_batch(queries, k=5)
+    assert len(batch) == len(queries)
+    for q, got in zip(queries, batch):
+        want = retriever.query(q, k=5)
+        assert [r.doc_id for r in got] == [r.doc_id for r in want], q
+        # bit-identical, not approx: same floats out of both paths
+        assert [r.score for r in got] == [r.score for r in want], q
+        assert [r.cosine for r in got] == [r.cosine for r in want], q
+        assert [r.boosted for r in got] == [r.boosted for r in want], q
+
+
+def test_query_batch_independent_of_batch_composition():
+    """A query's results don't depend on what else is in the batch (the
+    padding-bucket contract)."""
+    kb, entities = _kb()
+    engine = QueryEngine(kb)
+    queries = _queries(entities)
+    alone = [engine.query_batch([q], k=3)[0] for q in queries]
+    together = engine.query_batch(queries, k=3)
+    for q, a, t in zip(queries, alone, together):
+        assert [(r.doc_id, r.score) for r in a] == \
+            [(r.doc_id, r.score) for r in t], q
+
+
+def test_query_batch_kernel_path_bit_identical():
+    kb, entities = _kb(n_docs=64)
+    engine = QueryEngine(kb, use_kernel=True)
+    retriever = Retriever(kb, use_kernel=True)
+    for q in list(entities)[:3]:
+        got = engine.query_batch([q, "decoy query"], k=4)[0]
+        want = retriever.query(q, k=4)
+        assert [(r.doc_id, r.score) for r in got] == \
+            [(r.doc_id, r.score) for r in want]
+
+
+def test_tie_order_matches_between_batch_and_single():
+    """Duplicate docs produce exact score ties; both paths must break
+    them identically (lax.top_k order)."""
+    kb = KnowledgeBase(dim=512)
+    for i in range(12):
+        kb.add_text(f"dup_{i:02d}", "identical tie content INV-7777")
+    engine = QueryEngine(kb)
+    retriever = Retriever(kb)
+    got = engine.query_batch(["INV-7777"], k=6)[0]
+    want = retriever.query("INV-7777", k=6)
+    assert [r.doc_id for r in got] == [r.doc_id for r in want]
+    assert len({r.score for r in got}) == 1  # genuinely tied
+
+
+# --------------------------------------------------------------------------
+# incremental materialization == cold rebuild (bit-exact device arrays)
+# --------------------------------------------------------------------------
+
+def _assert_matches_cold(engine, kb):
+    matrix, sigs, ids = kb.materialize()
+    assert engine.doc_ids == ids
+    np.testing.assert_array_equal(np.asarray(engine.doc_vecs), matrix)
+    np.testing.assert_array_equal(np.asarray(engine.doc_sigs), sigs)
+
+
+def test_incremental_refresh_add_update_remove_equals_cold():
+    kb, _ = _kb(n_docs=50)
+    engine = QueryEngine(kb)
+    v0 = kb.version
+
+    kb.add_text("zz_new_doc", "a brand new document QQ-1111")   # add
+    stats = engine.refresh()
+    assert stats.changed == 1 and stats.restacked
+    _assert_matches_cold(engine, kb)
+
+    kb.add_text("doc_00007.txt", "doc seven rewritten RR-2222")  # update
+    stats = engine.refresh()
+    assert stats.changed == 1 and stats.removed == 0
+    assert not stats.restacked  # same layout: rows patched, not restacked
+    _assert_matches_cold(engine, kb)
+
+    kb._remove_doc("doc_00003.txt")                              # remove
+    stats = engine.refresh()
+    assert stats.removed == 1 and stats.restacked
+    _assert_matches_cold(engine, kb)
+
+    assert kb.version > v0
+    assert engine.refresh().no_op  # converged: next refresh does nothing
+
+
+def test_refresh_does_not_revectorize_unchanged_docs(monkeypatch):
+    kb, _ = _kb(n_docs=40)
+    engine = QueryEngine(kb)
+    kb.add_text("doc_00001.txt", "updated content for doc one SS-3333")
+
+    calls = []
+    orig = kb.vectorizer.unweighted_row
+    monkeypatch.setattr(
+        kb.vectorizer, "unweighted_row",
+        lambda tc: (calls.append(1), orig(tc))[1],
+    )
+    stats = engine.refresh()
+    assert stats.changed == 1
+    assert len(calls) == 1  # exactly the dirty doc, nothing else
+    _assert_matches_cold(engine, kb)
+
+
+def test_sync_driven_refresh_equals_cold(tmp_path):
+    from repro.data.corpus import write_corpus_dir
+
+    docs, _ = make_corpus(n_docs=30, seed=4)
+    src = str(tmp_path / "corpus")
+    write_corpus_dir(src, docs)
+    kb = KnowledgeBase(dim=512)
+    kb.sync(src)
+    engine = QueryEngine(kb)
+
+    # touch 3 files, delete 1, add 1 — the paper's incremental loop
+    for i in range(3):
+        with open(f"{src}/doc_{i:05d}.txt", "a") as f:
+            f.write(" appended TT-4444")
+    import os
+    os.unlink(f"{src}/doc_00010.txt")
+    with open(f"{src}/doc_99999.txt", "w") as f:
+        f.write("entirely new corpus member UU-5555")
+    stats_sync = kb.sync(src)
+    assert stats_sync.updated == 3 and stats_sync.removed == 1 \
+        and stats_sync.added == 1
+
+    stats = engine.refresh()
+    assert stats.changed == 4 and stats.removed == 1
+    _assert_matches_cold(engine, kb)
+
+
+def test_queries_see_kb_mutations_automatically():
+    kb, _ = _kb(n_docs=20)
+    engine = QueryEngine(kb)
+    assert not any(
+        r.doc_id == "late_doc" for r in engine.query_batch(["VV-6666"], k=3)[0]
+    )
+    kb.add_text("late_doc", "late arrival about VV-6666 exactly")
+    top = engine.query_batch(["VV-6666"], k=1)[0][0]
+    assert top.doc_id == "late_doc" and top.boosted
+
+
+# --------------------------------------------------------------------------
+# query-vector LRU cache
+# --------------------------------------------------------------------------
+
+def test_cache_hits_return_identical_results():
+    kb, entities = _kb()
+    engine = QueryEngine(kb)
+    code = next(iter(entities))
+    first = engine.query_batch([code], k=5)[0]
+    assert engine.cache_stats()["hits"] == 0
+    second = engine.query_batch([code], k=5)[0]
+    assert engine.cache_stats()["hits"] == 1
+    assert [(r.doc_id, r.score, r.cosine) for r in first] == \
+        [(r.doc_id, r.score, r.cosine) for r in second]
+    # case-insensitive: normalization is the cache key
+    third = engine.query_batch([code.lower()], k=5)[0]
+    assert engine.cache_stats()["hits"] == 2
+    assert [(r.doc_id, r.score) for r in third] == \
+        [(r.doc_id, r.score) for r in first]
+
+
+def test_cache_invalidated_when_idf_changes():
+    kb, entities = _kb(n_docs=30)
+    engine = QueryEngine(kb)
+    code = next(iter(entities))
+    engine.query_batch([code], k=3)
+    kb.add_text("fresh", "completely fresh doc shifting idf")
+    engine.query_batch([code], k=3)  # auto-refresh must drop stale vecs
+    retriever = Retriever(kb)
+    got = engine.query_batch([code], k=3)[0]
+    want = retriever.query(code, k=3)
+    assert [(r.doc_id, r.score) for r in got] == \
+        [(r.doc_id, r.score) for r in want]
+
+
+def test_cache_eviction_is_lru():
+    kb, _ = _kb(n_docs=10)
+    engine = QueryEngine(kb, cache_size=2)
+    engine.query_batch(["alpha", "beta"], k=1)
+    engine.query_batch(["alpha"], k=1)        # alpha now most-recent
+    engine.query_batch(["gamma"], k=1)        # evicts beta
+    stats0 = engine.cache_stats()
+    engine.query_batch(["alpha"], k=1)        # still cached
+    assert engine.cache_stats()["hits"] == stats0["hits"] + 1
+    engine.query_batch(["beta"], k=1)         # was evicted → miss
+    assert engine.cache_stats()["misses"] == stats0["misses"] + 1
+
+
+# --------------------------------------------------------------------------
+# edges
+# --------------------------------------------------------------------------
+
+def test_empty_kb_and_empty_batch():
+    kb = KnowledgeBase(dim=512)
+    engine = QueryEngine(kb)
+    assert engine.query_batch(["anything"], k=3) == [[]]
+    assert engine.query_batch([], k=3) == []
+
+
+def test_k_larger_than_corpus():
+    kb, _ = _kb(n_docs=4, n_entities=2)
+    engine = QueryEngine(kb)
+    res = engine.query_batch(["whatever text"], k=50)[0]
+    assert len(res) == 4
+
+
+def test_bucket_boundaries():
+    assert [_bucket(b) for b in (1, 2, 3, 4, 5, 8, 9, 16, 17)] == \
+        [1, 2, 4, 4, 8, 8, 16, 16, 32]
+
+
+def test_oversized_batch_chunks():
+    kb, entities = _kb(n_docs=30)
+    engine = QueryEngine(kb, max_batch=4)
+    queries = [f"q {i} {code}" for i, code in
+               enumerate(list(entities) * 3)]  # 18 queries, chunked by 4
+    batch = engine.query_batch(queries, k=2)
+    assert len(batch) == len(queries)
+    retriever = Retriever(kb)
+    for q, got in zip(queries, batch):
+        want = retriever.query(q, k=2)
+        assert [(r.doc_id, r.score) for r in got] == \
+            [(r.doc_id, r.score) for r in want]
+
+
+def test_engine_adopts_persisted_matrix_without_revectorizing(
+        tmp_path, monkeypatch):
+    """A container saved with include_matrix=True exists to skip the
+    O(N·D) rebuild at load time (RQ3 trade) — the engine must honor it,
+    and its lazy u-cache must still make later deltas bit-exact."""
+    kb, _ = _kb(n_docs=40)
+    path = str(tmp_path / "kb.ragdb")
+    kb.save(path, include_matrix=True)
+    kb2 = KnowledgeBase.load(path)
+
+    calls = []
+    orig = kb2.vectorizer.build_unweighted_matrix
+    monkeypatch.setattr(
+        kb2.vectorizer, "build_unweighted_matrix",
+        lambda tcs: (calls.append(len(tcs)), orig(tcs))[1],
+    )
+    engine = QueryEngine(kb2)
+    assert calls == []  # persisted ⟨V⟩ adopted, nothing re-vectorized
+    _assert_matches_cold(engine, kb2)
+
+    kb2.add_text("doc_00002.txt", "rewritten after load WW-7777")
+    kb2._remove_doc("doc_00009.txt")
+    engine.refresh()  # u-cache builds lazily here
+    _assert_matches_cold(engine, kb2)
+
+
+def test_retriever_rejects_mismatched_shared_engine():
+    kb, _ = _kb(n_docs=10)
+    with pytest.raises(ValueError):
+        Retriever(kb, beta=0.0, engine=QueryEngine(kb))
+    with pytest.raises(ValueError):
+        Retriever(kb, engine=QueryEngine(kb, gemm_batch=True))
+
+
+def test_retriever_is_thin_wrapper_over_engine():
+    kb, entities = _kb(n_docs=20)
+    engine = QueryEngine(kb)
+    retriever = Retriever(kb, engine=engine)
+    assert retriever.engine is engine
+    code = next(iter(entities))
+    assert retriever.query(code, k=1)[0].doc_id == \
+        engine.query_batch([code], k=1)[0][0].doc_id
+    assert retriever.doc_ids == engine.doc_ids
+
+
+def test_rag_answer_batch_matches_serial_answers():
+    import jax
+
+    from repro.configs import ARCHS
+    from repro.core.rag import RAGPipeline
+    from repro.models import transformer as T
+
+    kb, entities = _kb(n_docs=20, dim=512)
+    cfg = ARCHS["llama3.2-3b"].smoke_config
+    params = T.init(jax.random.PRNGKey(0), cfg)
+    rag = RAGPipeline(kb, params, cfg, max_context_tokens=64)
+    questions = [f"what is {code}?" for code in list(entities)[:3]]
+    batched = rag.answer_batch(questions, max_new_tokens=3, top_k_docs=2)
+    for q, out in zip(questions, batched):
+        serial = rag.answer(q, max_new_tokens=3, top_k_docs=2)
+        assert out.token_ids == serial.token_ids
+        assert [r.doc_id for r in out.retrieved] == \
+            [r.doc_id for r in serial.retrieved]
