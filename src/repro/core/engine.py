@@ -17,7 +17,10 @@ the single-query `Retriever` could not give a multi-user deployment:
    mathematically equal but not bit-stable across batch sizes (BLAS
    reduction order depends on the M dimension); deployments that prefer
    MXU-saturating throughput over bit-stability opt in via
-   ``gemm_batch=True``.
+   ``gemm_batch=True`` — or via ``use_kernel=True``, which dispatches
+   the fused batched Pallas kernel (one pass over HBM, in-kernel top-k,
+   no [B, N] score intermediate; see kernels/hsf_score).  Both opt-in
+   paths return the same ranking with doc-index tie-breaking.
 
 2. **Incremental materialization** — the `KnowledgeBase` logs dirty rows
    on ``add_text``/``sync``/remove (``changes_since``); ``refresh()``
@@ -87,7 +90,10 @@ class RefreshStats:
 def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, *, k, alpha, beta, gemm):
     """HSF scores + top-k for a padded query batch.
 
-    Returns (vals [B,k], idx [B,k], cos [B,k]).  The non-gemm path keeps
+    Returns (vals [B,k], idx [B,k], cos [B,k], ind [B,k]) — ``ind`` is
+    the exact containment indicator of each selected doc (0.0/1.0), the
+    ground truth for the ``boosted`` flag (never inferred from float
+    score arithmetic, which misfires at β=0).  The non-gemm path keeps
     each query's reduction identical to the single-query matvec.
     """
     dv = doc_vecs.astype(jnp.float32)
@@ -98,26 +104,44 @@ def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, *, k, alpha, beta, gemm):
     ind = jax.vmap(lambda s: hsf.containment(doc_sigs, s))(q_sigs)
     scores = alpha * cos + beta * ind
     vals, idx = jax.lax.top_k(scores, k)
-    return vals, idx, jnp.take_along_axis(cos, idx, axis=1)
+    return (vals, idx, jnp.take_along_axis(cos, idx, axis=1),
+            jnp.take_along_axis(ind, idx, axis=1))
+
+
+def _selected_cos_ind(doc_vecs, doc_sigs, q_vecs, q_sigs, idx):
+    """Per-result cosine + exact containment for selected docs only —
+    O(B·k·D) instead of the O(B·N·D) full recompute."""
+    sel_vecs = jnp.take(doc_vecs, idx, axis=0).astype(jnp.float32)  # [B,k,D]
+    cos = jnp.einsum("bkd,bd->bk", sel_vecs, q_vecs.astype(jnp.float32))
+    sel_sigs = jnp.take(doc_sigs, idx, axis=0)                      # [B,k,W]
+    qs = q_sigs[:, None, :]
+    ind = jnp.all((sel_sigs & qs) == qs, axis=-1).astype(jnp.float32)
+    return cos, ind
 
 
 @partial(jax.jit, static_argnames=("k", "alpha", "beta"))
-def _score_topk_pallas(doc_vecs, doc_sigs, q_vecs, q_sigs, *, k, alpha, beta):
-    """Pallas-kernel scoring, mapped per query (kernels/hsf_score).
+def _score_topk_pallas(doc_vecs, doc_sigs, q_vecs, q_sigs, n_valid,
+                       *, k, alpha, beta):
+    """Fused batched Pallas path (kernels/hsf_score.hsf_score_batched).
 
-    ``lax.map`` keeps each query's kernel invocation identical to the
-    single-query path, preserving the bit-stability contract.
+    One kernel dispatch scores the whole query batch and reduces to
+    top-k in VMEM — the [B, N] score matrix never reaches HBM, and no
+    per-query ``lax.map`` dispatch remains.  ``doc_vecs``/``doc_sigs``
+    arrive block-aligned from the engine's operand cache (appended zero
+    rows masked via the traced ``n_valid``), so the wrapper's ragged-N
+    pad is a no-op in the hot loop.  Ties break by doc index
+    (``retrieval._stable_top_k`` order, same as ``lax.top_k`` on the
+    full score matrix).  Like ``gemm_batch``, this path is opt-in
+    w.r.t. the bit-stability contract: the kernel's [B, D]×[D, block]
+    MXU reduction is mathematically equal to the single-query matvec
+    but not guaranteed bit-identical across backends.
     """
-    def one(args):
-        q, s = args
-        scores = hsf.hsf_scores_kernel(
-            doc_vecs, doc_sigs, q, s, alpha=alpha, beta=beta
-        )
-        c = doc_vecs.astype(jnp.float32) @ q.astype(jnp.float32)
-        v, i = jax.lax.top_k(scores, k)
-        return v, i, jnp.take(c, i)
-
-    return jax.lax.map(one, (q_vecs, q_sigs))
+    vals, idx = hsf.hsf_topk_batched_kernel(
+        doc_vecs, doc_sigs, q_vecs, q_sigs, k=k, alpha=alpha, beta=beta,
+        n_valid=n_valid,
+    )
+    cos, ind = _selected_cos_ind(doc_vecs, doc_sigs, q_vecs, q_sigs, idx)
+    return vals, idx, cos, ind
 
 
 def _bucket(b: int) -> int:
@@ -173,6 +197,11 @@ class QueryEngine:
         self._u = np.zeros((0, kb.dim), np.float32)  # cached tf·sign rows
         self._idf = np.zeros((0,), np.float32)
         self._synced = -1  # KB version the device arrays reflect
+
+        # kernel-path operand cache: (src_vecs, src_sigs, padded_vecs,
+        # padded_sigs) — holding the source refs both keys the cache and
+        # pins them against id reuse
+        self._kernel_cache: tuple | None = None
 
         self._qcache: OrderedDict[str, tuple[np.ndarray, np.ndarray]] = (
             OrderedDict()
@@ -361,13 +390,14 @@ class QueryEngine:
         n = len(self.doc_ids)
         k_eff = min(k, n)
         if self.use_kernel:
-            vals, idx, cos = _score_topk_pallas(
-                self.doc_vecs, self.doc_sigs,
-                jnp.asarray(qv), jnp.asarray(qs),
+            dv, ds = self._kernel_operands()
+            vals, idx, cos, ind = _score_topk_pallas(
+                dv, ds, jnp.asarray(qv), jnp.asarray(qs),
+                jnp.int32(n),
                 k=k_eff, alpha=self.alpha, beta=self.beta,
             )
         else:
-            vals, idx, cos = _score_topk(
+            vals, idx, cos, ind = _score_topk(
                 self.doc_vecs, self.doc_sigs,
                 jnp.asarray(qv), jnp.asarray(qs),
                 k=k_eff, alpha=self.alpha, beta=self.beta,
@@ -376,22 +406,36 @@ class QueryEngine:
         vals = np.asarray(vals)
         idx = np.asarray(idx)
         cos = np.asarray(cos)
+        ind = np.asarray(ind)
         out = []
         for i in range(b):
             row = []
-            for v, j, c in zip(vals[i], idx[i], cos[i]):
+            for v, j, c, bi in zip(vals[i], idx[i], cos[i], ind[i]):
                 row.append(
                     RetrievalResult(
                         doc_id=self.doc_ids[int(j)],
                         score=float(v),
                         cosine=float(c),
-                        boosted=bool(
-                            float(v) - self.alpha * float(c) > 0.5 * self.beta
-                        ),
+                        # exact: the kernel/reference containment bit,
+                        # not an inference from score − α·cos (which
+                        # misfires at β=0 and under float noise)
+                        boosted=bool(bi > 0.5),
                     )
                 )
             out.append(row)
         return out
+
+    def _kernel_operands(self):
+        """Block-aligned doc operands for the fused kernel, re-padded
+        only when refresh() rebound the device arrays — the per-dispatch
+        O(N·D) pad copy never runs in the serving hot loop."""
+        cache = self._kernel_cache
+        if (cache is None or cache[0] is not self.doc_vecs
+                or cache[1] is not self.doc_sigs):
+            dv, ds = hsf.hsf_kernel_pad_docs(self.doc_vecs, self.doc_sigs)
+            cache = (self.doc_vecs, self.doc_sigs, dv, ds)
+            self._kernel_cache = cache
+        return cache[2], cache[3]
 
     # ---- introspection ---------------------------------------------------
 

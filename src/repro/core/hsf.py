@@ -78,6 +78,39 @@ def hsf_scores_kernel(
     )
 
 
+def hsf_topk_batched_kernel(
+    doc_vecs, doc_sigs, query_vecs, query_sigs,
+    *,
+    k: int,
+    alpha: float = DEFAULT_ALPHA,
+    beta: float = DEFAULT_BETA,
+    n_valid=None,
+    interpret: bool | None = None,
+):
+    """Batched-kernel dispatcher: fused multi-query HSF with in-kernel
+    top-k (kernels/hsf_score).  Returns (vals [B, k'], ids [B, k']),
+    k' = min(k, N), tie-broken by doc index exactly like
+    `retrieval._stable_top_k`.  The [B, N] score matrix never
+    materializes in HBM — this is the serving-plane hot loop.
+
+    Lazy import for the same minimal-build reason as above."""
+    from repro.kernels.hsf_score import ops as _ops
+
+    return _ops.hsf_score_batched(
+        doc_vecs, doc_sigs, query_vecs, query_sigs,
+        k=k, alpha=alpha, beta=beta, n_valid=n_valid, interpret=interpret,
+    )
+
+
+def hsf_kernel_pad_docs(doc_vecs, doc_sigs):
+    """Block-align doc operands for the batched kernel once (e.g. at
+    engine refresh) instead of per dispatch; see
+    `kernels/hsf_score/ops.pad_docs_for_kernel`."""
+    from repro.kernels.hsf_score import ops as _ops
+
+    return _ops.pad_docs_for_kernel(doc_vecs, doc_sigs)
+
+
 def top_k(scores: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(values, indices) of the k best scores."""
     return jax.lax.top_k(scores, k)

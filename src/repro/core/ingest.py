@@ -341,8 +341,17 @@ class KnowledgeBase:
         return self._matrix, self._sig_matrix, list(self._doc_ids)
 
     def postings(self) -> PostingsIndex:
-        """The ⟨I⟩ region: inverted index over term hashes."""
+        """The ⟨I⟩ region: inverted index over term hashes.
+
+        Never returns None: a container loaded with a matrix but no
+        postings segments (pre-postings format) skips the materialize
+        rebuild, so build the index from term counts here.
+        """
         self.materialize()
+        if self._postings is None:
+            self._postings = PostingsIndex.build(
+                [self.term_counts[i] for i in self._doc_ids]
+            )
         return self._postings
 
     @property
@@ -388,6 +397,11 @@ class KnowledgeBase:
                     "sha256": self.records[i].sha256,
                     "modality": self.records[i].modality,
                     "mtime": self.records[i].mtime,
+                    # persist the O(stat) quick-check keys (§3.3): without
+                    # them the first sync() after a load re-hashes every
+                    # file, silently losing the incremental-sync win
+                    "size": self.records[i].size,
+                    "mtime_ns": self.records[i].mtime_ns,
                 }
                 for i in ids
             ],
@@ -406,7 +420,12 @@ class KnowledgeBase:
         ptr = segs["term_ptr"]
         for j, d in enumerate(meta["docs"]):
             i = d["id"]
-            kb.records[i] = DocRecord(i, d["sha256"], d["modality"], d["mtime"])
+            # pre-size containers lack size/mtime_ns → -1 (fast path
+            # unarmed; the first sync falls back to content hashing and
+            # re-arms it)
+            kb.records[i] = DocRecord(i, d["sha256"], d["modality"],
+                                      d["mtime"], int(d.get("size", -1)),
+                                      int(d.get("mtime_ns", -1)))
             kb.texts[i] = texts[j]
             kb.term_counts[i] = TermCounts(
                 segs["term_hashes"][ptr[j]: ptr[j + 1]],

@@ -148,8 +148,14 @@ class Retriever:
         cosines = doc_vecs @ q_vec
         k = min(k, doc_vecs.shape[0])
         vals, idx = jax.lax.top_k(scores, k)
+        # exact containment bit for the k selected docs only — the
+        # boosted flag is never inferred from score − α·cos (misfires at
+        # β=0 / float noise), and O(k·W) beats a candidate-set-wide test
+        indicator = np.asarray(
+            hsf.containment(jnp.take(doc_sigs, idx, axis=0), q_sig)
+        )
         out = []
-        for v, i in zip(np.asarray(vals), np.asarray(idx)):
+        for pos, (v, i) in enumerate(zip(np.asarray(vals), np.asarray(idx))):
             local = int(i)
             c = float(cosines[local])
             gid = int(cand[local]) if cand is not None else local
@@ -158,7 +164,7 @@ class Retriever:
                     doc_id=self.doc_ids[gid],
                     score=float(v),
                     cosine=c,
-                    boosted=bool(v - self.alpha * c > 0.5 * self.beta),
+                    boosted=bool(indicator[pos] > 0.5),
                 )
             )
         return out
@@ -200,6 +206,12 @@ def build_sharded_retrieve(
       (N must be divisible by prod(mesh.shape[a] for a in doc_axes)).
     - q_vecs [B, D], q_sigs [B, W]: replicated.
     - returns (vals [B, k], ids [B, k]): replicated, globally merged.
+
+    ``use_kernel=True`` scores each shard with the fused batched Pallas
+    kernel (kernels/hsf_score) instead of the jnp batched GEMM — same
+    ranking and tie order whenever k ≤ n_docs (the always-true serving
+    case); only the unreachable -inf filler rows can differ, because the
+    kernel tags them with sentinel ids rather than padding-doc ids.
     """
     axis_sizes = [mesh.shape[a] for a in doc_axes]
     n_shards = int(np.prod(axis_sizes))
@@ -213,19 +225,27 @@ def build_sharded_retrieve(
         base = shard * per_shard
         gids = base + jnp.arange(per_shard, dtype=jnp.int32)
 
+        kk = min(k, per_shard)
         if use_kernel:
+            # fused batched kernel scores the whole query batch against
+            # this shard and reduces to top-k in VMEM — no per-query
+            # dispatch, no [B, per_shard] HBM intermediate.  The shard's
+            # padding suffix is masked inside the kernel via the traced
+            # n_valid scalar (rows that cannot fill carry -inf with
+            # sentinel ids, which lose every merge below).
             from repro.kernels.hsf_score import ops as _ops
 
-            scores = jax.vmap(
-                lambda q, s: _ops.hsf_score(dv, ds, q, s, alpha=alpha, beta=beta)
-            )(qv, qs)
+            n_valid = jnp.clip(jnp.int32(n_docs) - base, 0, per_shard)
+            v, li = _ops.hsf_score_batched(
+                dv, ds, qv, qs, k=kk, alpha=alpha, beta=beta,
+                n_valid=n_valid,
+            )
+            gi = jnp.where(li < per_shard, base + li, jnp.int32(2**31 - 1))
         else:
             scores = hsf.hsf_scores_batched(dv, ds, qv, qs, alpha, beta)
-        scores = jnp.where(gids[None, :] < n_docs, scores, -jnp.inf)
-
-        kk = min(k, per_shard)
-        v, i = jax.lax.top_k(scores, kk)  # [B, kk]
-        gi = jnp.take(gids, i)
+            scores = jnp.where(gids[None, :] < n_docs, scores, -jnp.inf)
+            v, i = jax.lax.top_k(scores, kk)  # [B, kk]
+            gi = jnp.take(gids, i)
 
         v_all = jax.lax.all_gather(v, doc_axes, axis=1, tiled=True)
         gi_all = jax.lax.all_gather(gi, doc_axes, axis=1, tiled=True)

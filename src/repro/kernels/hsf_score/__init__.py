@@ -1,1 +1,4 @@
-from repro.kernels.hsf_score.ops import hsf_score  # noqa: F401
+from repro.kernels.hsf_score.ops import (  # noqa: F401
+    hsf_score,
+    hsf_score_batched,
+)

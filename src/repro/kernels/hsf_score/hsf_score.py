@@ -1,7 +1,8 @@
-"""Fused HSF scoring kernel (Pallas TPU).
+"""Fused HSF scoring kernels (Pallas TPU): single-query scoring and the
+batched multi-query variant with in-kernel top-k.
 
-One grid step scores a (block_docs × D) tile of the document matrix
-against a resident query:
+Single-query (`hsf_score_pallas`) — one grid step scores a
+(block_docs × D) tile of the document matrix against a resident query:
 
     VMEM working set per step:
         docs tile   block_docs × D      (bf16/f32)   — MXU operand
@@ -23,6 +24,27 @@ The fusion is the point: the unfused path reads the doc matrix for the
 matmul and the signature matrix for the boost in two HBM passes and
 materializes an [N] cosine intermediate; fused, every byte of ⟨V⟩ and ⟨I⟩
 regions is read exactly once and the boost costs zero extra bandwidth.
+
+Batched multi-query (`hsf_score_topk_pallas`) — the serving-plane hot
+loop.  The whole query batch is VMEM-resident; one grid step consumes a
+(block_docs × D) doc tile and a (block_docs × W) signature tile:
+
+    cos    = q_batch @ docsᵀ                      (MXU, [B,D]×[block,D])
+    ind    = containment, streamed word-by-word   (VPU, no [B,block,W]
+             over the W signature words            intermediate)
+    scores = α·cos + β·ind, padding masked to -inf
+    top-k  = k-pass argmax merge of (carry ‖ block scores) into a
+             [B, KPAD] running candidate set in VMEM scratch
+
+The carry makes the kernel single-pass over HBM *and* keeps the full
+[B, N] score matrix from ever existing: only [B, k] survives each step.
+Tie-breaking is (score desc, doc-id asc), bit-identical to
+`retrieval._stable_top_k`: carried ids are always smaller than the
+current block's ids and both candidate lists are kept sorted, so
+argmax's first-match semantics implement the lexicographic rule for
+free.  Rows that never fill (k > n_valid) surface ID_SENTINEL with a
+-inf score.  A scalar ``n_valid`` rides in SMEM so mesh-sharded callers
+can mask their local padding range without a second kernel variant.
 """
 from __future__ import annotations
 
@@ -93,3 +115,143 @@ def hsf_score_pallas(
         doc_vecs,
         doc_sigs,
     )[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# batched multi-query HSF + in-kernel top-k
+# ---------------------------------------------------------------------------
+
+NEG_INF = -jnp.inf
+KPAD = 128  # scratch lane width (same carry layout as kernels/topk)
+ID_SENTINEL = 2**31 - 1  # id of never-filled carry slots
+
+
+def _hsf_topk_kernel(nvalid_ref, q_ref, qsig_ref, docs_ref, sigs_ref,
+                     vals_ref, ids_ref, vscr, iscr,
+                     *, k, alpha, beta, block, nblocks):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        vscr[...] = jnp.full_like(vscr, NEG_INF)
+        iscr[...] = jnp.full_like(iscr, jnp.int32(ID_SENTINEL))
+
+    docs = docs_ref[...]  # [block, D]
+    q = q_ref[...]        # [B, D]
+    # MXU: [B, D] × [block, D] with D-contraction → [B, block], f32 acc.
+    cos = jax.lax.dot_general(
+        q, docs, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # VPU: containment streamed over signature words.  The naive
+    # broadcast materializes [B, block, W] (int32 — megabytes of VMEM at
+    # serving batch sizes); folding word-by-word keeps the working set
+    # at one [B, block] boolean.
+    qs = qsig_ref[...]    # [B, W] int32
+    sg = sigs_ref[...]    # [block, W] int32
+    b = q.shape[0]
+
+    def w_body(wi, ok):
+        qw = jax.lax.dynamic_slice(qs, (0, wi), (b, 1))      # [B, 1]
+        sw = jax.lax.dynamic_slice(sg, (0, wi), (block, 1))  # [block, 1]
+        return ok & ((sw.reshape(1, block) & qw) == qw)
+
+    ok = jax.lax.fori_loop(0, qs.shape[1], w_body,
+                           jnp.full((b, block), True))
+    scores = alpha * cos + beta * ok.astype(jnp.float32)
+
+    # mask docs past n_valid (ragged-N padding, sharded-suffix padding)
+    lids = i * block + jax.lax.broadcasted_iota(jnp.int32, (b, block), 1)
+    scores = jnp.where(lids < nvalid_ref[0], scores, NEG_INF)
+
+    # merge carry ‖ block with k argmax passes.  First-match argmax is
+    # the (score desc, id asc) rule: the carry is sorted and holds only
+    # ids from earlier blocks (strictly smaller than any lid here), and
+    # within the block ids ascend with lane position.
+    cand_v = jnp.concatenate([vscr[...], scores], axis=1)  # [B, KPAD+block]
+    cand_i = jnp.concatenate([iscr[...], lids], axis=1)
+    new_v, new_i = [], []
+    for _ in range(k):  # k static — unrolled VPU reduction chain
+        a = jnp.argmax(cand_v, axis=1)  # [B]
+        new_v.append(jnp.take_along_axis(cand_v, a[:, None], axis=1))
+        new_i.append(jnp.take_along_axis(cand_i, a[:, None], axis=1))
+        knocked = (
+            jax.lax.broadcasted_iota(jnp.int32, cand_v.shape, 1)
+            == a[:, None]
+        )
+        cand_v = jnp.where(knocked, NEG_INF, cand_v)
+        # clear the id too: once every candidate is -inf (k > n_valid),
+        # argmax re-picks slot 0 — without this, that slot still holds
+        # an already-emitted doc id and unfillable rows would surface
+        # duplicate real ids instead of the documented sentinel
+        cand_i = jnp.where(knocked, jnp.int32(ID_SENTINEL), cand_i)
+    pad = KPAD - k
+    vscr[...] = jnp.concatenate(
+        new_v + [jnp.full((b, pad), NEG_INF, vscr.dtype)], axis=1)
+    iscr[...] = jnp.concatenate(
+        new_i + [jnp.full((b, pad), jnp.int32(ID_SENTINEL))], axis=1)
+
+    @pl.when(i == nblocks - 1)
+    def _final():
+        vals_ref[...] = vscr[...]
+        ids_ref[...] = iscr[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "alpha", "beta", "block_docs", "interpret"),
+)
+def hsf_score_topk_pallas(
+    doc_vecs: jnp.ndarray,   # [N, D], N % block_docs == 0
+    doc_sigs: jnp.ndarray,   # [N, W] int32
+    query_vecs: jnp.ndarray,  # [B, D], B % 8 == 0
+    query_sigs: jnp.ndarray,  # [B, W] int32
+    n_valid: jnp.ndarray,    # [1] int32 — docs beyond score -inf
+    *,
+    k: int,
+    alpha: float,
+    beta: float,
+    block_docs: int = 512,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused batched HSF + top-k: (vals [B, k] f32, ids [B, k] i32)."""
+    n, d = doc_vecs.shape
+    b, w = query_sigs.shape
+    assert n % block_docs == 0, (n, block_docs)
+    assert 0 < k <= KPAD, k
+    nblocks = n // block_docs
+
+    kernel = functools.partial(
+        _hsf_topk_kernel, k=k, alpha=alpha, beta=beta,
+        block=block_docs, nblocks=nblocks,
+    )
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # n_valid scalar
+            pl.BlockSpec((b, d), lambda i: (0, 0)),      # queries resident
+            pl.BlockSpec((b, w), lambda i: (0, 0)),      # query sigs
+            pl.BlockSpec((block_docs, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_docs, w), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((b, KPAD), lambda i: (0, 0)),
+            pl.BlockSpec((b, KPAD), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, KPAD), jnp.float32),
+            jax.ShapeDtypeStruct((b, KPAD), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((b, KPAD), jnp.float32),
+            pltpu.VMEM((b, KPAD), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="hsf_topk_batched",
+    )(n_valid, query_vecs, query_sigs, doc_vecs, doc_sigs)
+    return vals[:, :k], ids[:, :k]

@@ -1,19 +1,56 @@
-"""Jit'd public wrapper for the fused HSF kernel.
+"""Jit'd public wrappers for the fused HSF kernels.
 
-Handles padding to the block size, backend dispatch (interpret mode on
+Handle padding to the block size (and, for the batched kernel, to the
+sublane-aligned query-batch size), backend dispatch (interpret mode on
 CPU hosts — the kernel body itself is what we validate), and restoring
-the caller's document count.
+the caller's document/query counts.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.hsf_score.hsf_score import hsf_score_pallas
+from repro.kernels.hsf_score.hsf_score import (
+    ID_SENTINEL,
+    KPAD,
+    hsf_score_pallas,
+    hsf_score_topk_pallas,
+)
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _pick_block(n: int, block_docs: int) -> int:
+    """Shrink the doc block for small corpora (min sublane tile is 8)."""
+    return min(block_docs, max(8, 1 << (n - 1).bit_length()))
+
+
+def _pad_rows(arr, pad: int):
+    """Append ``pad`` zero rows (no-op for pad == 0)."""
+    if not pad:
+        return arr
+    return jnp.concatenate(
+        [arr, jnp.zeros((pad, arr.shape[1]), arr.dtype)]
+    )
+
+
+def pad_docs_for_kernel(doc_vecs, doc_sigs, block_docs: int = 512):
+    """Block-align doc operands ahead of time (zero rows appended).
+
+    `hsf_score_batched` pads per call when N is ragged — inside a jitted
+    serving loop that is an O(N·D) copy per dispatch.  Callers that own
+    the doc arrays (the QueryEngine) align them once per refresh with
+    this helper, making the wrapper's pad a no-op; the appended rows
+    must then be masked by passing the true doc count as ``n_valid``.
+    Returns the inputs unchanged when already aligned.
+    """
+    n = doc_vecs.shape[0]
+    if n == 0:
+        return doc_vecs, doc_sigs
+    pad = (-n) % _pick_block(n, block_docs)
+    return _pad_rows(doc_vecs, pad), _pad_rows(doc_sigs, pad)
 
 
 def hsf_score(
@@ -30,20 +67,19 @@ def hsf_score(
     """Fused HSF scores, float32 [N].
 
     Padding docs score α·0 + β·(empty-sig containment); they are sliced
-    off before returning so callers never see them.
+    off before returning so callers never see them.  An empty corpus
+    returns an empty [0] vector without launching a kernel (a zero-size
+    grid is not a valid pallas_call).
     """
     if interpret is None:
         interpret = _default_interpret()
     n = doc_vecs.shape[0]
-    block = min(block_docs, max(8, 1 << (n - 1).bit_length())) if n else block_docs
+    if n == 0:
+        return jnp.zeros((0,), jnp.float32)
+    block = _pick_block(n, block_docs)
     pad = (-n) % block
-    if pad:
-        doc_vecs = jnp.concatenate(
-            [doc_vecs, jnp.zeros((pad, doc_vecs.shape[1]), doc_vecs.dtype)]
-        )
-        doc_sigs = jnp.concatenate(
-            [doc_sigs, jnp.zeros((pad, doc_sigs.shape[1]), doc_sigs.dtype)]
-        )
+    doc_vecs = _pad_rows(doc_vecs, pad)
+    doc_sigs = _pad_rows(doc_sigs, pad)
     scores = hsf_score_pallas(
         doc_vecs,
         doc_sigs,
@@ -55,3 +91,76 @@ def hsf_score(
         interpret=interpret,
     )
     return scores[:n]
+
+
+def hsf_score_batched(
+    doc_vecs,   # [N, D]
+    doc_sigs,   # [N, W] int32
+    query_vecs,  # [B, D]
+    query_sigs,  # [B, W] int32
+    *,
+    k: int,
+    alpha: float = 1.0,
+    beta: float = 1.0,
+    n_valid=None,
+    block_docs: int = 512,
+    interpret: bool | None = None,
+):
+    """Fused batched HSF + in-kernel top-k: (vals [B, k'], ids [B, k']),
+    k' = min(k, N), ordered by (score desc, doc-id asc) exactly as
+    `retrieval._stable_top_k`.
+
+    The [B, N] score matrix never exists — each grid step folds one doc
+    block into a [B, k] VMEM carry.  ``n_valid`` (default N) masks a
+    suffix of the corpus to -inf; mesh-sharded callers pass their
+    per-shard valid count (a traced scalar is fine — it rides in SMEM).
+    Rows that cannot fill (k' > n_valid) carry -inf scores with sentinel
+    ids (2³¹−1).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    n = doc_vecs.shape[0]
+    b = query_vecs.shape[0]
+    k_eff = min(k, n)
+    if n == 0 or b == 0 or k_eff <= 0:
+        return (jnp.zeros((b, max(k_eff, 0)), jnp.float32),
+                jnp.zeros((b, max(k_eff, 0)), jnp.int32))
+
+    if n_valid is None:
+        n_valid = n
+    n_valid = jnp.asarray(n_valid, jnp.int32).reshape(1)
+
+    if k_eff > KPAD:
+        # beyond the kernel's VMEM carry width: delegate to the unfused
+        # oracle (same (score desc, id asc) contract) so callers never
+        # have to special-case large k; unfillable rows get the same
+        # sentinel ids the kernel emits
+        from repro.kernels.hsf_score.ref import hsf_score_topk_ref
+
+        vals, ids = hsf_score_topk_ref(
+            doc_vecs, doc_sigs, query_vecs, query_sigs, alpha, beta,
+            k_eff, n_valid=n_valid[0],
+        )
+        return vals, jnp.where(jnp.isneginf(vals),
+                               jnp.int32(ID_SENTINEL), ids)
+
+    block = _pick_block(n, block_docs)
+    pad_n = (-n) % block
+    doc_vecs = _pad_rows(doc_vecs, pad_n)
+    doc_sigs = _pad_rows(doc_sigs, pad_n)
+    pad_b = (-b) % 8  # f32 sublane tile
+    query_vecs = _pad_rows(query_vecs, pad_b)
+    query_sigs = _pad_rows(query_sigs, pad_b)
+    vals, ids = hsf_score_topk_pallas(
+        doc_vecs,
+        doc_sigs,
+        query_vecs,
+        query_sigs,
+        n_valid,
+        k=k_eff,
+        alpha=alpha,
+        beta=beta,
+        block_docs=block,
+        interpret=interpret,
+    )
+    return vals[:b], ids[:b]

@@ -17,3 +17,32 @@ def hsf_score_ref(
     hits = (doc_sigs & query_sig) == query_sig
     ind = jnp.all(hits, axis=-1).astype(jnp.float32)
     return alpha * cos + beta * ind
+
+
+def hsf_score_topk_ref(
+    doc_vecs: jnp.ndarray,   # [N, D] float
+    doc_sigs: jnp.ndarray,   # [N, W] int32
+    query_vecs: jnp.ndarray,  # [B, D] float
+    query_sigs: jnp.ndarray,  # [B, W] int32
+    alpha: float,
+    beta: float,
+    k: int,
+    n_valid=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Unfused oracle for the batched kernel: full [B, N] scores, then
+    a (score desc, id asc) lexicographic top-k — retrieval._stable_top_k
+    semantics, materialized the expensive way the kernel avoids.
+    ``n_valid`` masks the corpus suffix to -inf like the kernel's SMEM
+    scalar (also the delegate for the ops-level k > KPAD fallback)."""
+    cos = query_vecs.astype(jnp.float32) @ doc_vecs.astype(jnp.float32).T
+    hits = (doc_sigs[None, :, :] & query_sigs[:, None, :]) \
+        == query_sigs[:, None, :]
+    ind = jnp.all(hits, axis=-1).astype(jnp.float32)
+    scores = alpha * cos + beta * ind  # [B, N]
+    ids = jnp.broadcast_to(
+        jnp.arange(scores.shape[1], dtype=jnp.int32), scores.shape
+    )
+    if n_valid is not None:
+        scores = jnp.where(ids < n_valid, scores, -jnp.inf)
+    order = jnp.lexsort((ids, -scores), axis=-1)[:, :k]
+    return jnp.take_along_axis(scores, order, axis=-1), order

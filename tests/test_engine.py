@@ -72,6 +72,83 @@ def test_query_batch_kernel_path_bit_identical():
             [(r.doc_id, r.score) for r in want]
 
 
+def test_kernel_path_matches_default_ranking_batched():
+    """The fused batched kernel (in-kernel top-k) returns the same
+    ranking, boosted flags, and near-identical scores as the bit-stable
+    lax.map path, across batch sizes and for tie-heavy corpora."""
+    kb, entities = _kb(n_docs=60)
+    for i in range(10):
+        kb.add_text(f"tie_{i:02d}", "identical tie content ZZ-4242")
+    default = QueryEngine(kb)
+    kernel = QueryEngine(kb, use_kernel=True)
+    queries = _queries(entities) + ["ZZ-4242"]
+    a = default.query_batch(queries, k=6)
+    b = kernel.query_batch(queries, k=6)
+    for q, ra, rb in zip(queries, a, b):
+        assert [r.doc_id for r in ra] == [r.doc_id for r in rb], q
+        assert [r.boosted for r in ra] == [r.boosted for r in rb], q
+        np.testing.assert_allclose([r.score for r in ra],
+                                   [r.score for r in rb], rtol=1e-5)
+        np.testing.assert_allclose([r.cosine for r in ra],
+                                   [r.cosine for r in rb],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_operand_cache_reused_until_refresh():
+    """The block-aligned kernel operands are padded once per refresh,
+    not per dispatch (the hot loop never pays the O(N·D) pad copy),
+    and are rebuilt when a KB mutation rebinds the device arrays."""
+    kb, entities = _kb(n_docs=30)  # 30 docs → ragged vs the 32-block
+    engine = QueryEngine(kb, use_kernel=True)
+    code = next(iter(entities))
+    engine.query_batch([code], k=3)
+    dv1, ds1 = engine._kernel_operands()
+    assert dv1.shape[0] % 8 == 0 and dv1.shape[0] >= 30
+    engine.query_batch([code, "other"], k=3)
+    dv2, ds2 = engine._kernel_operands()
+    assert dv2 is dv1 and ds2 is ds1  # cache hit across dispatches
+
+    kb.add_text("doc_00003.txt", "rewritten content AB-1212")
+    res = engine.query_batch(["AB-1212"], k=1)[0]
+    assert res[0].doc_id == "doc_00003.txt" and res[0].boosted
+    dv3, _ = engine._kernel_operands()
+    assert dv3 is not dv1  # refresh rebound the arrays → re-padded
+
+
+@pytest.mark.parametrize("make_engine", [
+    lambda kb: QueryEngine(kb, beta=0.0),
+    lambda kb: QueryEngine(kb, beta=0.0, gemm_batch=True),
+    lambda kb: QueryEngine(kb, beta=0.0, use_kernel=True),
+])
+def test_boosted_flag_exact_at_beta_zero(make_engine):
+    """β=0 regression: ``boosted`` used to be inferred as
+    score − α·cos > 0.5·β, which any positive rounding noise satisfies
+    when β=0.  It must now reflect the exact containment indicator:
+    True for the doc containing the query substring, False elsewhere."""
+    kb = KnowledgeBase(dim=512)
+    kb.add_text("with_code", "the target document mentions QX-9090 here")
+    for i in range(15):
+        kb.add_text(f"filler_{i:02d}", f"unrelated filler text number {i}")
+    engine = make_engine(kb)
+    res = engine.query_batch(["QX-9090"], k=16)[0]
+    flags = {r.doc_id: r.boosted for r in res}
+    assert flags["with_code"] is True  # indicator fires even at β=0
+    assert not any(v for d, v in flags.items() if d != "with_code")
+
+
+def test_boosted_flag_exact_at_beta_zero_prefiltered():
+    """Same β=0 regression for the Retriever postings-prefilter path."""
+    kb = KnowledgeBase(dim=512)
+    kb.add_text("with_code", "the target document mentions QX-9090 here")
+    for i in range(15):
+        kb.add_text(f"filler_{i:02d}", f"unrelated filler text number {i}")
+    r = Retriever(kb, beta=0.0, prefilter=True)
+    res = r.query("QX-9090", k=5)
+    flags = {x.doc_id: x.boosted for x in res}
+    assert flags["with_code"] is True
+    assert not any(v for d, v in flags.items() if d != "with_code")
+
+
 def test_tie_order_matches_between_batch_and_single():
     """Duplicate docs produce exact score ties; both paths must break
     them identically (lax.top_k order)."""

@@ -71,6 +71,74 @@ def test_same_content_rename_reprocessed_as_new_path(tmp_path):
     assert s.added == 1 and s.removed == 1
 
 
+def test_container_roundtrip_arms_stat_fast_path(tmp_path, monkeypatch):
+    """Regression: save() used to drop DocRecord.size/mtime_ns, so the
+    first sync() after reopening a container re-hashed every file.  A
+    save → load → sync round-trip on an unchanged directory must skip
+    every doc without a single file read (O(stat) fast path armed)."""
+    import builtins
+
+    src = str(tmp_path / "src")
+    os.makedirs(src)
+    for i in range(12):
+        _write(src, f"f{i}.txt", f"document number {i}")
+    kb = KnowledgeBase(dim=512)
+    kb.sync(src)
+    path = str(tmp_path / "kb.ragdb")
+    kb.save(path)
+
+    kb2 = KnowledgeBase.load(path)
+    for rec in kb2.records.values():
+        assert rec.size >= 0 and rec.mtime_ns >= 0  # persisted, not -1
+
+    reads = []
+    real_open = builtins.open
+
+    def counting_open(file, mode="r", *a, **k):
+        if "r" in mode and "b" in mode:
+            reads.append(file)
+        return real_open(file, mode, *a, **k)
+
+    monkeypatch.setattr(builtins, "open", counting_open)
+    stats = kb2.sync(src)
+    monkeypatch.undo()
+    assert stats.skipped == 12 and stats.processed == 0
+    assert reads == []  # zero file reads: stat-only
+
+
+def test_pre_size_container_loads_and_rearms(tmp_path):
+    """Backward compat: containers written before size/mtime_ns were
+    persisted load with the fast path unarmed (-1), fall back to content
+    hashing once, and re-arm it for the next sync."""
+    from repro.core.container import Container, write_container
+
+    src = str(tmp_path / "src")
+    os.makedirs(src)
+    for i in range(5):
+        _write(src, f"f{i}.txt", f"document number {i}")
+    kb = KnowledgeBase(dim=512)
+    kb.sync(src)
+    path = str(tmp_path / "kb.ragdb")
+    kb.save(path)
+
+    # strip the new meta keys to simulate an old container
+    c = Container.open(path)
+    meta = c.meta
+    for d in meta["docs"]:
+        d.pop("size", None)
+        d.pop("mtime_ns", None)
+    old = str(tmp_path / "old.ragdb")
+    write_container(old, c.read_all(), meta, 0)
+
+    kb2 = KnowledgeBase.load(old)
+    assert all(r.size == -1 and r.mtime_ns == -1
+               for r in kb2.records.values())
+    s1 = kb2.sync(src)  # hash fallback: everything skipped by sha256
+    assert s1.skipped == 5 and s1.processed == 0
+    assert all(r.size >= 0 and r.mtime_ns >= 0
+               for r in kb2.records.values())  # re-armed
+
+
 def test_container_roundtrip_preserves_everything(tmp_path):
     src = str(tmp_path / "src")
     os.makedirs(src)

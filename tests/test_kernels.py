@@ -6,16 +6,28 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.core import hsf
 from repro.kernels.embedding_bag import ops as bag_ops
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.hsf_score import ops as hsf_ops
-from repro.kernels.hsf_score.ref import hsf_score_ref
+from repro.kernels.hsf_score.ref import hsf_score_ref, hsf_score_topk_ref
 from repro.kernels.topk import ops as topk_ops
 from repro.kernels.topk.ref import top_k_ref
 
 RNG = np.random.default_rng(0)
+
+
+def _hsf_corpus(n, d, w, b, rng):
+    dv = rng.normal(size=(n, d)).astype(np.float32)
+    dv /= np.linalg.norm(dv, axis=1, keepdims=True) + 1e-30
+    ds = rng.integers(0, 2**31, size=(n, w)).astype(np.int32)
+    qv = rng.normal(size=(b, d)).astype(np.float32)
+    qs = np.stack(
+        [ds[i % n] & ds[(i + 1) % n] for i in range(b)]
+    ).astype(np.int32) if n else np.zeros((b, w), np.int32)
+    return dv, ds, qv, qs
 
 
 # ---------------------------------------------------------------------------
@@ -54,6 +66,158 @@ def test_hsf_score_boost_exactness():
         jnp.asarray(qs), alpha=1.0, beta=1.0,
     ))
     assert out[7] == 1.0
+
+
+def test_hsf_score_empty_corpus():
+    """n=0 must not reach pallas_call (a zero grid is invalid)."""
+    out = hsf_ops.hsf_score(
+        jnp.zeros((0, 128), jnp.float32), jnp.zeros((0, 128), jnp.int32),
+        jnp.zeros(128, jnp.float32), jnp.zeros(128, jnp.int32),
+    )
+    assert out.shape == (0,) and out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("n", [1, 3, 7, 9, 100])
+def test_hsf_score_small_and_ragged_n(n):
+    """n below / straddling the 8-sublane tile pads then slices back."""
+    dv, ds, qv, qs = _hsf_corpus(n, 128, 128, 1, np.random.default_rng(n))
+    out = hsf_ops.hsf_score(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv[0]),
+        jnp.asarray(qs[0]), alpha=1.1, beta=0.7,
+    )
+    assert out.shape == (n,)
+    ref = hsf.numpy_reference(dv, ds, qv[0], qs[0], 1.1, 0.7)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hsf_score_batched (fused multi-query + in-kernel top-k)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b", [1, 3, 8])
+@pytest.mark.parametrize("n,k", [(64, 5), (100, 7), (1024, 16), (5, 3)])
+@pytest.mark.parametrize("beta", [1.3, 0.0])
+def test_hsf_score_batched_sweep(b, n, k, beta):
+    """Interpret-mode parity: ids bit-identical to the
+    `_stable_top_k` lexicographic order on the full score matrix
+    (`hsf_score_topk_ref`), selected scores within f32 resolution of the
+    pure-numpy float64 oracle (`hsf.numpy_reference`) per query."""
+    d, w = 256, 128
+    dv, ds, qv, qs = _hsf_corpus(n, d, w, b, np.random.default_rng(n * b))
+    vals, ids = hsf_ops.hsf_score_batched(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv), jnp.asarray(qs),
+        k=k, alpha=0.9, beta=beta,
+    )
+    k_eff = min(k, n)
+    assert vals.shape == (b, k_eff) and ids.shape == (b, k_eff)
+    rv, ri = hsf_score_topk_ref(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv), jnp.asarray(qs),
+        0.9, beta, k_eff,
+    )
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv),
+                               rtol=1e-6, atol=1e-6)
+    for i in range(b):
+        oracle = hsf.numpy_reference(dv, ds, qv[i], qs[i], 0.9, beta)
+        np.testing.assert_allclose(
+            np.asarray(vals)[i], oracle[np.asarray(ids)[i]],
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+def test_hsf_score_batched_duplicate_ties_stable():
+    """An all-duplicate corpus produces exact score ties in every block;
+    the in-kernel merge must surface ascending doc ids — the
+    `retrieval._stable_top_k` rule — across block boundaries."""
+    n, d, w, b, k = 96, 128, 128, 4, 9
+    rng = np.random.default_rng(7)
+    row = rng.normal(size=(1, d)).astype(np.float32)
+    sig = rng.integers(0, 2**31, size=(1, w)).astype(np.int32)
+    dv = np.tile(row, (n, 1))
+    ds = np.tile(sig, (n, 1))
+    qv = rng.normal(size=(b, d)).astype(np.float32)
+    qs = np.tile(sig & sig[0], (b, 1))
+    vals, ids = hsf_ops.hsf_score_batched(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv), jnp.asarray(qs),
+        k=k, alpha=1.0, beta=1.0, block_docs=16,  # force multi-block merge
+    )
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.tile(np.arange(k), (b, 1)))
+    for i in range(b):
+        assert len(set(np.asarray(vals)[i].tolist())) == 1
+
+
+def test_hsf_score_batched_empty_and_tiny():
+    zf = jnp.zeros((0, 128), jnp.float32)
+    zi = jnp.zeros((0, 128), jnp.int32)
+    qv = jnp.zeros((2, 128), jnp.float32)
+    qs = jnp.zeros((2, 128), jnp.int32)
+    vals, ids = hsf_ops.hsf_score_batched(zf, zi, qv, qs, k=5)
+    assert vals.shape == (2, 0) and ids.shape == (2, 0)
+    # n=1: k clamps to the corpus
+    dv, ds, qv1, qs1 = _hsf_corpus(1, 128, 128, 2, np.random.default_rng(3))
+    vals, ids = hsf_ops.hsf_score_batched(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv1), jnp.asarray(qs1),
+        k=5,
+    )
+    assert vals.shape == (2, 1)
+    np.testing.assert_array_equal(np.asarray(ids), np.zeros((2, 1)))
+
+
+def test_hsf_score_batched_k_beyond_carry_width_falls_back():
+    """k > KPAD (the VMEM carry width) takes the unfused fallback with
+    the same (score desc, id asc) contract."""
+    n, b, k = 300, 2, 150
+    dv, ds, qv, qs = _hsf_corpus(n, 128, 128, b, np.random.default_rng(5))
+    vals, ids = hsf_ops.hsf_score_batched(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv), jnp.asarray(qs),
+        k=k, alpha=1.0, beta=1.0,
+    )
+    rv, ri = hsf_score_topk_ref(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv), jnp.asarray(qs),
+        1.0, 1.0, k,
+    )
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ri))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_hsf_score_batched_unfillable_rows_get_sentinel_ids():
+    """k > n_valid with a multi-block grid: the slots that cannot fill
+    must carry (-inf, ID_SENTINEL) — regression for the merge re-picking
+    an exhausted carry slot and emitting a duplicate real doc id."""
+    from repro.kernels.hsf_score.hsf_score import ID_SENTINEL
+
+    n, b, k, keep = 64, 2, 6, 3
+    dv, ds, qv, qs = _hsf_corpus(n, 128, 128, b, np.random.default_rng(13))
+    vals, ids = hsf_ops.hsf_score_batched(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv), jnp.asarray(qs),
+        k=k, n_valid=keep, block_docs=16,  # 4 grid steps
+    )
+    vals, ids = np.asarray(vals), np.asarray(ids)
+    assert np.all(np.isfinite(vals[:, :keep]))
+    assert np.all(ids[:, :keep] < keep)
+    for row in ids[:, :keep]:
+        assert len(set(row.tolist())) == keep  # no duplicate docs
+    assert np.all(np.isneginf(vals[:, keep:]))
+    assert np.all(ids[:, keep:] == ID_SENTINEL)
+
+
+def test_hsf_score_batched_n_valid_masks_suffix():
+    """The SMEM n_valid scalar (sharded callers' padding mask) excludes
+    the suffix exactly: results equal the truncated corpus's."""
+    n, keep, b, k = 64, 40, 3, 6
+    dv, ds, qv, qs = _hsf_corpus(n, 128, 128, b, np.random.default_rng(11))
+    v_mask, i_mask = hsf_ops.hsf_score_batched(
+        jnp.asarray(dv), jnp.asarray(ds), jnp.asarray(qv), jnp.asarray(qs),
+        k=k, n_valid=keep,
+    )
+    v_trunc, i_trunc = hsf_ops.hsf_score_batched(
+        jnp.asarray(dv[:keep]), jnp.asarray(ds[:keep]), jnp.asarray(qv),
+        jnp.asarray(qs), k=k,
+    )
+    np.testing.assert_array_equal(np.asarray(i_mask), np.asarray(i_trunc))
+    np.testing.assert_array_equal(np.asarray(v_mask), np.asarray(v_trunc))
 
 
 # ---------------------------------------------------------------------------

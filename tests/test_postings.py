@@ -65,6 +65,35 @@ def test_postings_survive_container_roundtrip(tmp_path):
     assert r.query("CODE9", k=1)[0].doc_id == "a"
 
 
+def test_postings_rebuilt_when_container_lacks_segments(tmp_path):
+    """Regression: a container carrying a matrix but no postings
+    segments (pre-postings format) loads with `_postings=None` and a
+    clean matrix, so materialize() skips the rebuild —
+    `KnowledgeBase.postings()` must rebuild instead of returning None
+    (which broke `Retriever(prefilter=True)`)."""
+    from repro.core.container import Container, write_container
+
+    kb = KnowledgeBase(dim=512)
+    kb.add_text("a", "alpha CODE9 beta")
+    kb.add_text("b", "gamma delta")
+    p = str(tmp_path / "k.ragdb")
+    kb.save(p)
+
+    c = Container.open(p)
+    segs = {k: v for k, v in c.read_all().items()
+            if not k.startswith("post_")}
+    old = str(tmp_path / "old.ragdb")
+    write_container(old, segs, c.meta, 0)
+
+    kb2 = KnowledgeBase.load(old)
+    assert kb2._postings is None and not kb2._dirty  # the broken state
+    pi = kb2.postings()
+    assert pi is not None
+    assert list(pi.docs_with_term("code9")) == [0]
+    r = Retriever(kb2, prefilter=True)
+    assert r.query("CODE9", k=1)[0].doc_id == "a"
+
+
 def test_unselective_query_falls_back():
     """A query hitting most docs returns None from candidates() (full
     scan is cheaper) and the retriever still answers correctly."""
