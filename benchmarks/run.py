@@ -5,6 +5,7 @@
 #   RQ3 (paper §5.4)  container footprint + query latency
 #   kernels           HSF / top-k micro-benchmarks
 #   scale             sharded-retrieval payload accounting
+#   serving           micro-batching scheduler load tests (open/closed loop)
 #
 # Roofline tables are a separate heavier entry point
 # (``python -m benchmarks.roofline``) because they compile dry-run
@@ -16,11 +17,11 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_paper, bench_scale
+    from benchmarks import bench_paper, bench_scale, bench_serving
 
     print("name,us_per_call,derived")
     failures = 0
-    for fn in bench_paper.ALL + bench_scale.ALL:
+    for fn in bench_paper.ALL + bench_scale.ALL + bench_serving.ALL:
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}")

@@ -1,7 +1,8 @@
 """Quickstart: the paper's core loop in ~40 lines.
 
 Builds a synthetic corpus with injected entity codes (§5.1), ingests it
-into a single-file knowledge container, runs hybrid queries, then shows
+into a single-file knowledge container, runs hybrid queries through the
+batched serving entry point (``QueryEngine.query_batch``), then shows
 the O(U) incremental sync (§3.3).
 
     PYTHONPATH=src python examples/quickstart.py
@@ -9,8 +10,8 @@ the O(U) incremental sync (§3.3).
 import os
 import tempfile
 
+from repro.core.engine import QueryEngine
 from repro.core.ingest import KnowledgeBase
-from repro.core.retrieval import Retriever
 from repro.data.corpus import make_corpus, write_corpus_dir
 
 
@@ -26,19 +27,21 @@ def main():
         print(f"cold ingest : {stats.added} docs in {stats.seconds:.2f}s "
               f"({stats.added / stats.seconds:.0f} docs/s)")
 
-        # --- hybrid retrieval (HSF: α·cos + β·substring) ---------------
-        retriever = Retriever(kb, alpha=1.0, beta=1.0)
+        # --- hybrid retrieval (HSF: α·cos + β·substring), batched ------
+        # QueryEngine is the serving entry point: one dispatch scores
+        # the whole query batch (scoring_path="auto" picks the fused
+        # Pallas kernel on TPU, the bit-stable map path elsewhere)
+        engine = QueryEngine(kb, alpha=1.0, beta=1.0)
         code, target = next(iter(entities.items()))
         print(f"\nquery: {code!r}")
-        for r in retriever.query(code, k=3):
+        for r in engine.query_batch([code], k=3)[0]:
             mark = "BOOSTED" if r.boosted else "       "
             print(f"  {mark} {r.doc_id:22s} score={r.score:.4f} "
                   f"cos={r.cosine:.4f}")
-        assert retriever.query(code, k=1)[0].doc_id == \
+        assert engine.query_batch([code], k=1)[0][0].doc_id == \
             f"doc_{target:05d}.txt"
 
-        # --- batched serving (QueryEngine: one dispatch, many queries) -
-        engine = retriever.engine
+        # --- one dispatch, many queries --------------------------------
         codes = list(entities)[:3]
         for code_, results in zip(codes, engine.query_batch(codes, k=1)):
             print(f"batched query {code_!r} → {results[0].doc_id}")
@@ -61,7 +64,7 @@ def main():
         print(f"\ncontainer   : {os.path.getsize(path) / 1e6:.2f} MB "
               f"(single file, SHA-256 verified segments)")
         kb2 = KnowledgeBase.load(path)
-        assert Retriever(kb2).query(code, k=1)[0].doc_id == \
+        assert QueryEngine(kb2).query_batch([code], k=1)[0][0].doc_id == \
             f"doc_{target:05d}.txt"
         print("restore     : retrieval identical after round-trip ✓")
 

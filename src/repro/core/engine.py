@@ -20,7 +20,10 @@ the single-query `Retriever` could not give a multi-user deployment:
    ``gemm_batch=True`` — or via ``use_kernel=True``, which dispatches
    the fused batched Pallas kernel (one pass over HBM, in-kernel top-k,
    no [B, N] score intermediate; see kernels/hsf_score).  Both opt-in
-   paths return the same ranking with doc-index tie-breaking.
+   paths return the same ranking with doc-index tie-breaking.  The
+   default ``scoring_path="auto"`` resolves per backend: the kernel on
+   real TPUs, the bit-stable map path everywhere else (see
+   ``resolve_scoring_path``).
 
 2. **Incremental materialization** — the `KnowledgeBase` logs dirty rows
    on ``add_text``/``sync``/remove (``changes_since``); ``refresh()``
@@ -149,6 +152,119 @@ def _bucket(b: int) -> int:
     return 1 << max(b - 1, 0).bit_length() if b > 1 else 1
 
 
+# --------------------------------------------------------------------------
+# scoring-path selection
+# --------------------------------------------------------------------------
+
+SCORING_PATHS = ("map", "gemm", "kernel")
+
+
+def _default_backend() -> str:
+    """The live jax backend name (monkeypatch point for tests)."""
+    try:
+        return jax.default_backend()
+    except Exception:  # noqa: BLE001 — no devices at all → host semantics
+        return "cpu"
+
+
+def resolve_scoring_path(
+    scoring_path: str = "auto",
+    use_kernel: bool = False,
+    gemm_batch: bool = False,
+) -> str:
+    """Resolve the effective scoring path: "map" | "gemm" | "kernel".
+
+    The legacy boolean flags are explicit overrides and win over
+    ``scoring_path``.  ``"auto"`` picks the fused Pallas kernel only on
+    a real TPU backend — PR 2's shoot-out showed the kernel ~4x slower
+    than gemm in CPU interpret mode, so auto never routes a CPU host
+    through it; the bit-stable ``lax.map`` default is used instead.
+    Pass ``scoring_path="kernel"`` (or ``use_kernel=True``) to force the
+    kernel anywhere (e.g. interpret-mode plumbing tests), or
+    ``scoring_path="map"`` to force the bit-stable path on TPU.
+    """
+    if use_kernel and gemm_batch:
+        raise ValueError("use_kernel and gemm_batch are mutually exclusive")
+    if use_kernel:
+        return "kernel"
+    if gemm_batch:
+        return "gemm"
+    if scoring_path == "auto":
+        return "kernel" if _default_backend() == "tpu" else "map"
+    if scoring_path not in SCORING_PATHS:
+        raise ValueError(
+            f"scoring_path must be 'auto' or one of {SCORING_PATHS}, "
+            f"got {scoring_path!r}"
+        )
+    return scoring_path
+
+
+def score_batch_arrays(
+    doc_vecs, doc_sigs, qv: np.ndarray, qs: np.ndarray, *,
+    scoring_path: str, k: int, alpha: float, beta: float, n_docs: int,
+    kernel_operands=None,
+):
+    """One padded-batch scoring dispatch → numpy (vals, idx, cos, ind).
+
+    Pure function of its operands (no engine state): the serving-plane
+    snapshot (serving/snapshot.py) calls this against frozen arrays, the
+    engine against its live ones.  ``kernel_operands`` is the optional
+    pre-padded (block-aligned) doc operand pair for the kernel path.
+    """
+    if scoring_path == "kernel":
+        if kernel_operands is None:
+            kernel_operands = hsf.hsf_kernel_pad_docs(doc_vecs, doc_sigs)
+        dv, ds = kernel_operands
+        vals, idx, cos, ind = _score_topk_pallas(
+            dv, ds, jnp.asarray(qv), jnp.asarray(qs), jnp.int32(n_docs),
+            k=k, alpha=alpha, beta=beta,
+        )
+    else:
+        vals, idx, cos, ind = _score_topk(
+            doc_vecs, doc_sigs, jnp.asarray(qv), jnp.asarray(qs),
+            k=k, alpha=alpha, beta=beta, gemm=scoring_path == "gemm",
+        )
+    return (np.asarray(vals), np.asarray(idx),
+            np.asarray(cos), np.asarray(ind))
+
+
+def results_from_topk(
+    doc_ids, b: int, vals, idx, cos, ind
+) -> list[list[RetrievalResult]]:
+    """Materialize RetrievalResult rows for the first ``b`` queries of a
+    padded batch (the ``boosted`` flag is the exact containment
+    indicator returned by the scoring path, never inferred from
+    score − α·cos)."""
+    out = []
+    for i in range(b):
+        row = []
+        for v, j, c, bi in zip(vals[i], idx[i], cos[i], ind[i]):
+            row.append(
+                RetrievalResult(
+                    doc_id=doc_ids[int(j)],
+                    score=float(v),
+                    cosine=float(c),
+                    boosted=bool(bi > 0.5),
+                )
+            )
+        out.append(row)
+    return out
+
+
+def pack_query_arrays(
+    pairs: list[tuple[np.ndarray, np.ndarray]], dim: int, sig_words: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Stack per-query (vector, signature) pairs into a padded
+    power-of-two bucket (zero rows beyond len(pairs))."""
+    bucket = _bucket(len(pairs))
+    qv = np.zeros((bucket, dim), np.float32)
+    qs = np.zeros((bucket, sig_words), np.int32)
+    for i, (v, s) in enumerate(pairs):
+        qv[i] = v
+        qs[i] = s
+    return qv, qs
+
+
 def _pad_row_update(rows: np.ndarray, block: np.ndarray):
     """Pad a row-scatter update to a power-of-two row count.
 
@@ -179,14 +295,21 @@ class QueryEngine:
         beta: float = hsf.DEFAULT_BETA,
         use_kernel: bool = False,
         gemm_batch: bool = False,
+        scoring_path: str = "auto",
         cache_size: int = 256,
         max_batch: int = 256,
     ):
         self.kb = kb
         self.alpha = float(alpha)
         self.beta = float(beta)
-        self.use_kernel = use_kernel
-        self.gemm_batch = gemm_batch
+        # "auto" resolves at construction: kernel on real TPU backends,
+        # the bit-stable map path elsewhere.  The booleans are kept as
+        # resolved views for back-compat (retrieval.py checks them).
+        self.scoring_path = resolve_scoring_path(
+            scoring_path, use_kernel=use_kernel, gemm_batch=gemm_batch
+        )
+        self.use_kernel = self.scoring_path == "kernel"
+        self.gemm_batch = self.scoring_path == "gemm"
         self.cache_size = cache_size
         self.max_batch = max_batch
 
@@ -361,8 +484,11 @@ class QueryEngine:
     ) -> list[list[RetrievalResult]]:
         """Retrieve top-k for every query; one device dispatch per chunk.
 
-        Results per query are identical (bit-identical with the default
-        ``gemm_batch=False``) to ``Retriever.query`` on the same KB.
+        Results per query are identical to ``Retriever.query`` on the
+        same KB — bit-identical when the resolved scoring path is
+        ``"map"`` (what ``"auto"`` picks everywhere except real TPU
+        backends, where it resolves to the non-bit-stable kernel; force
+        ``scoring_path="map"`` to keep the bit-stability contract there).
         """
         self.refresh()
         if not self.doc_ids or not texts:
@@ -381,49 +507,17 @@ class QueryEngine:
     ) -> list[list[RetrievalResult]]:
         b = len(texts)
         pairs = [self._query_arrays(t) for t in texts]
-        bucket = _bucket(b)
-        qv = np.zeros((bucket, self.kb.dim), np.float32)
-        qs = np.zeros((bucket, self.kb.sig_words), np.int32)
-        for i, (v, s) in enumerate(pairs):
-            qv[i] = v
-            qs[i] = s
+        qv, qs = pack_query_arrays(pairs, self.kb.dim, self.kb.sig_words)
         n = len(self.doc_ids)
-        k_eff = min(k, n)
-        if self.use_kernel:
-            dv, ds = self._kernel_operands()
-            vals, idx, cos, ind = _score_topk_pallas(
-                dv, ds, jnp.asarray(qv), jnp.asarray(qs),
-                jnp.int32(n),
-                k=k_eff, alpha=self.alpha, beta=self.beta,
-            )
-        else:
-            vals, idx, cos, ind = _score_topk(
-                self.doc_vecs, self.doc_sigs,
-                jnp.asarray(qv), jnp.asarray(qs),
-                k=k_eff, alpha=self.alpha, beta=self.beta,
-                gemm=self.gemm_batch,
-            )
-        vals = np.asarray(vals)
-        idx = np.asarray(idx)
-        cos = np.asarray(cos)
-        ind = np.asarray(ind)
-        out = []
-        for i in range(b):
-            row = []
-            for v, j, c, bi in zip(vals[i], idx[i], cos[i], ind[i]):
-                row.append(
-                    RetrievalResult(
-                        doc_id=self.doc_ids[int(j)],
-                        score=float(v),
-                        cosine=float(c),
-                        # exact: the kernel/reference containment bit,
-                        # not an inference from score − α·cos (which
-                        # misfires at β=0 and under float noise)
-                        boosted=bool(bi > 0.5),
-                    )
-                )
-            out.append(row)
-        return out
+        vals, idx, cos, ind = score_batch_arrays(
+            self.doc_vecs, self.doc_sigs, qv, qs,
+            scoring_path=self.scoring_path, k=min(k, n),
+            alpha=self.alpha, beta=self.beta, n_docs=n,
+            kernel_operands=(
+                self._kernel_operands() if self.use_kernel else None
+            ),
+        )
+        return results_from_topk(self.doc_ids, b, vals, idx, cos, ind)
 
     def _kernel_operands(self):
         """Block-aligned doc operands for the fused kernel, re-padded

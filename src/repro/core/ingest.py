@@ -24,11 +24,13 @@ and tested.
 """
 from __future__ import annotations
 
+import contextlib
 import csv
 import hashlib
 import io
 import json
 import os
+import threading
 import time
 from dataclasses import dataclass, field
 
@@ -195,10 +197,46 @@ class KnowledgeBase:
     _version: int = 0
     _changed_at: dict[str, int] = field(default_factory=dict)
     _removed_at: dict[str, int] = field(default_factory=dict)
+    # single-writer guard (see _single_writer below)
+    _write_lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False, compare=False
+    )
 
     def __post_init__(self):
         if self.vectorizer is None:
             self.vectorizer = HashedTfIdf(dim=self.dim)
+
+    # ---- single-writer contract -----------------------------------------
+    #
+    # A KnowledgeBase is NOT a concurrent data structure.  The serving
+    # plane (serving/snapshot.py) relies on exactly this contract:
+    #
+    #   - exactly ONE thread performs mutations (``sync``/``add_text``/
+    #     removal) and the subsequent engine ``refresh()``/snapshot
+    #     ``publish()``;
+    #   - any number of threads may read *published snapshots* — never
+    #     the live dicts/arrays here — concurrently with that writer.
+    #
+    # ``version``/``changes_since`` are safe for the writer thread to
+    # interleave with its own mutations (they are how the engine's
+    # refresh discovers the delta) but are only meaningful to other
+    # threads via the generation a snapshot was pinned at.  The guard
+    # below turns a second concurrent writer — a latent torn-index bug —
+    # into an immediate, attributable error instead of silent corruption
+    # of df counts / change-log ordering.
+
+    @contextlib.contextmanager
+    def _single_writer(self, op: str):
+        if not self._write_lock.acquire(blocking=False):
+            raise RuntimeError(
+                f"concurrent KnowledgeBase.{op}: mutations follow a "
+                "single-writer contract (one ingest thread; readers go "
+                "through serving snapshots — docs/ARCHITECTURE.md §7)"
+            )
+        try:
+            yield
+        finally:
+            self._write_lock.release()
 
     # ---- pipeline for a single document --------------------------------
 
@@ -244,11 +282,22 @@ class KnowledgeBase:
 
     @property
     def version(self) -> int:
-        """Monotonic mutation counter (0 = as-constructed/loaded)."""
+        """Monotonic mutation counter (0 = as-constructed/loaded).
+
+        Thread-safety: exact only on the writer thread (the
+        single-writer contract above).  Other threads must consume
+        versions via a pinned snapshot's ``generation``, never by
+        polling this property concurrently with mutations.
+        """
         return self._version
 
     def changes_since(self, version: int) -> tuple[list[str], list[str]]:
         """(changed_ids, removed_ids) strictly after ``version``.
+
+        Writer-thread API (single-writer contract): the engine's
+        ``refresh()`` calls this between mutations it itself observed;
+        calling it from a second thread mid-mutation can see a torn
+        change log.
 
         ``changed`` covers both new and updated documents; a doc that
         was removed and re-added since ``version`` appears only in
@@ -277,7 +326,14 @@ class KnowledgeBase:
         the quick check — pass ``verify_hashes=True`` to force content
         hashing for every scanned file (the paper's original O(N·hash)
         scan).
+
+        Single-writer: concurrent mutation from a second thread raises
+        (see ``_single_writer``).
         """
+        with self._single_writer("sync"):
+            return self._sync_locked(source_dir, verify_hashes)
+
+    def _sync_locked(self, source_dir: str, verify_hashes: bool) -> IngestStats:
         t0 = time.perf_counter()
         stats = IngestStats()
         seen: set[str] = set()
@@ -318,9 +374,14 @@ class KnowledgeBase:
         return stats
 
     def add_text(self, doc_id: str, text: str):
-        """Direct ingestion of an already-extracted document."""
-        digest = hashlib.sha256(text.encode("utf-8")).hexdigest()
-        self._ingest_doc(doc_id, text.encode("utf-8"), digest, 0.0)
+        """Direct ingestion of an already-extracted document.
+
+        Single-writer: concurrent mutation from a second thread raises
+        (see ``_single_writer``).
+        """
+        with self._single_writer("add_text"):
+            digest = hashlib.sha256(text.encode("utf-8")).hexdigest()
+            self._ingest_doc(doc_id, text.encode("utf-8"), digest, 0.0)
 
     # ---- materialization (cheap, vectorized, deferred) ------------------
 

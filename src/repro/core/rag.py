@@ -52,11 +52,24 @@ class RAGPipeline:
     alpha: float = 1.0
     beta: float = 1.0
     use_kernel: bool = False
-    engine: QueryEngine = field(default=None, init=False, repr=False)
+    # injectable: serving drivers pass the runtime's engine so the
+    # retrieval arrays exist once, not once per plane (serving/ owns
+    # the scheduler; RAGPipeline owns context packing + decode).
+    # Threading contract when injecting a ServingRuntime's engine:
+    # retrieval entry points here (answer/answer_batch) call
+    # engine.refresh() and so count as *writer-thread* operations under
+    # the single-writer contract (docs/ARCHITECTURE.md §7) — concurrent
+    # callers must retrieve via runtime.submit() and use generate()
+    # with the served results, as launch/serve.py does.
+    engine: QueryEngine | None = field(default=None, repr=False)
 
     def __post_init__(self):
-        self.engine = QueryEngine(self.kb, self.alpha, self.beta,
-                                  use_kernel=self.use_kernel)
+        if self.engine is None:
+            self.engine = QueryEngine(self.kb, self.alpha, self.beta,
+                                      use_kernel=self.use_kernel)
+        elif self.engine.kb is not self.kb:
+            raise ValueError("injected engine serves a different "
+                             "KnowledgeBase than this pipeline")
 
     def _pack_context(self, results: list[RetrievalResult]) -> list[int]:
         """Greedy context packing: best-scored docs first, truncated to

@@ -84,26 +84,32 @@ class Retriever:
         use_kernel: bool = False,
         prefilter: bool = False,
         engine: QueryEngine | None = None,
+        scoring_path: str = "auto",
     ):
+        from repro.core.engine import resolve_scoring_path
+
         self.kb = kb
         self.alpha = alpha
         self.beta = beta
-        self.use_kernel = use_kernel
+        # same backend-aware resolution as the engine, so a default
+        # Retriever and a default QueryEngine always agree on the path
+        path = resolve_scoring_path(scoring_path, use_kernel=use_kernel)
+        self.use_kernel = path == "kernel"
         self.prefilter = prefilter
         if engine is not None and (
             engine.kb is not kb
             or engine.alpha != alpha
             or engine.beta != beta
-            or engine.use_kernel != use_kernel
-            or engine.gemm_batch  # would break single-query bit-stability
+            or engine.scoring_path != path
         ):
             raise ValueError(
                 "shared engine disagrees with Retriever parameters "
                 f"(engine: same_kb={engine.kb is kb} alpha={engine.alpha} "
-                f"beta={engine.beta} use_kernel={engine.use_kernel})"
+                f"beta={engine.beta} scoring_path={engine.scoring_path} "
+                f"vs {path})"
             )
         self.engine = engine or QueryEngine(
-            kb, alpha=alpha, beta=beta, use_kernel=use_kernel
+            kb, alpha=alpha, beta=beta, scoring_path=path
         )
 
     # materialized state lives in the engine; expose it for compat

@@ -1,12 +1,17 @@
-"""RAG serving driver: knowledge container + generation plane.
+"""RAG serving driver: knowledge container + generation plane, fronted
+by the concurrent serving runtime.
 
-Loads (or builds) a knowledge container, instantiates the retrieval
-tier and an LM, and serves batched requests: batched retrieve (one
-QueryEngine dispatch per request batch) → pack → prefill → decode,
-with per-batch timing split into retrieval vs generation.
+Loads (or builds) a knowledge container, instantiates the serving
+runtime (micro-batching scheduler → generation-pinned snapshot →
+QueryEngine — docs/ARCHITECTURE.md §7) and an LM, then serves requests:
+every query is ``submit()``-ed individually and the scheduler coalesces
+them into batched scoring dispatches; generation (pack → prefill →
+decode) runs per request on the resolved retrievals.  Prints the
+serving metrics snapshot (p50/p99, QPS, batch occupancy, cache hit
+rate) at the end.
 
     PYTHONPATH=src python -m repro.launch.serve \
-        --corpus /path/to/docs --batch-size 8 \
+        --corpus /path/to/docs --max-batch 8 \
         --queries "what is INV-2024?" ...
 """
 from __future__ import annotations
@@ -20,6 +25,7 @@ from repro.configs import get as get_arch
 from repro.core.ingest import KnowledgeBase
 from repro.core.rag import RAGPipeline
 from repro.models import transformer as T
+from repro.serving import RequestRejected, ServingRuntime
 
 
 def main(argv=None):
@@ -32,10 +38,16 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=3)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--dim", type=int, default=4096)
-    ap.add_argument("--batch-size", type=int, default=8,
-                    help="requests per retrieval dispatch")
+    ap.add_argument("--max-batch", "--batch-size", dest="max_batch",
+                    type=int, default=8,
+                    help="scheduler flush cap (requests per dispatch)")
+    ap.add_argument("--flush-deadline-ms", type=float, default=2.0,
+                    help="micro-batch flush deadline (latency bound)")
+    ap.add_argument("--scoring-path", default="auto",
+                    choices=["auto", "map", "gemm", "kernel"],
+                    help="auto = kernel on TPU, bit-stable map elsewhere")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="route HSF scoring through the Pallas kernel")
+                    help="legacy alias for --scoring-path kernel")
     args = ap.parse_args(argv)
 
     if args.container:
@@ -51,36 +63,43 @@ def main(argv=None):
         kb.save(args.save)
         print(f"published container → {args.save}")
 
+    runtime = ServingRuntime(
+        kb,
+        max_batch=max(1, args.max_batch),
+        flush_deadline=args.flush_deadline_ms / 1e3,
+        scoring_path="kernel" if args.use_kernel else args.scoring_path,
+    )
     arch = get_arch(args.arch)
     cfg = arch.smoke_config  # CPU host: reduced generator
     params = T.init(jax.random.PRNGKey(0), cfg)
-    rag = RAGPipeline(kb, params, cfg, use_kernel=args.use_kernel)
+    rag = RAGPipeline(kb, params, cfg, engine=runtime.engine)
 
-    queries = args.queries
-    batch_size = max(1, args.batch_size)
-    for start in range(0, len(queries), batch_size):
-        batch = queries[start: start + batch_size]
+    with runtime:
+        # scope the throughput clock to serving, not model init
+        runtime.metrics.reset()
+        print(f"serving generation {runtime.generation} "
+              f"(scoring path: {runtime.engine.scoring_path}, "
+              f"flush ≤ {args.flush_deadline_ms:.1f} ms, "
+              f"batch ≤ {args.max_batch})")
         t0 = time.perf_counter()
-        retrieved = rag.engine.query_batch(batch, k=args.top_k)
-        t_retrieve = time.perf_counter() - t0
-        outs = [
-            rag.generate(q, res, args.max_new_tokens)
-            for q, res in zip(batch, retrieved)
-        ]
-        t_batch = time.perf_counter() - t0
-        print(f"\nbatch [{start}:{start + len(batch)}]: "
-              f"retrieve {t_retrieve * 1e3:.1f} ms "
-              f"({t_retrieve / len(batch) * 1e3:.2f} ms/q), "
-              f"total {t_batch * 1e3:.1f} ms")
-        for q, out in zip(batch, outs):
-            print(f"Q: {q}")
+        futures = []
+        for q in args.queries:
+            try:
+                futures.append((q, runtime.submit(q, k=args.top_k)))
+            except RequestRejected as exc:
+                print(f"REJECTED {q!r}: {exc}")
+        for q, fut in futures:
+            served = fut.result()
+            out = rag.generate(q, served.results, args.max_new_tokens)
+            print(f"\nQ: {q}  [generation {served.generation}"
+                  f"{', cached' if served.cached else ''}]")
             for r in out.retrieved:
                 mark = "*" if r.boosted else " "
                 print(f"  {mark} {r.doc_id:30s} score={r.score:.4f}")
             print(f"  generated token ids: {out.token_ids}")
-    hits = rag.engine.cache_stats()
-    print(f"\nquery cache: {hits['hits']} hits / "
-          f"{hits['hits'] + hits['misses']} lookups")
+        dt = time.perf_counter() - t0
+    print(f"\n{len(futures)} requests in {dt * 1e3:.1f} ms")
+    print(f"serving metrics: {runtime.metrics.format()}")
     return 0
 
 

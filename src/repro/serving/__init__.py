@@ -1,0 +1,132 @@
+"""The concurrent serving runtime (docs/ARCHITECTURE.md §7).
+
+Sits between callers and the batched ``QueryEngine``:
+
+    callers ──submit()──▶ MicroBatchScheduler ──flush──▶ EngineSnapshot@g
+                │   ▲           (scheduler.py)              (snapshot.py)
+                │   └── Future[ServedResult]                      ▲
+                │                                        publish() │ atomic swap
+                ├── ResultCache (query, k, generation)   SnapshotManager
+                │        (cache.py)                            ▲
+                └── ServingMetrics (metrics.py)     sync()/add_text + refresh()
+                                                     single writer thread
+
+``ServingRuntime`` is the one-stop composition: construct it over a
+``KnowledgeBase``, ``start()`` it (or use it as a context manager),
+``submit`` queries from any number of threads, and call ``publish()``
+from the (single) ingest thread after KB mutations.  Queries are
+micro-batched into the engine's power-of-two buckets, served from a
+generation-pinned immutable snapshot, cached per generation, and
+accounted in the metrics plane.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future
+
+from repro.core.engine import QueryEngine, RetrievalResult  # noqa: F401
+from repro.core.ingest import KnowledgeBase
+
+from repro.serving.cache import ResultCache
+from repro.serving.metrics import LatencyHistogram, ServingMetrics  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    MicroBatchScheduler,
+    RequestRejected,
+    ServedResult,
+)
+from repro.serving.snapshot import (  # noqa: F401
+    EngineSnapshot,
+    SnapshotManager,
+    results_equal,
+)
+
+__all__ = [
+    "EngineSnapshot",
+    "KnowledgeBase",
+    "LatencyHistogram",
+    "MicroBatchScheduler",
+    "QueryEngine",
+    "RequestRejected",
+    "ResultCache",
+    "ServedResult",
+    "ServingMetrics",
+    "ServingRuntime",
+    "SnapshotManager",
+    "results_equal",
+]
+
+
+class ServingRuntime:
+    """Scheduler + snapshots + result cache + metrics, wired together."""
+
+    def __init__(
+        self,
+        kb: KnowledgeBase | None = None,
+        *,
+        engine: QueryEngine | None = None,
+        max_batch: int = 16,
+        flush_deadline: float = 0.002,
+        max_queue: int = 1024,
+        result_cache_size: int = 2048,
+        **engine_kwargs,
+    ):
+        self.metrics = ServingMetrics()
+        self.snapshots = SnapshotManager(kb, engine=engine, **engine_kwargs)
+        self.cache = (
+            ResultCache(result_cache_size) if result_cache_size else None
+        )
+        self.scheduler = MicroBatchScheduler(
+            self.snapshots,
+            max_batch=max_batch,
+            flush_deadline=flush_deadline,
+            max_queue=max_queue,
+            cache=self.cache,
+            metrics=self.metrics,
+        )
+
+    # ---- lifecycle ------------------------------------------------------
+
+    def start(self) -> "ServingRuntime":
+        self.scheduler.start()
+        return self
+
+    def stop(self) -> None:
+        self.scheduler.stop()
+
+    def __enter__(self) -> "ServingRuntime":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---- request plane (any thread) -------------------------------------
+
+    def submit(self, text: str, k: int = 5) -> Future:
+        """Future[ServedResult]; raises RequestRejected on backpressure."""
+        return self.scheduler.submit(text, k)
+
+    def query_batch(
+        self, texts: list[str], k: int = 5
+    ) -> list[list[RetrievalResult]]:
+        """Blocking convenience: submit all, wait for all.  Same
+        signature/result shape as ``QueryEngine.query_batch`` so drivers
+        can switch entry points without restructuring."""
+        futures = [self.submit(t, k) for t in texts]
+        return [f.result().results for f in futures]
+
+    # ---- ingest plane (the single writer thread) ------------------------
+
+    def publish(self) -> int:
+        """Refresh the engine from the KB's dirty log and atomically
+        publish the next generation; returns the published generation.
+        Call from the same thread that mutates the KB."""
+        return self.snapshots.publish().generation
+
+    # ---- introspection ---------------------------------------------------
+
+    @property
+    def engine(self) -> QueryEngine:
+        return self.snapshots.engine
+
+    @property
+    def generation(self) -> int:
+        return self.snapshots.generation

@@ -1,0 +1,81 @@
+"""Serving-tier result cache, keyed on (canonical query, k, generation).
+
+Distinct from — and composing with — the engine's query-*vector* LRU:
+that cache skips tokenize/hash/scatter for repeated query texts; this
+one skips the entire scoring dispatch for repeated *(query, k)* pairs
+against the *same corpus generation*.  Putting the generation in the
+key makes invalidation free: publishing generation *g+1* means new
+lookups simply miss (their key differs), and entries for dead
+generations age out of the LRU naturally — no epoch sweeps, no locks
+held during publication.  ``evict_generations_before`` is an optional
+hygiene hook for long-lived processes with tiny corpora where old-gen
+entries would otherwise linger.
+
+Values are the scheduler's result lists; they are treated as immutable
+by every consumer (RetrievalResult rows are never mutated after
+construction), so a hit returns the stored list without copying.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+
+from repro.core.tokenizer import normalize
+
+
+def result_key(text: str, k: int, generation: int) -> tuple[str, int, int]:
+    """Canonical cache key — same normalization as the engine's
+    query-vector LRU, so "INV-2024" and "inv-2024" share one entry."""
+    return (normalize(text), k, generation)
+
+
+class ResultCache:
+    """Thread-safe LRU over full retrieval results."""
+
+    def __init__(self, capacity: int = 2048):
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._data: OrderedDict[tuple, object] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, text: str, k: int, generation: int):
+        key = result_key(text, k, generation)
+        with self._lock:
+            val = self._data.get(key)
+            if val is None:
+                self.misses += 1
+                return None
+            self._data.move_to_end(key)
+            self.hits += 1
+            return val
+
+    def put(self, text: str, k: int, generation: int, results) -> None:
+        key = result_key(text, k, generation)
+        with self._lock:
+            self._data[key] = results
+            self._data.move_to_end(key)
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+
+    def evict_generations_before(self, generation: int) -> int:
+        """Drop entries pinned to generations older than ``generation``;
+        returns how many were evicted."""
+        with self._lock:
+            dead = [key for key in self._data if key[2] < generation]
+            for key in dead:
+                del self._data[key]
+            return len(dead)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "entries": len(self._data),
+                "capacity": self.capacity,
+            }

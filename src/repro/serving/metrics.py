@@ -1,0 +1,181 @@
+"""Serving metrics plane: counters + latency histograms.
+
+Zero-dependency observability for the serving runtime: a fixed-bucket
+log-spaced latency histogram (no unbounded sample lists — a serving
+process must not grow memory with request count) and a small set of
+counters, all behind one lock, exported as a plain dict via
+``snapshot()`` so drivers can print or ship them anywhere.
+
+Recorded by the scheduler (serving/scheduler.py):
+- ``requests`` / ``completed`` / ``rejected`` / ``failed``
+- ``cache_hits`` / ``cache_misses`` (serving-tier result cache)
+- ``batches`` / batch occupancy (requests per flush) / ``scored``
+  (unique queries actually dispatched — occupancy minus coalesced
+  duplicates)
+- end-to-end request latency (submit → future resolved): p50/p99/mean
+- throughput (completed / wall-clock since construction or ``reset``)
+"""
+from __future__ import annotations
+
+import threading
+import time
+from bisect import bisect_left
+
+
+class LatencyHistogram:
+    """Fixed log-spaced buckets, 10 µs … ~79 s (×1.25 per bucket).
+
+    ``percentile`` returns the geometric midpoint of the bucket holding
+    the requested rank — a ≤ ~12 % quantization error, plenty for
+    p50/p99 serving dashboards, with O(1) memory forever.
+    """
+
+    N_BUCKETS = 72
+    BASE = 10e-6
+    GROWTH = 1.25
+
+    def __init__(self):
+        self.bounds = [
+            self.BASE * self.GROWTH ** i for i in range(self.N_BUCKETS)
+        ]
+        self.counts = [0] * (self.N_BUCKETS + 1)  # +1 overflow bucket
+        self.n = 0
+        self.total = 0.0
+        self.max = 0.0
+
+    def record(self, seconds: float) -> None:
+        self.counts[bisect_left(self.bounds, seconds)] += 1
+        self.n += 1
+        self.total += seconds
+        if seconds > self.max:
+            self.max = seconds
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100] → seconds (0.0 when empty)."""
+        if self.n == 0:
+            return 0.0
+        rank = q / 100.0 * (self.n - 1)
+        cum = 0
+        for i, c in enumerate(self.counts):
+            cum += c
+            if cum > rank:
+                if i == 0:
+                    return min(self.bounds[0] / self.GROWTH ** 0.5, self.max)
+                if i >= self.N_BUCKETS:
+                    return self.max
+                # geometric bucket midpoint, clamped to the observed max
+                return min(self.bounds[i - 1] * self.GROWTH ** 0.5, self.max)
+        return self.max
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+
+class ServingMetrics:
+    """Thread-safe counters + histograms for one serving runtime."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.reset()
+
+    def reset(self) -> None:
+        """Zero everything and restart the throughput clock (used by
+        load generators to scope measurements to a timed window)."""
+        with self._lock:
+            self._t0 = time.perf_counter()
+            self.requests = 0
+            self.completed = 0
+            self.rejected = 0
+            self.failed = 0
+            self.cache_hits = 0
+            self.cache_misses = 0
+            self.batches = 0
+            self.occupancy_sum = 0
+            self.occupancy_max = 0
+            self.scored = 0
+            self.latency = LatencyHistogram()
+
+    # ---- recording hooks (scheduler) -----------------------------------
+
+    def on_submit(self) -> None:
+        with self._lock:
+            self.requests += 1
+
+    def on_cache_hit(self, latency_s: float = 0.0) -> None:
+        """A submit-time cache hit completes immediately; its (near-zero)
+        latency is recorded so the histogram covers the same request
+        population as ``completed``/``qps``."""
+        with self._lock:
+            self.cache_hits += 1
+            self.completed += 1
+            self.latency.record(latency_s)
+
+    def on_cache_miss(self) -> None:
+        with self._lock:
+            self.cache_misses += 1
+
+    def on_reject(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def on_batch(self, occupancy: int, scored: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.occupancy_sum += occupancy
+            self.scored += scored
+            if occupancy > self.occupancy_max:
+                self.occupancy_max = occupancy
+
+    def on_complete(self, latency_s: float) -> None:
+        with self._lock:
+            self.completed += 1
+            self.latency.record(latency_s)
+
+    def on_fail(self) -> None:
+        with self._lock:
+            self.failed += 1
+
+    # ---- export ---------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """One coherent dict of everything (the drivers print this)."""
+        with self._lock:
+            elapsed = max(time.perf_counter() - self._t0, 1e-9)
+            lookups = self.cache_hits + self.cache_misses
+            return {
+                "requests": self.requests,
+                "completed": self.completed,
+                "rejected": self.rejected,
+                "failed": self.failed,
+                "qps": self.completed / elapsed,
+                "elapsed_s": elapsed,
+                "latency_p50_ms": self.latency.percentile(50) * 1e3,
+                "latency_p99_ms": self.latency.percentile(99) * 1e3,
+                "latency_mean_ms": self.latency.mean * 1e3,
+                "latency_max_ms": self.latency.max * 1e3,
+                "batches": self.batches,
+                "batch_occupancy_mean": (
+                    self.occupancy_sum / self.batches if self.batches else 0.0
+                ),
+                "batch_occupancy_max": self.occupancy_max,
+                "scored_queries": self.scored,
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "cache_hit_rate": self.cache_hits / lookups if lookups else 0.0,
+            }
+
+    def format(self) -> str:
+        """Compact one-paragraph rendering for CLI drivers."""
+        s = self.snapshot()
+        return (
+            f"served {s['completed']}/{s['requests']} requests "
+            f"({s['rejected']} rejected) at {s['qps']:.0f} qps | "
+            f"latency p50 {s['latency_p50_ms']:.2f} ms "
+            f"p99 {s['latency_p99_ms']:.2f} ms | "
+            f"{s['batches']} flushes, mean occupancy "
+            f"{s['batch_occupancy_mean']:.1f} "
+            f"(max {s['batch_occupancy_max']}) | "
+            f"result cache {s['cache_hits']}/{s['cache_hits'] + s['cache_misses']}"
+            f" hits"
+        )

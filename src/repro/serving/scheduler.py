@@ -1,0 +1,247 @@
+"""Micro-batching request scheduler: the concurrent front door.
+
+Callers ``submit(text, k)`` and get a ``Future`` back immediately; a
+single flusher thread drains the bounded admission queue, coalescing
+requests into one scoring dispatch per flush.  A flush closes when
+either ``max_batch`` requests have accumulated or ``flush_deadline``
+seconds have passed since the first request of the window — the classic
+throughput/latency knob pair (cf. Shen et al., arXiv 2412.11854: batch
+formation dominates end-to-end RAG serving latency).  The engine's
+power-of-two shape buckets mean a flush of 9 scores in the same jit
+bucket as 16, so ``max_batch`` should be a bucket boundary.
+
+Design points:
+
+- **Bounded admission, explicit rejection.**  The queue has a hard
+  capacity; when it is full, ``submit`` raises ``RequestRejected``
+  instead of growing without bound.  Callers see backpressure as an
+  exception at the door, never as silent unbounded latency.
+- **Generation-consistent flushes.**  Each flush pins the *current*
+  snapshot once and serves every request in the flush from it, so one
+  batch never straddles a container publication (torn reads are
+  structurally impossible — see serving/snapshot.py).
+- **Duplicate coalescing.**  Requests in one flush that normalize to
+  the same (query, k) are scored once and fanned out to all futures.
+- **Result-cache compose.**  On submit, a hit in the serving-tier
+  result cache (keyed with the current generation) resolves the future
+  immediately — the request never enters the queue.  Flush results are
+  inserted back under the generation that served them.
+- **One scoring thread.**  Scoring stays single-threaded (the flusher),
+  so the jit dispatch path needs no locking; concurrency lives at the
+  queue, and readers scale by batching, not by fighting for the device.
+
+The future resolves to a ``ServedResult`` carrying the results *and*
+the generation that served them, so callers (and the stress tests) can
+audit exactly which corpus state answered.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+
+from repro.core.engine import RetrievalResult
+from repro.core.tokenizer import normalize
+
+from repro.serving.cache import ResultCache
+from repro.serving.metrics import ServingMetrics
+
+
+class RequestRejected(RuntimeError):
+    """Admission queue full — explicit backpressure to the caller."""
+
+
+@dataclass
+class ServedResult:
+    """What a resolved future holds."""
+
+    results: list[RetrievalResult]
+    generation: int
+    cached: bool = False
+
+
+@dataclass
+class _Pending:
+    text: str
+    k: int
+    future: Future = field(default_factory=Future)
+    t_submit: float = field(default_factory=time.perf_counter)
+
+
+_STOP = object()
+
+
+class MicroBatchScheduler:
+    """See module docstring.  ``source`` is anything with a ``current``
+    attribute yielding a snapshot that has ``generation`` and
+    ``query_batch(texts, k)`` — in practice a
+    ``serving.snapshot.SnapshotManager``."""
+
+    def __init__(
+        self,
+        source,
+        *,
+        max_batch: int = 16,
+        flush_deadline: float = 0.002,
+        max_queue: int = 1024,
+        cache: ResultCache | None = None,
+        metrics: ServingMetrics | None = None,
+    ):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.source = source
+        self.max_batch = max_batch
+        self.flush_deadline = flush_deadline
+        self.cache = cache
+        self.metrics = metrics or ServingMetrics()
+        self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._thread: threading.Thread | None = None
+        self._stopping = threading.Event()
+
+    # ---- lifecycle ------------------------------------------------------
+
+    def start(self) -> "MicroBatchScheduler":
+        if self._thread is not None:
+            return self
+        self._stopping.clear()
+        self._thread = threading.Thread(
+            target=self._worker, name="microbatch-flusher", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain-free shutdown: in-flight flushes finish; anything still
+        queued is rejected so no caller blocks forever."""
+        self._stopping.set()
+        if self._thread is not None:
+            self._queue.put(_STOP)  # wake the flusher if it is blocked
+            self._thread.join()
+            self._thread = None
+        self._drain_reject()
+
+    def _drain_reject(self) -> None:
+        while True:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            if item is not _STOP and not item.future.done():
+                item.future.set_exception(
+                    RequestRejected("scheduler stopped")
+                )
+                self.metrics.on_reject()
+
+    def __enter__(self) -> "MicroBatchScheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ---- submission -----------------------------------------------------
+
+    def submit(self, text: str, k: int = 5) -> Future:
+        """Enqueue one request; returns a Future[ServedResult].
+
+        Raises ``RequestRejected`` when the admission queue is full or
+        the scheduler is stopped (bounded memory, explicit backpressure).
+        """
+        t_submit = time.perf_counter()
+        self.metrics.on_submit()
+        if self._stopping.is_set():
+            self.metrics.on_reject()
+            raise RequestRejected("scheduler stopped")
+        if self.cache is not None:
+            snap = self.source.current
+            hit = self.cache.get(text, k, snap.generation)
+            if hit is not None:
+                self.metrics.on_cache_hit(time.perf_counter() - t_submit)
+                fut: Future = Future()
+                fut.set_result(
+                    ServedResult(hit, snap.generation, cached=True)
+                )
+                return fut
+            self.metrics.on_cache_miss()
+        req = _Pending(text=text, k=k)
+        try:
+            self._queue.put_nowait(req)
+        except queue.Full:
+            self.metrics.on_reject()
+            raise RequestRejected(
+                f"admission queue full ({self._queue.maxsize} pending)"
+            ) from None
+        if self._stopping.is_set():
+            # raced with stop(): its drain may already have run, leaving
+            # this request in a dead queue — drain again so the future
+            # is rejected, never silently stranded
+            self._drain_reject()
+            if req.future.done() and req.future.exception() is not None:
+                raise RequestRejected("scheduler stopped") from None
+        return req.future
+
+    # ---- the flusher ----------------------------------------------------
+
+    def _worker(self) -> None:
+        while True:
+            try:
+                first = self._queue.get(timeout=0.1)
+            except queue.Empty:
+                if self._stopping.is_set():
+                    return
+                continue
+            if first is _STOP:
+                return
+            batch = [first]
+            deadline = time.perf_counter() + self.flush_deadline
+            while len(batch) < self.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    item = self._queue.get(timeout=remaining)
+                except queue.Empty:
+                    break
+                if item is _STOP:
+                    self._flush(batch)
+                    return
+                batch.append(item)
+            self._flush(batch)
+
+    def _flush(self, batch: list[_Pending]) -> None:
+        snap = self.source.current  # pinned once for the whole flush
+        scored = 0
+        try:
+            by_k: dict[int, list[_Pending]] = {}
+            for req in batch:
+                by_k.setdefault(req.k, []).append(req)
+            for k, group in by_k.items():
+                # duplicate coalescing: one scored column per canonical
+                # query text, fanned out to every requesting future
+                order: dict[str, int] = {}
+                texts: list[str] = []
+                for req in group:
+                    key = normalize(req.text)
+                    if key not in order:
+                        order[key] = len(texts)
+                        texts.append(req.text)
+                results = snap.query_batch(texts, k)
+                scored += len(texts)
+                for req in group:
+                    res = results[order[normalize(req.text)]]
+                    if self.cache is not None:
+                        self.cache.put(req.text, k, snap.generation, res)
+                    self.metrics.on_complete(
+                        time.perf_counter() - req.t_submit
+                    )
+                    req.future.set_result(
+                        ServedResult(res, snap.generation)
+                    )
+        except Exception as exc:  # noqa: BLE001 — fail the batch, not the loop
+            for req in batch:
+                if not req.future.done():
+                    self.metrics.on_fail()
+                    req.future.set_exception(exc)
+        finally:
+            self.metrics.on_batch(len(batch), scored)

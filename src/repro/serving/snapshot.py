@@ -1,0 +1,179 @@
+"""Generation-pinned snapshots: immutable read plane over a live engine.
+
+The concurrency model mirrors the sharded container's manifest design
+(core/container.py): readers pin a *generation*; the single writer
+builds the next one and publishes it with one atomic reference swap.
+Applied to the query plane:
+
+- ``EngineSnapshot`` freezes everything a query needs at generation
+  *g*: the device-resident doc matrix + signature matrix (jnp arrays
+  are immutable — ``refresh()`` only ever *rebinds* the engine's
+  attributes, so a captured array can never be half-updated), the doc
+  id layout, and a **copy** of the vectorizer's idf state (df array +
+  doc count) so query vectors are built against *g*'s statistics, not
+  whatever the live ingest thread has mutated df to meanwhile.  Its
+  ``query_batch`` is a pure function over that frozen state — safe to
+  call from any number of threads, never refreshes, bit-identical to
+  ``QueryEngine.query_batch`` on a KB frozen at the same generation.
+
+- ``SnapshotManager`` owns the live engine and the current snapshot.
+  ``publish()`` (writer thread only) runs the engine's incremental
+  ``refresh()`` — O(changed docs), the whole point — captures a new
+  snapshot, and swaps the ``current`` reference.  Readers that already
+  hold generation *g* keep serving it untouched; new requests see
+  *g+1*.  Queries never observe a partially refreshed matrix, and live
+  ingest never blocks serving (verified under contention in
+  tests/test_serving.py).
+
+Single-writer contract (asserted by KnowledgeBase's write guard): one
+thread performs all KB mutations *and* all ``publish()`` calls.  Any
+number of threads may read ``current`` / call snapshot queries.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+from repro.core import signature as sigmod
+from repro.core.engine import (
+    QueryEngine,
+    RetrievalResult,
+    pack_query_arrays,
+    results_from_topk,
+    score_batch_arrays,
+)
+from repro.core.vectorizer import HashedTfIdf
+
+
+@dataclass(frozen=True)
+class EngineSnapshot:
+    """An immutable view of one engine generation (see module docs)."""
+
+    generation: int
+    doc_ids: tuple[str, ...]
+    doc_vecs: object          # jnp [N, D] — immutable device array
+    doc_sigs: object          # jnp [N, W]
+    vectorizer: HashedTfIdf   # private copy: df frozen at `generation`
+    sig_words: int
+    alpha: float
+    beta: float
+    scoring_path: str
+    kernel_operands: tuple | None  # block-aligned pad, precomputed
+    max_batch: int
+
+    @staticmethod
+    def capture(engine: QueryEngine) -> "EngineSnapshot":
+        """Freeze the engine's current generation.  Caller (the writer
+        thread) must have run ``engine.refresh()`` first so the arrays
+        reflect ``engine._synced == kb.version``."""
+        vec = engine.kb.vectorizer
+        return EngineSnapshot(
+            generation=engine._synced,
+            doc_ids=tuple(engine.doc_ids),
+            doc_vecs=engine.doc_vecs,
+            doc_sigs=engine.doc_sigs,
+            vectorizer=HashedTfIdf.from_state(vec.state(), vec.df.copy()),
+            sig_words=engine.kb.sig_words,
+            alpha=engine.alpha,
+            beta=engine.beta,
+            scoring_path=engine.scoring_path,
+            kernel_operands=(
+                engine._kernel_operands() if engine.use_kernel else None
+            ),
+            max_batch=engine.max_batch,
+        )
+
+    @property
+    def n_docs(self) -> int:
+        return len(self.doc_ids)
+
+    def query_batch(
+        self, texts: list[str], k: int = 5
+    ) -> list[list[RetrievalResult]]:
+        """Score against this generation — pure, thread-safe, no refresh.
+
+        Query vectors are built from the snapshot's own idf copy, so the
+        result is bit-identical to ``QueryEngine.query_batch`` on a KB
+        frozen at ``generation`` even while the live KB mutates.
+        """
+        if not self.doc_ids or not texts:
+            return [[] for _ in texts]
+        out: list[list[RetrievalResult]] = []
+        for start in range(0, len(texts), self.max_batch):
+            out.extend(self._chunk(texts[start: start + self.max_batch], k))
+        return out
+
+    def _chunk(self, texts: list[str], k: int):
+        pairs = [
+            (
+                self.vectorizer.query_vector(t),
+                sigmod.query_signature(t, width_words=self.sig_words),
+            )
+            for t in texts
+        ]
+        qv, qs = pack_query_arrays(pairs, self.vectorizer.dim, self.sig_words)
+        n = len(self.doc_ids)
+        vals, idx, cos, ind = score_batch_arrays(
+            self.doc_vecs, self.doc_sigs, qv, qs,
+            scoring_path=self.scoring_path, k=min(k, n),
+            alpha=self.alpha, beta=self.beta, n_docs=n,
+            kernel_operands=self.kernel_operands,
+        )
+        return results_from_topk(self.doc_ids, len(texts),
+                                 vals, idx, cos, ind)
+
+
+class SnapshotManager:
+    """Owns the live engine + the current published snapshot.
+
+    ``current`` is a single attribute read (atomic under the GIL);
+    ``publish()`` serializes writers with a lock — but the lock is never
+    taken on the read path, so publication cannot stall readers.
+    """
+
+    def __init__(self, kb=None, engine: QueryEngine | None = None,
+                 **engine_kwargs):
+        if engine is None:
+            if kb is None:
+                raise ValueError("need a KnowledgeBase or a QueryEngine")
+            engine = QueryEngine(kb, **engine_kwargs)
+        self.engine = engine
+        self._publish_lock = threading.Lock()
+        with self._publish_lock:
+            engine.refresh()
+            self._current = EngineSnapshot.capture(engine)
+
+    @property
+    def current(self) -> EngineSnapshot:
+        return self._current
+
+    @property
+    def generation(self) -> int:
+        return self._current.generation
+
+    def publish(self) -> EngineSnapshot:
+        """Refresh the engine from the KB's dirty log and atomically
+        swap in the new generation.  Writer thread only (the same
+        thread that mutates the KB — see the single-writer contract).
+        No-op (returns the live snapshot) when nothing changed."""
+        with self._publish_lock:
+            self.engine.refresh()
+            if self.engine._synced == self._current.generation:
+                return self._current
+            snap = EngineSnapshot.capture(self.engine)
+            self._current = snap  # atomic reference swap — the publish
+            return snap
+
+
+def results_equal(a: list[RetrievalResult], b: list[RetrievalResult]) -> bool:
+    """Bit-exact result-list equality (used by tests and examples to
+    verify the pinned-generation contract)."""
+    if len(a) != len(b):
+        return False
+    return all(
+        x.doc_id == y.doc_id
+        and x.score == y.score
+        and x.cosine == y.cosine
+        and x.boosted == y.boosted
+        for x, y in zip(a, b)
+    )

@@ -4,7 +4,8 @@ rebuild bit-exactly, and the query cache never changes results."""
 import numpy as np
 import pytest
 
-from repro.core.engine import QueryEngine, _bucket
+from repro.core import engine as engine_mod
+from repro.core.engine import QueryEngine, _bucket, resolve_scoring_path
 from repro.core.ingest import KnowledgeBase
 from repro.core.retrieval import Retriever
 from repro.data.corpus import make_corpus
@@ -275,6 +276,28 @@ def test_cache_hits_return_identical_results():
         [(r.doc_id, r.score) for r in first]
 
 
+def test_query_vector_cache_not_stale_after_explicit_refresh():
+    """Regression (PR 3): the query-vector LRU must not serve vectors
+    weighted with pre-refresh idf statistics.  An *explicit*
+    ``refresh()`` (the serving runtime's publish path — no query in
+    between) has to invalidate it just like the query-driven refresh."""
+    kb, entities = _kb(n_docs=30)
+    engine = QueryEngine(kb)
+    code = next(iter(entities))
+    engine.query_batch([code, "generic filler"], k=3)
+    assert engine.cache_stats()["entries"] == 2
+
+    kb.add_text("fresh_doc", "completely fresh document shifting idf")
+    stats = engine.refresh()  # idf moved → cached vectors are stale
+    assert stats.reweighted
+    assert engine.cache_stats()["entries"] == 0  # invalidated, not kept
+
+    got = engine.query_batch([code], k=3)[0]
+    want = QueryEngine(kb).query_batch([code], k=3)[0]  # cold: no cache
+    assert [(r.doc_id, r.score, r.cosine) for r in got] == \
+        [(r.doc_id, r.score, r.cosine) for r in want]
+
+
 def test_cache_invalidated_when_idf_changes():
     kb, entities = _kb(n_docs=30)
     engine = QueryEngine(kb)
@@ -363,6 +386,54 @@ def test_engine_adopts_persisted_matrix_without_revectorizing(
     kb2._remove_doc("doc_00009.txt")
     engine.refresh()  # u-cache builds lazily here
     _assert_matches_cold(engine, kb2)
+
+
+# --------------------------------------------------------------------------
+# scoring-path auto-selection
+# --------------------------------------------------------------------------
+
+def test_scoring_path_auto_picks_kernel_only_on_tpu(monkeypatch):
+    """PR 2's shoot-out: the kernel path is ~4x slower than gemm in CPU
+    interpret mode — "auto" must route it only on real TPU backends,
+    with explicit overrides as the escape hatch."""
+    kb, _ = _kb(n_docs=8, n_entities=2)
+
+    monkeypatch.setattr(engine_mod, "_default_backend", lambda: "cpu")
+    assert QueryEngine(kb).scoring_path == "map"
+    assert resolve_scoring_path("auto") == "map"
+    # explicit overrides win regardless of backend
+    assert QueryEngine(kb, scoring_path="kernel").scoring_path == "kernel"
+    assert QueryEngine(kb, use_kernel=True).scoring_path == "kernel"
+    assert QueryEngine(kb, gemm_batch=True).scoring_path == "gemm"
+
+    monkeypatch.setattr(engine_mod, "_default_backend", lambda: "tpu")
+    eng = QueryEngine(kb)
+    assert eng.scoring_path == "kernel" and eng.use_kernel
+    assert resolve_scoring_path("auto") == "kernel"
+    # the escape hatch: force the bit-stable path on TPU
+    assert QueryEngine(kb, scoring_path="map").scoring_path == "map"
+
+    with pytest.raises(ValueError):
+        resolve_scoring_path("bogus")
+    with pytest.raises(ValueError):
+        resolve_scoring_path(use_kernel=True, gemm_batch=True)
+
+
+def test_scoring_path_auto_agrees_between_engine_and_retriever(monkeypatch):
+    """A default Retriever over a default engine must not trip the
+    shared-engine validation on any backend (both resolve "auto" the
+    same way)."""
+    kb, entities = _kb(n_docs=16, n_entities=2)
+    for backend in ("cpu", "tpu"):
+        monkeypatch.setattr(engine_mod, "_default_backend", lambda b=backend: b)
+        engine = QueryEngine(kb)
+        retriever = Retriever(kb, engine=engine)  # must not raise
+        assert retriever.engine is engine
+        code = next(iter(entities))
+        # the resolved path actually serves queries (kernel runs in
+        # interpret mode on the CPU host)
+        assert retriever.query(code, k=1)[0].doc_id == \
+            engine.query_batch([code], k=1)[0][0].doc_id
 
 
 def test_retriever_rejects_mismatched_shared_engine():
