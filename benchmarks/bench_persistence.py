@@ -1,0 +1,137 @@
+"""Persistence-plane benchmarks: journaled delta saves vs full rewrites.
+
+The paper's 31.6x incremental-ingest win (§3.3) used to stop at the
+persistence boundary: every ``save()`` re-serialized all N docs.  This
+bench measures the layer that carries O(U) through to disk
+(docs/ARCHITECTURE.md §8):
+
+- **bytes written**: one full ``save()`` vs ``save_delta()`` appends
+  swept over delta sizes U ∈ {1, 10, 100} — the acceptance bar is a
+  1-doc delta into a ≥1k-doc container writing ≥10x fewer bytes than
+  the full save (it is typically 2-3 orders of magnitude);
+- **publish latency**: wall time of full save vs delta append (the
+  fsync-bound floor of a durable publish) and of ``load()`` replaying
+  base + journal;
+- **compaction**: folding the journal back into a fresh base.
+
+CSV rows follow the suite convention (``name,us_per_call,derived``).
+
+    PYTHONPATH=src python -m benchmarks.bench_persistence [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+import time
+
+from repro.core.container import journal_size
+from repro.core.ingest import KnowledgeBase
+from repro.data.corpus import make_corpus
+
+FULL = (10_000, 1024)   # (n_docs, dim)
+SMOKE = (1_000, 256)    # CI: still ≥1k docs so the 10x bar is honest
+
+DELTA_SIZES = (1, 10, 100)
+
+
+def _build_kb(n_docs: int, dim: int) -> tuple[KnowledgeBase, list[str]]:
+    docs, _ = make_corpus(n_docs=n_docs, n_entities=16, seed=0)
+    kb = KnowledgeBase(dim=dim)
+    for i, d in enumerate(docs):
+        kb.add_text(f"doc_{i:06d}.txt", d)
+    return kb, docs
+
+
+def bench_persistence(smoke: bool = False):
+    n_docs, dim = SMOKE if smoke else FULL
+    kb, docs = _build_kb(n_docs, dim)
+    rows = []
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "kb.ragdb")
+
+        t0 = time.perf_counter()
+        kb.save(path)
+        full_s = time.perf_counter() - t0
+        full_bytes = os.path.getsize(path)
+        rows.append((
+            f"persist_full_save_{n_docs}docs",
+            full_s * 1e6,
+            f"bytes={full_bytes}",
+        ))
+
+        ratio_u1 = None
+        for u in DELTA_SIZES:
+            if u > n_docs:
+                continue
+            for j in range(u):
+                kb.add_text(f"doc_{j:06d}.txt",
+                            docs[j] + f" updated UPD-{u}-{j}")
+            before = journal_size(path)
+            t0 = time.perf_counter()
+            gen = kb.save_delta(path, compact_ratio=None)
+            delta_s = time.perf_counter() - t0
+            delta_bytes = journal_size(path) - before
+            ratio = full_bytes / max(delta_bytes, 1)
+            if u == 1:
+                ratio_u1 = ratio
+            rows.append((
+                f"persist_delta_u{u}_{n_docs}docs",
+                delta_s * 1e6,
+                f"bytes={delta_bytes}_full={full_bytes}"
+                f"_ratio={ratio:.0f}x_gen={gen}",
+            ))
+
+        # acceptance: a 1-doc delta publish into a ≥1k-doc container
+        # writes ≥10x fewer bytes than a full save
+        assert ratio_u1 is not None and ratio_u1 >= 10, (
+            f"1-doc delta wrote only {ratio_u1:.1f}x fewer bytes than a "
+            f"full save (need ≥10x)"
+        )
+
+        # replay: load() = base + journal, and it must see the deltas
+        t0 = time.perf_counter()
+        out = KnowledgeBase.load(path)
+        load_s = time.perf_counter() - t0
+        assert out.n_docs == kb.n_docs
+        last_u = max(u for u in DELTA_SIZES if u <= n_docs)
+        assert f"UPD-{last_u}-0" in out.texts["doc_000000.txt"]
+        assert out.loaded_generation == kb.loaded_generation
+        rows.append((
+            f"persist_load_replay_{n_docs}docs",
+            load_s * 1e6,
+            f"journal_bytes={journal_size(path)}"
+            f"_generation={out.loaded_generation}",
+        ))
+
+        # compaction: fold the journal into a fresh base
+        t0 = time.perf_counter()
+        kb.compact(path)
+        compact_s = time.perf_counter() - t0
+        assert journal_size(path) == 0
+        rows.append((
+            f"persist_compact_{n_docs}docs",
+            compact_s * 1e6,
+            f"base_bytes={os.path.getsize(path)}_journal_bytes=0",
+        ))
+    return rows
+
+
+ALL = [bench_persistence]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="1k-doc corpus (CI smoke: still large enough "
+                    "to hold the ≥10x delta-vs-full bytes bar)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for fn in ALL:
+        for name, us, derived in fn(smoke=args.smoke):
+            print(f"{name},{us:.1f},{derived}", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,7 @@
 #   kernels           HSF / top-k micro-benchmarks
 #   scale             sharded-retrieval payload accounting
 #   serving           micro-batching scheduler load tests (open/closed loop)
+#   persistence       journaled delta saves vs full container rewrites
 #
 # Roofline tables are a separate heavier entry point
 # (``python -m benchmarks.roofline``) because they compile dry-run
@@ -17,11 +18,17 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_paper, bench_scale, bench_serving
+    from benchmarks import (
+        bench_paper,
+        bench_persistence,
+        bench_scale,
+        bench_serving,
+    )
 
     print("name,us_per_call,derived")
     failures = 0
-    for fn in bench_paper.ALL + bench_scale.ALL + bench_serving.ALL:
+    for fn in (bench_paper.ALL + bench_scale.ALL + bench_serving.ALL
+               + bench_persistence.ALL):
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}")

@@ -85,32 +85,18 @@ class Checkpointer:
             self._thread = None
 
     def _write(self, step: int, flat: dict, extra_meta: dict) -> int:
-        gen = publish_sharded(
+        # the manifest's generation-history GC enforces the keep window
+        # exactly (files referenced by the last ``keep`` generations
+        # survive; older unreferenced shards are collected) — no more
+        # mtime heuristics
+        return publish_sharded(
             self.root,
             shard_segments=[flat],
             shard_metas=[{"step": step}],
             meta={"step": step, **extra_meta},
+            gc=True,
+            gc_grace=self.keep,
         )
-        self._gc()
-        return gen
-
-    def _gc(self):
-        """Keep the newest ``keep`` generations' shard files."""
-        m = ShardedContainer.open(self.root)
-        live = {s["file"] for s in m.shards}
-        files = sorted(
-            f for f in os.listdir(self.root)
-            if f.startswith("shard-") and f.endswith(".ragdb")
-        )
-        # conservative: only delete files not referenced by the manifest
-        # and older than the keep window by mtime
-        if len(files) > self.keep + 1:
-            by_age = sorted(
-                (os.path.getmtime(os.path.join(self.root, f)), f)
-                for f in files if f not in live
-            )
-            for _, f in by_age[: max(0, len(by_age) - self.keep)]:
-                os.unlink(os.path.join(self.root, f))
 
     # ---- restore --------------------------------------------------------
 

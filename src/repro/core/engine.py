@@ -403,6 +403,11 @@ class QueryEngine:
 
     def _apply_delta(self, changed: list[str], stats: RefreshStats) -> None:
         kb = self.kb
+        if not changed and sorted(kb.records) == self.doc_ids:
+            # metadata-only mutation (e.g. the KB re-armed stat fast-path
+            # keys on a touched-but-unchanged file): no rows to patch and
+            # df cannot have moved — skip the u-cache materialization
+            return
         self._ensure_u()
         # the O(U) part: re-vectorize only the dirty docs
         new_u = {
@@ -532,6 +537,15 @@ class QueryEngine:
         return cache[2], cache[3]
 
     # ---- introspection ---------------------------------------------------
+
+    @property
+    def synced_version(self) -> int:
+        """The KB mutation version the device arrays reflect — the
+        generation a snapshot captured from this engine is pinned at,
+        and the state a durable publish persists
+        (serving/snapshot.py ``SnapshotManager.publish(durable=True)``).
+        -1 until the first ``refresh()``."""
+        return self._synced
 
     @property
     def n_docs(self) -> int:

@@ -40,8 +40,12 @@ from repro.core import signature as sigmod
 from repro.core.postings import PostingsIndex
 from repro.core.container import (
     Container,
+    append_journal_record,
     decode_texts,
     encode_texts,
+    journal_size,
+    read_journal,
+    reset_journal,
     write_container,
 )
 from repro.core.tokenizer import TermCounts
@@ -59,16 +63,31 @@ MAGIC_TABLE = [
     (b"PK\x03\x04", "zip"),  # docx/xlsx/zip
 ]
 
+# bytes of file head handed to the sniffer: wide enough that leading
+# whitespace (pretty-printed / BOM-ish JSON) cannot push the first
+# structural byte out of the probe window (a 16-byte head used to
+# misroute JSON with >15 leading whitespace bytes to "text")
+SNIFF_WINDOW = 512
+
+_EXTENSION_HINTS = {".csv": "csv", ".json": "json", ".jsonl": "json"}
+
 
 def sniff_modality(head: bytes, path: str = "") -> str:
+    """Route a file head to a modality frontend (paper §3.2).
+
+    Precedence: binary magic bytes → extension hints → structural
+    probe.  Extension hints must outrank the ``{``/``[`` probe: a CSV
+    whose first cell starts with ``[`` is CSV, not JSON.
+    """
     for magic, kind in MAGIC_TABLE:
         if head.startswith(magic):
             return kind
+    hint = _EXTENSION_HINTS.get(os.path.splitext(path)[1].lower())
+    if hint is not None:
+        return hint
     stripped = head.lstrip()
     if stripped[:1] in (b"{", b"["):
         return "json"
-    if path.endswith(".csv"):
-        return "csv"
     return "text"
 
 
@@ -113,7 +132,14 @@ def _extract_csv(data: bytes) -> str:
     header = rows[0]
     out = []
     for row in rows[1:]:
-        out.append(", ".join(f"{h}={v}" for h, v in zip(header, row)))
+        cells = [f"{h}={v}" for h, v in zip(header, row)]
+        # rows longer than the header used to lose their tail to zip
+        # truncation; keep overflow cells under positional colN keys
+        cells += [
+            f"col{j}={v}"
+            for j, v in enumerate(row[len(header):], start=len(header))
+        ]
+        out.append(", ".join(cells))
     return "\n".join(out)
 
 
@@ -139,7 +165,7 @@ EXTRACTORS = {
 
 
 def extract(data: bytes, path: str = "") -> tuple[str, str]:
-    kind = sniff_modality(data[:16], path)
+    kind = sniff_modality(data[:SNIFF_WINDOW], path)
     return EXTRACTORS[kind](data), kind
 
 
@@ -197,10 +223,26 @@ class KnowledgeBase:
     _version: int = 0
     _changed_at: dict[str, int] = field(default_factory=dict)
     _removed_at: dict[str, int] = field(default_factory=dict)
+    # metadata-only changes (re-armed stat fast-path keys on docs whose
+    # content did not change): invisible to changes_since — the engine
+    # has nothing to re-vectorize — but save_delta persists them so the
+    # O(stat) sync win survives a restart
+    _meta_changed_at: dict[str, int] = field(default_factory=dict)
     # single-writer guard (see _single_writer below)
     _write_lock: threading.Lock = field(
         default_factory=threading.Lock, repr=False, compare=False
     )
+    # ---- persistence chain (save/save_delta/load bookkeeping) ----------
+    # container generation of the last save/save_delta/load; -1 = never
+    # persisted.  save()/save_delta() default to continuing it
+    # monotonically, and load() restores it (it used to be parsed by
+    # Container.open and then dropped, resetting the lineage the serving
+    # plane pins snapshots against).
+    loaded_generation: int = -1
+    _persisted_version: int = -1     # KB version covered by the last save
+    _persisted_ids: set[str] = field(default_factory=set)
+    _persisted_path: str | None = None  # abspath of the journal chain's base
+    _base_uid: str | None = None     # data_sha256 of the base container
 
     def __post_init__(self):
         if self.vectorizer is None:
@@ -257,6 +299,7 @@ class KnowledgeBase:
         self._version += 1
         self._changed_at[path] = self._version
         self._removed_at.pop(path, None)
+        self._meta_changed_at.pop(path, None)  # superseded by full change
         self._dirty = True
 
     # Removal-log bound: entries beyond this are dropped oldest-first.
@@ -273,6 +316,7 @@ class KnowledgeBase:
         self.signatures.pop(path)
         self._version += 1
         self._changed_at.pop(path, None)
+        self._meta_changed_at.pop(path, None)
         self._removed_at[path] = self._version
         while len(self._removed_at) > self.REMOVED_LOG_MAX:
             self._removed_at.pop(next(iter(self._removed_at)))
@@ -357,7 +401,16 @@ class KnowledgeBase:
                 digest = hashlib.sha256(data).hexdigest()
                 if rec is not None and rec.sha256 == digest:
                     stats.skipped += 1  # content unchanged (e.g. touch)
-                    rec.mtime = st.st_mtime  # re-arm the stat fast path
+                    if (rec.size, rec.mtime_ns) != (st.st_size,
+                                                    st.st_mtime_ns):
+                        # re-arm the stat fast path AND log the metadata
+                        # change so save_delta persists the new keys —
+                        # otherwise every load() re-hashes this file
+                        # forever (the engine sees nothing: content and
+                        # vectors are untouched)
+                        self._version += 1
+                        self._meta_changed_at[rel] = self._version
+                    rec.mtime = st.st_mtime
                     rec.size = st.st_size
                     rec.mtime_ns = st.st_mtime_ns
                     continue
@@ -421,17 +474,37 @@ class KnowledgeBase:
 
     # ---- container round-trip ------------------------------------------
 
-    def save(self, path: str, generation: int = 0,
-             include_matrix: bool = True) -> str:
-        """``include_matrix=False`` drops the materialized ⟨V⟩ dense
-        matrix — it is fully derivable from the stored term counts + df,
-        so edge deployments can trade first-query latency for a much
-        smaller single file (see RQ3)."""
-        matrix, sigs, ids = self.materialize()
+    def _doc_meta(self, ids: list[str]) -> list[dict]:
+        return [
+            {
+                "id": i,
+                "sha256": self.records[i].sha256,
+                "modality": self.records[i].modality,
+                "mtime": self.records[i].mtime,
+                # persist the O(stat) quick-check keys (§3.3): without
+                # them the first sync() after a load re-hashes every
+                # file, silently losing the incremental-sync win
+                "size": self.records[i].size,
+                "mtime_ns": self.records[i].mtime_ns,
+            }
+            for i in ids
+        ]
+
+    def _doc_segments(self, ids: list[str],
+                      sigs: np.ndarray | None = None) -> dict[str, np.ndarray]:
+        """Raw per-doc state (term stats, signatures, texts) + the df
+        array, for ``ids`` — the schema shared by the full container and
+        journal delta records.  ``sigs`` lets the full save reuse the
+        signature matrix ``materialize()`` already stacked."""
         tcs = [self.term_counts[i] for i in ids]
         ptr = np.zeros((len(ids) + 1,), np.int64)
         np.cumsum([t.term_hashes.size for t in tcs], out=ptr[1:])
-        segments = {
+        if sigs is None:
+            sigs = (
+                np.stack([self.signatures[i] for i in ids])
+                if ids else np.zeros((0, self.sig_words), np.int32)
+            )
+        return {
             "signatures": sigs,
             "df": self.vectorizer.df,
             "term_hashes": (
@@ -446,54 +519,191 @@ class KnowledgeBase:
             "n_tokens": np.array([t.n_tokens for t in tcs], np.int64),
             **encode_texts([self.texts[i] for i in ids]),
         }
+
+    def save(self, path: str, generation: int | None = None,
+             include_matrix: bool = True) -> str:
+        """Full (cold) publish: re-serializes every segment.
+
+        ``generation=None`` (the default) continues the persisted
+        lineage monotonically — ``loaded_generation + 1``, or 0 for a
+        never-persisted KB — so a save/load/save round-trip never resets
+        the generation the serving plane pins snapshots against.  A full
+        save folds any delta journal next to ``path`` into the base and
+        resets it (the stale chain could never replay anyway: the
+        journal manifest pins the old base image's ``data_sha256``).
+
+        ``include_matrix=False`` drops the materialized ⟨V⟩ dense
+        matrix — it is fully derivable from the stored term counts + df,
+        so edge deployments can trade first-query latency for a much
+        smaller single file (see RQ3)."""
+        matrix, sigs, ids = self.materialize()
+        if generation is None:
+            generation = self.loaded_generation + 1
+        segments = self._doc_segments(ids, sigs=sigs)
         if include_matrix:
             segments["doc_matrix"] = matrix
         segments.update(self.postings().segments())
         meta = {
             "vectorizer": self.vectorizer.state(),
             "sig_words": self.sig_words,
-            "docs": [
-                {
-                    "id": i,
-                    "sha256": self.records[i].sha256,
-                    "modality": self.records[i].modality,
-                    "mtime": self.records[i].mtime,
-                    # persist the O(stat) quick-check keys (§3.3): without
-                    # them the first sync() after a load re-hashes every
-                    # file, silently losing the incremental-sync win
-                    "size": self.records[i].size,
-                    "mtime_ns": self.records[i].mtime_ns,
-                }
-                for i in ids
-            ],
+            "docs": self._doc_meta(ids),
         }
-        return write_container(path, segments, meta, generation)
+        digest = write_container(path, segments, meta, generation)
+        reset_journal(path)
+        self.loaded_generation = int(generation)
+        self._persisted_version = self._version
+        self._persisted_ids = set(ids)
+        self._persisted_path = os.path.abspath(path)
+        self._base_uid = digest
+        return digest
+
+    # journal auto-compaction threshold: fold when the journal outgrows
+    # this fraction of the base container (replay work stays bounded)
+    DEFAULT_COMPACT_RATIO = 0.5
+
+    def save_delta(self, path: str,
+                   compact_ratio: float | None = DEFAULT_COMPACT_RATIO) -> int:
+        """Durable incremental publish: O(U) bytes, not O(N).
+
+        Appends one delta record — the docs changed/removed since the
+        last save (derived from the same change log the engine's
+        ``refresh()`` consumes) plus the new df state — to the
+        append-only journal next to the base container, then commits it
+        via the fsync'd journal manifest (core/container.py).  ``load``
+        replays base + journal to a state bit-identical to a full
+        ``save()`` of the same KB.  Falls back to a full save when there
+        is no base container at ``path`` (or the KB's persisted lineage
+        belongs to a different path); no-ops when nothing changed.
+        Auto-compacts once the journal exceeds ``compact_ratio`` × base
+        size (``None`` disables).  Returns the published generation.
+
+        Single-writer: same contract as ``sync``/``add_text``.
+        """
+        with self._single_writer("save_delta"):
+            return self._save_delta_locked(path, compact_ratio)
+
+    def _save_delta_locked(self, path: str,
+                           compact_ratio: float | None) -> int:
+        apath = os.path.abspath(path)
+        if (self._base_uid is None or self._persisted_path != apath
+                or not os.path.exists(path)):
+            self.save(path)  # cold publish starts (or restarts) the chain
+            return self.loaded_generation
+        changed = sorted(
+            p for p, v in self._changed_at.items()
+            if v > self._persisted_version and p in self.records
+        )
+        # authoritative removals: diff against the persisted id set (the
+        # in-memory removal log is advisory/bounded — see changes_since)
+        removed = sorted(self._persisted_ids - set(self.records))
+        # metadata-only updates (re-armed stat keys, content untouched):
+        # persisted as record metadata, no segment payload
+        changed_set = set(changed)
+        meta_changed = sorted(
+            p for p, v in self._meta_changed_at.items()
+            if v > self._persisted_version and p in self.records
+            and p not in changed_set
+        )
+        if not changed and not removed and not meta_changed:
+            return self.loaded_generation  # nothing new: zero bytes written
+        gen = self.loaded_generation + 1
+        meta = {
+            "kind": "delta",
+            "vectorizer": self.vectorizer.state(),
+            "sig_words": self.sig_words,
+            "docs": self._doc_meta(changed),
+            "meta_docs": self._doc_meta(meta_changed),
+            "removed": removed,
+        }
+        append_journal_record(
+            path, self._doc_segments(changed), meta, gen, self._base_uid
+        )
+        self.loaded_generation = gen
+        self._persisted_version = self._version
+        self._persisted_ids = set(self.records)
+        if (compact_ratio is not None
+                and journal_size(path) > compact_ratio * os.path.getsize(path)):
+            self.compact(path)
+        return self.loaded_generation
+
+    def compact(self, path: str) -> str:
+        """Fold the delta journal back into a fresh base container.
+
+        The rewrite publishes through the same atomic ``os.replace`` as
+        any full save, then resets the journal.  A crash in between is
+        safe: the new base's ``data_sha256`` no longer matches the stale
+        journal manifest, so replay ignores it.  When every mutation is
+        already persisted the on-disk state is equivalent, so the
+        generation is retained; unpersisted changes fold in and bump it
+        (the compact is then also a publish)."""
+        fully_persisted = (self._persisted_version == self._version
+                           and self._persisted_ids == set(self.records))
+        gen = (self.loaded_generation
+               if fully_persisted and self.loaded_generation >= 0 else None)
+        return self.save(path, generation=gen)
+
+    @staticmethod
+    def _record_from_meta(d: dict) -> DocRecord:
+        # pre-size containers lack size/mtime_ns → -1 (fast path
+        # unarmed; the first sync falls back to content hashing and
+        # re-arms it)
+        return DocRecord(d["id"], d["sha256"], d["modality"], d["mtime"],
+                         int(d.get("size", -1)), int(d.get("mtime_ns", -1)))
+
+    def _restore_doc_rows(self, docs_meta: list[dict], segs: dict) -> None:
+        """Rebuild per-doc state from the shared container/record schema
+        (used by both ``load`` and journal-delta replay)."""
+        texts = decode_texts(segs["content_blob"], segs["content_offsets"])
+        ptr = segs["term_ptr"]
+        for j, d in enumerate(docs_meta):
+            i = d["id"]
+            self.records[i] = self._record_from_meta(d)
+            self.texts[i] = texts[j]
+            self.term_counts[i] = TermCounts(
+                segs["term_hashes"][ptr[j]: ptr[j + 1]],
+                segs["term_counts"][ptr[j]: ptr[j + 1]],
+                int(segs["n_tokens"][j]),
+            )
+            self.signatures[i] = segs["signatures"][j]
+
+    def _apply_delta_record(self, meta: dict, segs: dict) -> None:
+        """Structural replay of one journal delta record (load path).
+
+        Writes the raw per-doc state + df directly — no change-log or
+        version bump: a replayed KB presents as freshly loaded (version
+        0), exactly like a KB loaded from the equivalent full save."""
+        for rid in meta.get("removed", []):
+            self.records.pop(rid, None)
+            self.texts.pop(rid, None)
+            self.term_counts.pop(rid, None)
+            self.signatures.pop(rid, None)
+        self._restore_doc_rows(meta["docs"], segs)
+        for d in meta.get("meta_docs", []):
+            if d["id"] in self.records:  # stat-key refresh, content as-is
+                self.records[d["id"]] = self._record_from_meta(d)
+        # df/idf state is an authoritative copy from the record — bit-
+        # identical to the saver's live statistics, never re-derived
+        self.vectorizer.df = segs["df"]
+        self.vectorizer.n_docs = int(meta["vectorizer"]["n_docs"])
+        if meta["docs"] or meta.get("removed"):
+            self._dirty = True  # meta-only records leave ⟨V⟩/⟨I⟩ intact
 
     @staticmethod
     def load(path: str) -> "KnowledgeBase":
+        """Open base container + replay its delta journal (if any).
+
+        The replayed state is bit-identical to loading a full ``save()``
+        of the same KB: doc order, matrix, signatures, postings and df
+        all match (tests/test_persistence.py).  Restores the container
+        generation into ``loaded_generation`` so subsequent saves
+        continue the lineage."""
         c = Container.open(path)
         segs = c.read_all()
         meta = c.meta
         vec = HashedTfIdf.from_state(meta["vectorizer"], segs["df"])
         kb = KnowledgeBase(dim=vec.dim, sig_words=int(meta["sig_words"]),
                            vectorizer=vec)
-        texts = decode_texts(segs["content_blob"], segs["content_offsets"])
-        ptr = segs["term_ptr"]
-        for j, d in enumerate(meta["docs"]):
-            i = d["id"]
-            # pre-size containers lack size/mtime_ns → -1 (fast path
-            # unarmed; the first sync falls back to content hashing and
-            # re-arms it)
-            kb.records[i] = DocRecord(i, d["sha256"], d["modality"],
-                                      d["mtime"], int(d.get("size", -1)),
-                                      int(d.get("mtime_ns", -1)))
-            kb.texts[i] = texts[j]
-            kb.term_counts[i] = TermCounts(
-                segs["term_hashes"][ptr[j]: ptr[j + 1]],
-                segs["term_counts"][ptr[j]: ptr[j + 1]],
-                int(segs["n_tokens"][j]),
-            )
-            kb.signatures[i] = segs["signatures"][j]
+        kb._restore_doc_rows(meta["docs"], segs)
         if "doc_matrix" in segs:
             kb._matrix = segs["doc_matrix"]
             kb._sig_matrix = segs["signatures"]
@@ -501,4 +711,19 @@ class KnowledgeBase:
             kb._postings = PostingsIndex.from_segments(segs)
             kb._dirty = False
         # else: matrix rebuilds lazily from term counts at first query
+        kb.loaded_generation = int(c.generation)
+        kb._persisted_version = 0
+        kb._persisted_path = os.path.abspath(path)
+        kb._base_uid = c.uid
+        if c.uid is not None:
+            # journal replay: committed records only; torn/corrupt tails
+            # were already dropped by read_journal, and a generation gap
+            # (stale chain) stops the replay at the last coherent state
+            for gen, rmeta, rsegs in read_journal(path, c.uid):
+                if (rmeta.get("kind") != "delta"
+                        or gen != kb.loaded_generation + 1):
+                    break
+                kb._apply_delta_record(rmeta, rsegs)
+                kb.loaded_generation = gen
+        kb._persisted_ids = set(kb.records)
         return kb

@@ -67,10 +67,15 @@ class ServingRuntime:
         flush_deadline: float = 0.002,
         max_queue: int = 1024,
         result_cache_size: int = 2048,
+        container_path: str | None = None,
+        compact_ratio: float | None = KnowledgeBase.DEFAULT_COMPACT_RATIO,
         **engine_kwargs,
     ):
         self.metrics = ServingMetrics()
-        self.snapshots = SnapshotManager(kb, engine=engine, **engine_kwargs)
+        self.snapshots = SnapshotManager(
+            kb, engine=engine, container_path=container_path,
+            compact_ratio=compact_ratio, **engine_kwargs,
+        )
         self.cache = (
             ResultCache(result_cache_size) if result_cache_size else None
         )
@@ -115,11 +120,16 @@ class ServingRuntime:
 
     # ---- ingest plane (the single writer thread) ------------------------
 
-    def publish(self) -> int:
+    def publish(self, durable: bool = False) -> int:
         """Refresh the engine from the KB's dirty log and atomically
         publish the next generation; returns the published generation.
-        Call from the same thread that mutates the KB."""
-        return self.snapshots.publish().generation
+        Call from the same thread that mutates the KB.
+
+        ``durable=True`` (requires ``container_path``) also appends the
+        O(U) delta record to the container's journal, so a crash never
+        loses a published generation — restart with
+        ``KnowledgeBase.load(container_path)`` to resume exactly there."""
+        return self.snapshots.publish(durable=durable).generation
 
     # ---- introspection ---------------------------------------------------
 

@@ -42,6 +42,7 @@ from repro.core.engine import (
     results_from_topk,
     score_batch_arrays,
 )
+from repro.core.ingest import KnowledgeBase
 from repro.core.vectorizer import HashedTfIdf
 
 
@@ -65,10 +66,10 @@ class EngineSnapshot:
     def capture(engine: QueryEngine) -> "EngineSnapshot":
         """Freeze the engine's current generation.  Caller (the writer
         thread) must have run ``engine.refresh()`` first so the arrays
-        reflect ``engine._synced == kb.version``."""
+        reflect ``engine.synced_version == kb.version``."""
         vec = engine.kb.vectorizer
         return EngineSnapshot(
-            generation=engine._synced,
+            generation=engine.synced_version,
             doc_ids=tuple(engine.doc_ids),
             doc_vecs=engine.doc_vecs,
             doc_sigs=engine.doc_sigs,
@@ -132,12 +133,20 @@ class SnapshotManager:
     """
 
     def __init__(self, kb=None, engine: QueryEngine | None = None,
+                 container_path: str | None = None,
+                 compact_ratio: float | None =
+                 KnowledgeBase.DEFAULT_COMPACT_RATIO,
                  **engine_kwargs):
         if engine is None:
             if kb is None:
                 raise ValueError("need a KnowledgeBase or a QueryEngine")
             engine = QueryEngine(kb, **engine_kwargs)
         self.engine = engine
+        # durable-publish target: the KB's container + delta journal.
+        # ``compact_ratio=None`` disables auto-compaction (same contract
+        # as KnowledgeBase.save_delta — passed through verbatim).
+        self.container_path = container_path
+        self.compact_ratio = compact_ratio
         self._publish_lock = threading.Lock()
         with self._publish_lock:
             engine.refresh()
@@ -151,18 +160,34 @@ class SnapshotManager:
     def generation(self) -> int:
         return self._current.generation
 
-    def publish(self) -> EngineSnapshot:
+    def publish(self, durable: bool = False) -> EngineSnapshot:
         """Refresh the engine from the KB's dirty log and atomically
         swap in the new generation.  Writer thread only (the same
         thread that mutates the KB — see the single-writer contract).
-        No-op (returns the live snapshot) when nothing changed."""
+        No-op (returns the live snapshot) when nothing changed.
+
+        ``durable=True`` also persists the generation being swapped in:
+        ``KnowledgeBase.save_delta(container_path)`` appends the O(U)
+        delta record (or full-saves on the first publish) *before* the
+        in-memory swap — persist-then-swap, so no reader can ever
+        observe a generation that a crash could lose.  A crash between
+        the two steps merely leaves an extra durable generation no
+        reader had seen yet; on restart, ``KnowledgeBase.load`` replays
+        base + journal back to exactly the last durable publish.
+        Requires ``container_path`` (constructor arg)."""
+        if durable and self.container_path is None:
+            raise ValueError(
+                "durable publish needs SnapshotManager(container_path=...)"
+            )
         with self._publish_lock:
             self.engine.refresh()
-            if self.engine._synced == self._current.generation:
-                return self._current
-            snap = EngineSnapshot.capture(self.engine)
-            self._current = snap  # atomic reference swap — the publish
-            return snap
+            if durable:
+                self.engine.kb.save_delta(self.container_path,
+                                          compact_ratio=self.compact_ratio)
+            if self.engine.synced_version != self._current.generation:
+                snap = EngineSnapshot.capture(self.engine)
+                self._current = snap  # atomic reference swap — the publish
+            return self._current
 
 
 def results_equal(a: list[RetrievalResult], b: list[RetrievalResult]) -> bool:

@@ -42,6 +42,21 @@ def test_corruption_detected(tmp_path):
         c.read_all(verify=True)
 
 
+@pytest.mark.parametrize("verify", [True, False])
+def test_truncated_file_detected(tmp_path, verify):
+    """A short read (file truncated mid-segment) raises a clean IOError
+    naming the segment in BOTH verify modes — it used to surface as an
+    opaque frombuffer/reshape error (or silently wrong data)."""
+    p = str(tmp_path / "k.ragdb")
+    C.write_container(p, _segs())
+    c = C.Container.open(p)
+    last = max(c.segment_names(), key=lambda n: c._segments[n]["offset"])
+    with open(p, "r+b") as f:
+        f.truncate(os.path.getsize(p) - 5)  # cut into the last segment
+    with pytest.raises(IOError, match=f"{last}: truncated segment"):
+        c.read(last, verify=verify)
+
+
 def test_bad_magic(tmp_path):
     p = str(tmp_path / "k.ragdb")
     open(p, "wb").write(b"NOTRAGDB" + b"\0" * 64)
@@ -93,3 +108,105 @@ def test_content_addressing(tmp_path):
     C.publish_sharded(root, [_segs(5)])
     m2 = json.load(open(os.path.join(root, "manifest.json")))
     assert m1["shards"][0]["file"] == m2["shards"][0]["file"]
+
+
+def _shard_files(root):
+    return sorted(f for f in os.listdir(root)
+                  if f.startswith("shard-") and f.endswith(".ragdb"))
+
+
+def test_sharded_gc_collects_stale_generations(tmp_path):
+    """Repeated publishes no longer grow the directory without bound:
+    files unreferenced by the new manifest (and outside the grace
+    window) are collected."""
+    root = str(tmp_path / "kc")
+    C.publish_sharded(root, [_segs(0), _segs(1)], gc_grace=0)
+    gen0_files = set(_shard_files(root))
+    C.publish_sharded(root, [_segs(2), _segs(3)], gc_grace=0)
+    C.publish_sharded(root, [_segs(4), _segs(6)], gc_grace=0)
+    live = set(_shard_files(root))
+    assert len(live) == 2  # only the current generation remains
+    assert not (gen0_files & live)
+
+
+def test_sharded_gc_grace_spares_prior_generation(tmp_path):
+    """gc_grace=1 keeps the immediately prior generation's files so a
+    pinned reader keeps working across one publish; two publishes later
+    they are collected."""
+    root = str(tmp_path / "kc")
+    C.publish_sharded(root, [_segs(0)], gc_grace=1)
+    reader = C.ShardedContainer.open(root)  # pin generation 0
+    C.publish_sharded(root, [_segs(1)], gc_grace=1)
+    # grace window: the pinned reader's file survived the publish
+    np.testing.assert_array_equal(
+        reader.open_shard(0).read("vec"), _segs(0)["vec"]
+    )
+    C.publish_sharded(root, [_segs(2)], gc_grace=1)
+    assert len(_shard_files(root)) == 2  # gen 2 + graced gen 1; gen 0 gone
+    with pytest.raises(FileNotFoundError):
+        reader.open_shard(0).read("vec")
+
+
+def test_publish_sharded_delta_journal_windows(tmp_path):
+    """A delta publish appends per-shard journal patches (no shard-file
+    rewrite); pinned readers see their generation's byte window only."""
+    root = str(tmp_path / "kc")
+    C.publish_sharded(root, [_segs(0), _segs(1)])
+    base_files = set(_shard_files(root))
+    r0 = C.ShardedContainer.open(root)
+
+    patch = {"vec": np.full((4, 8), 7.0, np.float32)}
+    g1 = C.publish_sharded_delta(root, {0: patch})
+    assert g1 == 1
+    assert set(_shard_files(root)) == base_files  # no new shard files
+    r1 = C.ShardedContainer.open(root)
+
+    # patched segment overlays; untouched segments fall through
+    np.testing.assert_array_equal(r1.open_shard(0).read("vec"), patch["vec"])
+    np.testing.assert_array_equal(
+        r1.open_shard(0).read("sig"), _segs(0)["sig"]
+    )
+    np.testing.assert_array_equal(
+        r1.open_shard(1).read("vec"), _segs(1)["vec"]
+    )
+    # the generation-0 reader still sees pre-patch data (window pinning)
+    np.testing.assert_array_equal(r0.open_shard(0).read("vec"),
+                                  _segs(0)["vec"])
+
+    # a second delta chains on the first
+    patch2 = {"sig": np.full((4, 16), 3, np.int32)}
+    assert C.publish_sharded_delta(root, {0: patch2}) == 2
+    r2 = C.ShardedContainer.open(root)
+    np.testing.assert_array_equal(r2.open_shard(0).read("vec"), patch["vec"])
+    np.testing.assert_array_equal(r2.open_shard(0).read("sig"),
+                                  patch2["sig"])
+    # r1 remains pinned to its window
+    np.testing.assert_array_equal(r1.open_shard(0).read("sig"),
+                                  _segs(0)["sig"])
+
+
+def test_publish_sharded_delta_read_all_merges(tmp_path):
+    root = str(tmp_path / "kc")
+    C.publish_sharded(root, [_segs(0)])
+    C.publish_sharded_delta(root, {0: {"extra": np.arange(3, dtype=np.int64)}})
+    sc = C.ShardedContainer.open(root)
+    out = sc.open_shard(0).read_all()
+    assert "extra" in out and "vec" in out
+    np.testing.assert_array_equal(out["extra"], np.arange(3, dtype=np.int64))
+
+
+def test_full_publish_after_delta_drops_journal_overlay(tmp_path):
+    """A full publish re-anchors the shard: new readers must not see the
+    old journal patches, and once the grace window ages out the journal
+    files are collected."""
+    root = str(tmp_path / "kc")
+    C.publish_sharded(root, [_segs(0)])
+    C.publish_sharded_delta(
+        root, {0: {"vec": np.full((4, 8), 9.0, np.float32)}}
+    )
+    C.publish_sharded(root, [_segs(0)])  # same content → same file name
+    sc = C.ShardedContainer.open(root)
+    np.testing.assert_array_equal(sc.open_shard(0).read("vec"),
+                                  _segs(0)["vec"])
+    C.publish_sharded(root, [_segs(7)], gc_grace=0)  # age the journal out
+    assert not [f for f in os.listdir(root) if f.endswith(".ragdbj")]

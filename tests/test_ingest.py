@@ -19,6 +19,40 @@ def test_sniffing():
     assert ingest.sniff_modality(b"plain words") == "text"
 
 
+def test_sniffing_whitespace_padded_json():
+    """JSON behind >15 bytes of leading whitespace used to fall out of
+    the 16-byte probe window and route to text."""
+    data = b" " * 40 + b'{"deep": {"key": 1}}'
+    assert ingest.sniff_modality(data[: ingest.SNIFF_WINDOW]) == "json"
+    text, kind = ingest.extract(data)
+    assert kind == "json" and "deep.key: 1" in text
+
+
+def test_sniffing_csv_with_bracket_cell():
+    """A CSV whose first cell starts with '[' used to hit the JSON
+    structural probe before the extension hint."""
+    data = b"[tag],value\n[a],1\n[b],2"
+    assert ingest.sniff_modality(data, "rows.csv") == "csv"
+    text, kind = ingest.extract(data, "rows.csv")
+    assert kind == "csv" and "[tag]=[a]" in text and "value=2" in text
+    # without the extension hint the structural probe still applies
+    assert ingest.sniff_modality(b'["x", "y"]') == "json"
+
+
+def test_sniffing_json_extension_hint():
+    assert ingest.sniff_modality(b"  \n 1234", "data.json") == "json"
+    assert ingest.sniff_modality(b"whatever", "log.jsonl") == "json"
+
+
+def test_csv_overflow_cells_preserved():
+    """Rows longer than the header keep their tail as positional colN=
+    cells instead of being zip-truncated away."""
+    data = b"a,b\n1,2,OVERFLOW-77,9"
+    text, kind = ingest.extract(data, "t.csv")
+    assert kind == "csv"
+    assert text == "a=1, b=2, col2=OVERFLOW-77, col3=9"
+
+
 def test_extractors():
     text, kind = ingest.extract(b'{"name": "ada", "tags": ["x", "y"]}')
     assert kind == "json" and "name: ada" in text and "tags[0]: x" in text
@@ -137,6 +171,41 @@ def test_pre_size_container_loads_and_rearms(tmp_path):
     assert s1.skipped == 5 and s1.processed == 0
     assert all(r.size >= 0 and r.mtime_ns >= 0
                for r in kb2.records.values())  # re-armed
+
+
+def test_generation_roundtrip_and_monotonic_continuation(tmp_path):
+    """Regression: Container.open parses the generation but load() used
+    to discard it — a save/load round-trip reset the lineage the serving
+    plane pins snapshots against.  It must survive the round-trip, and
+    save()/save_delta() must continue it monotonically by default."""
+    src = str(tmp_path / "src")
+    os.makedirs(src)
+    _write(src, "a.txt", "alpha")
+    kb = KnowledgeBase(dim=512)
+    kb.sync(src)
+    path = str(tmp_path / "kb.ragdb")
+    kb.save(path, generation=7)
+    assert kb.loaded_generation == 7
+
+    kb2 = KnowledgeBase.load(path)
+    assert kb2.loaded_generation == 7  # restored, not dropped
+    kb2.add_text("b.txt", "beta")
+    kb2.save(path)  # default: continue the lineage
+    assert kb2.loaded_generation == 8
+    kb3 = KnowledgeBase.load(path)
+    assert kb3.loaded_generation == 8
+    kb3.add_text("c.txt", "gamma")
+    assert kb3.save_delta(path) == 9  # delta continues it too
+    assert KnowledgeBase.load(path).loaded_generation == 9
+
+
+def test_fresh_kb_save_defaults_to_generation_zero(tmp_path):
+    kb = KnowledgeBase(dim=512)
+    kb.add_text("a.txt", "alpha")
+    path = str(tmp_path / "kb.ragdb")
+    kb.save(path)
+    from repro.core.container import Container
+    assert Container.open(path).generation == 0
 
 
 def test_container_roundtrip_preserves_everything(tmp_path):

@@ -1,0 +1,364 @@
+"""Durable incremental persistence: journaled delta saves, crash
+recovery, compaction, and the serving plane's durable publish.
+
+The load-bearing contract: ``KnowledgeBase.load(path)`` after any mix of
+``save``/``save_delta`` is **bit-identical** to a load after one full
+``save()`` of the same state — matrix, signatures, postings, df, doc
+order, texts, records and generation all match — and any torn/corrupted
+journal tail replays cleanly to the last intact record.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import container as C
+from repro.core.engine import QueryEngine
+from repro.core.ingest import KnowledgeBase
+from repro.serving import ServingRuntime, SnapshotManager, results_equal
+
+DIM = 256
+
+
+def _mk_kb(n=30, dim=DIM):
+    kb = KnowledgeBase(dim=dim)
+    for i in range(n):
+        kb.add_text(f"doc{i:03d}.txt", f"document number {i} about topic{i % 7}")
+    return kb
+
+
+def _fingerprint(kb):
+    matrix, sigs, ids = kb.materialize()
+    p = kb.postings()
+    return {
+        "ids": ids,
+        "matrix": matrix,
+        "sigs": sigs,
+        "df": kb.vectorizer.df.copy(),
+        "n_docs_vec": kb.vectorizer.n_docs,
+        "texts": dict(kb.texts),
+        "records": {k: vars(r).copy() for k, r in kb.records.items()},
+        "post_terms": p.term_hashes,
+        "post_offsets": p.offsets,
+        "post_docs": p.doc_ids,
+        "generation": kb.loaded_generation,
+    }
+
+
+def _assert_identical(a, b, *, compare_generation=True):
+    assert a["ids"] == b["ids"]
+    np.testing.assert_array_equal(a["matrix"], b["matrix"])
+    np.testing.assert_array_equal(a["sigs"], b["sigs"])
+    np.testing.assert_array_equal(a["df"], b["df"])
+    assert a["n_docs_vec"] == b["n_docs_vec"]
+    assert a["texts"] == b["texts"]
+    assert a["records"] == b["records"]
+    np.testing.assert_array_equal(a["post_terms"], b["post_terms"])
+    np.testing.assert_array_equal(a["post_offsets"], b["post_offsets"])
+    np.testing.assert_array_equal(a["post_docs"], b["post_docs"])
+    if compare_generation:
+        assert a["generation"] == b["generation"]
+
+
+def _apply_ops(kbs, rng, round_no):
+    """Apply an identical random add/update/remove mix to every KB."""
+    n_ops = int(rng.integers(1, 5))
+    for op_no in range(n_ops):
+        existing = sorted(kbs[0].records)
+        op = rng.choice(["add", "update", "remove"])
+        if op == "remove" and len(existing) > 3:
+            victim = existing[int(rng.integers(len(existing)))]
+            for kb in kbs:
+                kb._remove_doc(victim)
+        elif op == "update" and existing:
+            victim = existing[int(rng.integers(len(existing)))]
+            text = f"updated r{round_no} o{op_no} CODE-{rng.integers(1e6)}"
+            for kb in kbs:
+                kb.add_text(victim, text)
+        else:
+            name = f"new-r{round_no}-o{op_no}.txt"
+            text = f"brand new content {rng.integers(1e6)} topic{op_no}"
+            for kb in kbs:
+                kb.add_text(name, text)
+
+
+# --------------------------------------------------------------------------
+# delta-vs-full bit identity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_delta_vs_full_save_bit_identity_sweep(tmp_path, seed):
+    """Property-style sweep: after every round of random mutations, a
+    load through the delta-journal chain equals a load of a fresh full
+    save of the same state — including the container generation (both
+    lineages advance one generation per publish)."""
+    rng = np.random.default_rng(seed)
+    p_delta = str(tmp_path / "delta.ragdb")
+    p_full = str(tmp_path / "full.ragdb")
+    kb_a = _mk_kb(20)
+    kb_b = _mk_kb(20)
+    kb_a.save(p_delta)  # generation 0 base
+    for round_no in range(5):
+        _apply_ops([kb_a, kb_b], rng, round_no)
+        kb_a.save_delta(p_delta, compact_ratio=None)
+        kb_b.save(p_full, generation=kb_a.loaded_generation)
+        _assert_identical(
+            _fingerprint(KnowledgeBase.load(p_delta)),
+            _fingerprint(KnowledgeBase.load(p_full)),
+        )
+
+
+def test_removal_only_delta(tmp_path):
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(10)
+    kb.save(p)
+    kb._remove_doc("doc003.txt")
+    kb._remove_doc("doc007.txt")
+    gen = kb.save_delta(p, compact_ratio=None)
+    out = KnowledgeBase.load(p)
+    assert gen == 1 and out.loaded_generation == 1
+    assert out.n_docs == 8
+    assert "doc003.txt" not in out.records and "doc007.txt" not in out.records
+    _assert_identical(_fingerprint(out), _fingerprint(kb) | {"generation": 1})
+
+
+def test_delta_removals_survive_bounded_removal_log(tmp_path, monkeypatch):
+    """save_delta derives removals from the persisted id set, not the
+    advisory in-memory removal log — removals beyond REMOVED_LOG_MAX
+    still persist."""
+    monkeypatch.setattr(KnowledgeBase, "REMOVED_LOG_MAX", 2)
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(12)
+    kb.save(p)
+    for i in range(6):  # 6 removals through a 2-entry log
+        kb._remove_doc(f"doc{i:03d}.txt")
+    kb.save_delta(p, compact_ratio=None)
+    out = KnowledgeBase.load(p)
+    assert out.n_docs == 6
+    assert not any(f"doc{i:03d}.txt" in out.records for i in range(6))
+
+
+def test_rearmed_stat_keys_persist_through_delta(tmp_path, monkeypatch):
+    """A touched-but-unchanged file re-arms its O(stat) fast-path keys
+    in memory; save_delta must persist that metadata (content segments
+    unchanged) or every load() re-hashes the file forever."""
+    import builtins
+
+    src = str(tmp_path / "src")
+    os.makedirs(src)
+    for i in range(6):
+        with open(os.path.join(src, f"f{i}.txt"), "w") as f:
+            f.write(f"document number {i}")
+    p = str(tmp_path / "kb.ragdb")
+    kb = KnowledgeBase(dim=DIM)
+    kb.sync(src)
+    kb.save(p)
+
+    # touch: content identical, mtime_ns moves → stat check misses once
+    now = os.stat(os.path.join(src, "f2.txt"))
+    os.utime(os.path.join(src, "f2.txt"),
+             ns=(now.st_atime_ns, now.st_mtime_ns + 1_000_000_000))
+    s = kb.sync(src)
+    assert s.skipped == 6 and s.processed == 0
+    gen = kb.save_delta(p, compact_ratio=None)
+    assert gen == 1  # the metadata change is worth a (tiny) record
+
+    # recovery: the reloaded KB must sync with zero file reads
+    kb2 = KnowledgeBase.load(p)
+    reads = []
+    real_open = builtins.open
+
+    def counting_open(file, mode="r", *a, **k):
+        if "r" in mode and "b" in mode:
+            reads.append(file)
+        return real_open(file, mode, *a, **k)
+
+    monkeypatch.setattr(builtins, "open", counting_open)
+    s2 = kb2.sync(src)
+    monkeypatch.undo()
+    assert s2.skipped == 6 and s2.processed == 0
+    assert reads == []  # stat-only: the re-armed keys survived the delta
+
+
+# --------------------------------------------------------------------------
+# O(U) bytes contract
+# --------------------------------------------------------------------------
+
+def test_delta_bytes_are_o_of_u(tmp_path):
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(200)
+    kb.save(p)
+    full_bytes = os.path.getsize(p)
+    kb.add_text("doc003.txt", "a one-doc update CODE-777")
+    before = C.journal_size(p)
+    kb.save_delta(p, compact_ratio=None)
+    delta_bytes = C.journal_size(p) - before
+    assert delta_bytes * 10 < full_bytes, (delta_bytes, full_bytes)
+    # and the journaled state still loads to the updated content
+    out = KnowledgeBase.load(p)
+    assert "CODE-777" in out.texts["doc003.txt"]
+
+
+def test_no_change_no_write(tmp_path):
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(5)
+    kb.save(p)
+    gen0 = kb.loaded_generation
+    base = os.path.getsize(p)
+    assert kb.save_delta(p) == gen0  # nothing changed
+    assert C.journal_size(p) == 0 and os.path.getsize(p) == base
+
+
+def test_save_delta_without_base_full_saves(tmp_path):
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(5)
+    gen = kb.save_delta(p)
+    assert gen == 0 and os.path.exists(p) and C.journal_size(p) == 0
+    assert KnowledgeBase.load(p).n_docs == 5
+
+
+# --------------------------------------------------------------------------
+# crash recovery
+# --------------------------------------------------------------------------
+
+def _two_delta_setup(tmp_path):
+    """Base + two committed delta records; returns (path, fingerprints
+    after record 1 and record 2)."""
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(15)
+    kb.save(p)
+    kb.add_text("doc001.txt", "first delta CODE-111")
+    kb.save_delta(p, compact_ratio=None)
+    fp1 = _fingerprint(KnowledgeBase.load(p))
+    kb.add_text("extra.txt", "second delta CODE-222")
+    kb.save_delta(p, compact_ratio=None)
+    fp2 = _fingerprint(KnowledgeBase.load(p))
+    assert fp1["generation"] == 1 and fp2["generation"] == 2
+    return p, fp1, fp2
+
+
+def test_torn_append_truncated_tail_replays_to_last_intact(tmp_path):
+    p, fp1, _ = _two_delta_setup(tmp_path)
+    jp = C.journal_path(p)
+    with open(jp, "r+b") as f:
+        f.truncate(os.path.getsize(jp) - 7)  # torn mid-record-2
+    _assert_identical(_fingerprint(KnowledgeBase.load(p)), fp1)
+
+
+def test_flipped_byte_in_last_record_replays_to_last_intact(tmp_path):
+    p, fp1, _ = _two_delta_setup(tmp_path)
+    jp = C.journal_path(p)
+    data = bytearray(open(jp, "rb").read())
+    data[-3] ^= 0xFF
+    open(jp, "wb").write(bytes(data))
+    _assert_identical(_fingerprint(KnowledgeBase.load(p)), fp1)
+
+
+def test_uncommitted_tail_is_invisible_and_reclaimed(tmp_path):
+    """Bytes past the manifest's committed_bytes (a crash after the
+    journal append but before the manifest rename) are ignored on
+    replay and truncated away by the next successful append."""
+    p, fp1, fp2 = _two_delta_setup(tmp_path)
+    jp = C.journal_path(p)
+    committed = C.read_journal_manifest(p)["committed_bytes"]
+    with open(jp, "ab") as f:
+        f.write(b"\xde\xad\xbe\xef" * 16)  # torn, never committed
+    _assert_identical(_fingerprint(KnowledgeBase.load(p)), fp2)
+    # next append truncates the garbage then commits cleanly
+    kb = KnowledgeBase.load(p)
+    kb.add_text("post-crash.txt", "third delta CODE-333")
+    kb.save_delta(p, compact_ratio=None)
+    man = C.read_journal_manifest(p)
+    assert man["committed_bytes"] == os.path.getsize(jp) > committed
+    out = KnowledgeBase.load(p)
+    assert "post-crash.txt" in out.records and out.loaded_generation == 3
+
+
+def test_stale_journal_from_previous_base_is_ignored(tmp_path):
+    """A journal left beside a re-saved base (its manifest pins the old
+    base's data_sha256) must not replay."""
+    import shutil
+
+    p, _, fp2 = _two_delta_setup(tmp_path)
+    jp, mp = C.journal_path(p), C.journal_manifest_path(p)
+    shutil.copy(jp, jp + ".bak")
+    shutil.copy(mp, mp + ".bak")
+    kb = KnowledgeBase.load(p)
+    kb.add_text("doc002.txt", "content after the full re-save CODE-444")
+    kb.save(p)  # folds + resets the journal
+    fp_full = _fingerprint(KnowledgeBase.load(p))
+    shutil.copy(jp + ".bak", jp)  # "crash" resurrects the stale chain
+    shutil.copy(mp + ".bak", mp)
+    _assert_identical(_fingerprint(KnowledgeBase.load(p)), fp_full)
+
+
+# --------------------------------------------------------------------------
+# compaction
+# --------------------------------------------------------------------------
+
+def test_explicit_compact_folds_journal_and_keeps_generation(tmp_path):
+    p, _, fp2 = _two_delta_setup(tmp_path)
+    assert C.journal_size(p) > 0
+    kb = KnowledgeBase.load(p)
+    kb.compact(p)
+    assert C.journal_size(p) == 0
+    assert kb.loaded_generation == 2  # state unchanged → generation kept
+    _assert_identical(_fingerprint(KnowledgeBase.load(p)), fp2)
+
+
+def test_auto_compaction_on_ratio(tmp_path):
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(10)
+    kb.save(p)
+    kb.add_text("doc001.txt", "update CODE-555")
+    # ratio 0: any journal at all exceeds the threshold → immediate fold
+    gen = kb.save_delta(p, compact_ratio=0.0)
+    assert gen == 1 and C.journal_size(p) == 0
+    out = KnowledgeBase.load(p)
+    assert out.loaded_generation == 1
+    assert "CODE-555" in out.texts["doc001.txt"]
+
+
+# --------------------------------------------------------------------------
+# serving plane: durable publish
+# --------------------------------------------------------------------------
+
+def test_durable_publish_survives_crash(tmp_path):
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(20)
+    mgr = SnapshotManager(kb, container_path=p, scoring_path="map")
+    mgr.publish(durable=True)  # first durable publish: full save
+    assert os.path.exists(p)
+    kb.add_text("fresh.txt", "pinned generation content INV-2077")
+    snap = mgr.publish(durable=True)  # O(U) delta append
+    assert C.journal_size(p) > 0
+
+    # "crash": recover purely from disk; the published generation is there
+    kb2 = KnowledgeBase.load(p)
+    assert "fresh.txt" in kb2.records
+    assert kb2.loaded_generation == kb.loaded_generation
+    # recovered engine serves bit-identical results to the pinned snapshot
+    eng = QueryEngine(kb2, scoring_path="map")
+    assert results_equal(
+        snap.query_batch(["INV-2077"], k=3)[0],
+        eng.query_batch(["INV-2077"], k=3)[0],
+    )
+
+
+def test_durable_publish_requires_container_path():
+    kb = _mk_kb(3)
+    mgr = SnapshotManager(kb, scoring_path="map")
+    with pytest.raises(ValueError, match="container_path"):
+        mgr.publish(durable=True)
+
+
+def test_serving_runtime_durable_passthrough(tmp_path):
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(10)
+    with ServingRuntime(kb, container_path=p, scoring_path="map") as rt:
+        rt.publish(durable=True)
+        kb.add_text("late.txt", "late addition INV-31337")
+        rt.publish(durable=True)
+        assert rt.query_batch(["INV-31337"], k=1)[0][0].doc_id == "late.txt"
+    out = KnowledgeBase.load(p)
+    assert "late.txt" in out.records
