@@ -7,6 +7,7 @@
 #   scale             sharded-retrieval payload accounting
 #   serving           micro-batching scheduler load tests (open/closed loop)
 #   persistence       journaled delta saves vs full container rewrites
+#   index             IVF clustered retrieval: QPS-vs-Recall vs flat scan
 #
 # Roofline tables are a separate heavier entry point
 # (``python -m benchmarks.roofline``) because they compile dry-run
@@ -19,6 +20,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (
+        bench_index,
         bench_paper,
         bench_persistence,
         bench_scale,
@@ -28,7 +30,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for fn in (bench_paper.ALL + bench_scale.ALL + bench_serving.ALL
-               + bench_persistence.ALL):
+               + bench_persistence.ALL + bench_index.ALL):
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}")

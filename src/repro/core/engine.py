@@ -39,8 +39,18 @@ the single-query `Retriever` could not give a multi-user deployment:
    (tokenizer.normalize), invalidated only when the idf statistics
    actually change.  Repeated queries skip tokenize/hash/scatter.
 
-See docs/ARCHITECTURE.md §5 for how this composes with the
-mesh-sharded path (retrieval.py).
+4. **Clustered index plane** — ``index="ivf"`` (default ``"flat"``)
+   routes queries through the IVF probe/rerank subsystem
+   (src/repro/index/): score √N centroids, gather the top-``nprobe``
+   clusters' rows, rerank with the exact HSF through the same
+   ``score_batch_arrays`` dispatch — sublinear scan cost, exact scores
+   within the probed set, and ``guarantee="exact"`` widens probes until
+   the top-k is provably identical to the flat scan.  The index rides
+   the same dirty-row log as the arrays (reassign-on-refresh, drift-
+   triggered retrain) and persists via ``kb.index_state``.
+
+See docs/ARCHITECTURE.md §5/§9 for how this composes with the
+mesh-sharded path (retrieval.py) and the index plane.
 """
 from __future__ import annotations
 
@@ -77,6 +87,8 @@ class RefreshStats:
     rows_patched: int = 0   # device rows updated in place (.at[].set)
     restacked: bool = False  # row layout changed (add/remove) → host restack
     reweighted: bool = False  # idf changed → global reweight pass
+    index_reassigned: int = 0  # dirty rows re-clustered (index plane)
+    index_retrained: bool = False  # drift threshold hit → k-means retrain
     n_docs: int = 0
     seconds: float = 0.0
 
@@ -90,7 +102,8 @@ class RefreshStats:
 # --------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("k", "alpha", "beta", "gemm"))
-def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, *, k, alpha, beta, gemm):
+def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, n_valid,
+                *, k, alpha, beta, gemm):
     """HSF scores + top-k for a padded query batch.
 
     Returns (vals [B,k], idx [B,k], cos [B,k], ind [B,k]) — ``ind`` is
@@ -98,6 +111,12 @@ def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, *, k, alpha, beta, gemm):
     ground truth for the ``boosted`` flag (never inferred from float
     score arithmetic, which misfires at β=0).  The non-gemm path keeps
     each query's reduction identical to the single-query matvec.
+
+    ``n_valid`` (traced) masks doc rows ≥ n_valid to −inf before the
+    top-k — the index plane's candidate-gather path pads the doc
+    operands to a power-of-two row bucket (index/ivf.py); full-matrix
+    callers pass n_valid == N, where the mask is the identity (the
+    ``where`` keeps every score bit-exactly).
     """
     dv = doc_vecs.astype(jnp.float32)
     if gemm:
@@ -106,6 +125,9 @@ def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, *, k, alpha, beta, gemm):
         cos = jax.lax.map(lambda q: dv @ q.astype(jnp.float32), q_vecs)
     ind = jax.vmap(lambda s: hsf.containment(doc_sigs, s))(q_sigs)
     scores = alpha * cos + beta * ind
+    scores = jnp.where(
+        jnp.arange(scores.shape[1])[None, :] < n_valid, scores, -jnp.inf
+    )
     vals, idx = jax.lax.top_k(scores, k)
     return (vals, idx, jnp.take_along_axis(cos, idx, axis=1),
             jnp.take_along_axis(ind, idx, axis=1))
@@ -208,8 +230,11 @@ def score_batch_arrays(
 
     Pure function of its operands (no engine state): the serving-plane
     snapshot (serving/snapshot.py) calls this against frozen arrays, the
-    engine against its live ones.  ``kernel_operands`` is the optional
-    pre-padded (block-aligned) doc operand pair for the kernel path.
+    engine against its live ones, and the index plane against gathered
+    candidate subsets (``n_docs`` < doc rows masks the pad; full-matrix
+    callers pass n_docs == rows, a bit-exact no-op).  ``kernel_operands``
+    is the optional pre-padded (block-aligned) doc operand pair for the
+    kernel path.
     """
     if scoring_path == "kernel":
         if kernel_operands is None:
@@ -222,6 +247,7 @@ def score_batch_arrays(
     else:
         vals, idx, cos, ind = _score_topk(
             doc_vecs, doc_sigs, jnp.asarray(qv), jnp.asarray(qs),
+            jnp.int32(n_docs),
             k=k, alpha=alpha, beta=beta, gemm=scoring_path == "gemm",
         )
     return (np.asarray(vals), np.asarray(idx),
@@ -288,6 +314,9 @@ class QueryEngine:
     O(changed docs), not O(corpus).
     """
 
+    INDEX_KINDS = ("flat", "ivf")
+    GUARANTEES = ("probe", "exact")
+
     def __init__(
         self,
         kb: KnowledgeBase,
@@ -298,10 +327,43 @@ class QueryEngine:
         scoring_path: str = "auto",
         cache_size: int = 256,
         max_batch: int = 256,
+        index: str = "flat",
+        nprobe: int = 8,
+        guarantee: str = "probe",
+        n_clusters: int | None = None,
+        retrain_drift: float = 0.3,
+        ivf_seed: int = 0,
     ):
         self.kb = kb
         self.alpha = float(alpha)
         self.beta = float(beta)
+        # ---- index plane (docs/ARCHITECTURE.md §9) ----------------------
+        # "flat" (default) scans all N docs — the bit-stability baseline.
+        # "ivf" probes the top-`nprobe` clusters and reranks candidates
+        # with the exact HSF; `guarantee="exact"` widens probes until the
+        # top-k provably equals the flat scan (bit-identical).
+        if index not in self.INDEX_KINDS:
+            raise ValueError(
+                f"index must be one of {self.INDEX_KINDS}, got {index!r}"
+            )
+        if guarantee not in self.GUARANTEES:
+            raise ValueError(
+                f"guarantee must be one of {self.GUARANTEES}, "
+                f"got {guarantee!r}"
+            )
+        if index == "ivf" and (self.alpha < 0 or self.beta < 0):
+            # the cluster pruning bound assumes non-negative HSF weights
+            raise ValueError("index='ivf' requires alpha >= 0 and beta >= 0")
+        if nprobe < 1:
+            raise ValueError(f"nprobe must be >= 1, got {nprobe}")
+        self.index = index
+        self.nprobe = int(nprobe)
+        self.guarantee = guarantee
+        self.n_clusters = n_clusters
+        self.retrain_drift = float(retrain_drift)
+        self.ivf_seed = int(ivf_seed)
+        self.ivf = None  # IVFIndex | None — built/adopted on refresh
+        self._last_index_stats = None
         # "auto" resolves at construction: kernel on real TPU backends,
         # the bit-stable map path elsewhere.  The booleans are kept as
         # resolved views for back-compat (retrieval.py checks them).
@@ -337,11 +399,20 @@ class QueryEngine:
     # ---- incremental materialization -----------------------------------
 
     def refresh(self) -> RefreshStats:
-        """Bring device arrays up to date with the KB (O(changed docs))."""
+        """Bring device arrays up to date with the KB (O(changed docs)).
+
+        When ``index="ivf"`` the cluster index rides the same dirty-row
+        delta: changed docs reassign to their nearest centroid (O(U)),
+        layout restacks remap assignments by doc id, and the drift
+        counter triggers a full k-means retrain past ``retrain_drift``
+        (see ``_sync_ivf``).
+        """
         t0 = time.perf_counter()
         kb = self.kb
         stats = RefreshStats()
         target = kb.version
+        changed_ids: list[str] | None = None
+        old_row_of: dict[str, int] = {}
         if self._synced < 0:
             stats.changed = kb.n_docs
             stats.restacked = True
@@ -350,7 +421,12 @@ class QueryEngine:
         elif target != self._synced:
             changed, removed = kb.changes_since(self._synced)
             stats.changed, stats.removed = len(changed), len(removed)
+            changed_ids = changed
+            old_row_of = self._row_of  # pre-delta layout (for ivf remap)
             self._apply_delta(changed, stats)
+        if self.index == "ivf" and (self.ivf is None
+                                    or changed_ids is not None):
+            self._sync_ivf(changed_ids, old_row_of, stats)
         self._synced = target
         stats.n_docs = len(self.doc_ids)
         stats.seconds = time.perf_counter() - t0
@@ -463,6 +539,110 @@ class QueryEngine:
             self.doc_vecs = self.doc_vecs.at[rows_p].set(jnp.asarray(block_p))
             stats.rows_patched = len(rows)
 
+    # ---- index plane maintenance (index="ivf") --------------------------
+
+    def _sync_ivf(self, changed_ids: list[str] | None,
+                  old_row_of: dict[str, int], stats: RefreshStats) -> None:
+        """Keep the cluster index aligned with the device arrays.
+
+        Cold: adopt the KB's persisted index state when it matches the
+        current doc layout (no cold retrain on load — the acceptance
+        contract of the persistence plane), else train.  Delta: changed
+        rows reassign (O(U)); restacks remap assignments by doc id; the
+        drift counter triggers a retrain past ``retrain_drift``.  Every
+        state change is written back to ``kb.index_state`` so
+        ``save``/``save_delta`` persist it (the writer thread calls
+        refresh before a durable publish — serving/snapshot.py).
+        """
+        from repro.index.ivf import IVFIndex, ids_digest
+
+        n = len(self.doc_ids)
+        if n == 0:
+            self.ivf = None
+            return
+        if self.ivf is None:
+            st = self.kb.index_state
+            if (st is not None and st.get("kind") == "ivf"
+                    and len(st["assign"]) == n
+                    and st.get("ids_sha") == ids_digest(self._ivf_state_key())):
+                # the key covers doc ids AND content hashes: a stale
+                # state (doc rewritten in place with no live index
+                # maintenance) must never adopt — its sig_union/radius
+                # could underestimate a cluster and break exactness
+                self.ivf = IVFIndex.from_state(st)  # bit-identical adopt
+                return
+            self.ivf = IVFIndex.train(
+                self.doc_vecs, np.asarray(self.doc_sigs),
+                n_clusters=self.n_clusters, seed=self.ivf_seed,
+            )
+            stats.index_retrained = True
+            self._write_index_state()
+            return
+        if stats.restacked:
+            # layout changed: carry surviving rows' clusters by doc id;
+            # new/changed rows (−1) assign to their nearest centroid
+            # (the restack itself is already O(N), so full-array
+            # recomputation is in budget here)
+            old_assign = self.ivf.assign
+            changed_set = set(changed_ids or ())
+            carried = np.full((n,), -1, np.int32)
+            for r, i in enumerate(self.doc_ids):
+                old_r = old_row_of.get(i)
+                if old_r is not None and i not in changed_set:
+                    carried[r] = old_assign[old_r]
+            self.ivf = self.ivf.remap(carried, self.doc_vecs,
+                                      np.asarray(self.doc_sigs))
+            stats.index_reassigned = int(np.sum(carried < 0))
+        elif changed_ids:
+            # O(U) path: gather only the dirty rows on device before the
+            # host transfer — never a full [N, ·] device→host copy
+            rows = np.array([self._row_of[i] for i in changed_ids], np.int32)
+            rows_j = jnp.asarray(rows)
+            self.ivf = self.ivf.reassign(
+                rows,
+                np.asarray(jnp.take(self.doc_vecs, rows_j, axis=0)),
+                np.asarray(jnp.take(self.doc_sigs, rows_j, axis=0)),
+            )
+            stats.index_reassigned = len(rows)
+        else:
+            return  # metadata-only mutation: index untouched
+        if self.ivf.needs_retrain(self.retrain_drift):
+            self.ivf = IVFIndex.train(
+                self.doc_vecs, np.asarray(self.doc_sigs),
+                n_clusters=self.n_clusters, seed=self.ivf_seed,
+            )
+            stats.index_retrained = True
+        self._write_index_state()
+
+    def _ivf_state_key(self) -> list[str]:
+        """Layout **and content** key the persisted index is pinned to:
+        one ``"id\\x01sha256"`` token per doc in engine row order."""
+        recs = self.kb.records
+        return [f"{i}\x01{recs[i].sha256}" for i in self.doc_ids]
+
+    def _write_index_state(self) -> None:
+        """Publish the index state into the KB so the persistence plane
+        journals it alongside the doc segments (core/ingest.py).
+
+        The layout-key digest is O(N) string hashing per refresh —
+        noise next to the O(N·D) idf reweight the same refresh performs
+        whenever df moved (i.e. on any content change)."""
+        self.kb.set_index_state(self.ivf.state_dict(self._ivf_state_key()))
+
+    def index_stats(self) -> dict:
+        """Probe accounting of the most recent ivf dispatch (None fields
+        when the engine is flat or hasn't served an ivf query yet)."""
+        s = self._last_index_stats
+        return {
+            "index": self.index,
+            "n_clusters": self.ivf.n_clusters if self.ivf else 0,
+            "drift": self.ivf.drift if self.ivf else 0,
+            "probed_fraction": s.probed_fraction if s else None,
+            "clusters_probed": s.clusters_probed if s else None,
+            "candidate_rows": s.candidate_rows if s else None,
+            "rounds": s.rounds if s else None,
+        }
+
     # ---- query-vector cache --------------------------------------------
 
     def _query_arrays(self, text: str) -> tuple[np.ndarray, np.ndarray]:
@@ -489,12 +669,16 @@ class QueryEngine:
     ) -> list[list[RetrievalResult]]:
         """Retrieve top-k for every query; one device dispatch per chunk.
 
-        Results per query are identical to ``Retriever.query`` on the
-        same KB — bit-identical when the resolved scoring path is
+        ``k`` must be ≥ 1 (a clear ValueError, not a silent fall-through
+        to the padded top-k); ``k`` > corpus size clamps to the corpus
+        size.  Results per query are identical to ``Retriever.query`` on
+        the same KB — bit-identical when the resolved scoring path is
         ``"map"`` (what ``"auto"`` picks everywhere except real TPU
         backends, where it resolves to the non-bit-stable kernel; force
         ``scoring_path="map"`` to keep the bit-stability contract there).
         """
+        if k <= 0:
+            raise ValueError(f"k must be a positive integer, got {k}")
         self.refresh()
         if not self.doc_ids or not texts:
             return [[] for _ in texts]
@@ -514,14 +698,22 @@ class QueryEngine:
         pairs = [self._query_arrays(t) for t in texts]
         qv, qs = pack_query_arrays(pairs, self.kb.dim, self.kb.sig_words)
         n = len(self.doc_ids)
-        vals, idx, cos, ind = score_batch_arrays(
-            self.doc_vecs, self.doc_sigs, qv, qs,
-            scoring_path=self.scoring_path, k=min(k, n),
-            alpha=self.alpha, beta=self.beta, n_docs=n,
-            kernel_operands=(
-                self._kernel_operands() if self.use_kernel else None
-            ),
-        )
+        if self.index == "ivf" and self.ivf is not None:
+            vals, idx, cos, ind, self._last_index_stats = self.ivf.search(
+                self.doc_vecs, self.doc_sigs, qv, qs,
+                b=b, k=min(k, n), nprobe=self.nprobe,
+                guarantee=self.guarantee, scoring_path=self.scoring_path,
+                alpha=self.alpha, beta=self.beta,
+            )
+        else:
+            vals, idx, cos, ind = score_batch_arrays(
+                self.doc_vecs, self.doc_sigs, qv, qs,
+                scoring_path=self.scoring_path, k=min(k, n),
+                alpha=self.alpha, beta=self.beta, n_docs=n,
+                kernel_operands=(
+                    self._kernel_operands() if self.use_kernel else None
+                ),
+            )
         return results_from_topk(self.doc_ids, b, vals, idx, cos, ind)
 
     def _kernel_operands(self):

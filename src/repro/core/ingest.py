@@ -228,6 +228,21 @@ class KnowledgeBase:
     # has nothing to re-vectorize — but save_delta persists them so the
     # O(stat) sync win survives a restart
     _meta_changed_at: dict[str, int] = field(default_factory=dict)
+    # clustered-index state (src/repro/index/): an opaque dict of raw
+    # arrays + scalars the engine writes via ``set_index_state`` after
+    # training/maintaining its IVF index.  Persisted as ``ivf_*``
+    # container segments + ``meta["index"]`` so a loaded KB serves
+    # queries without a cold retrain; ``_index_rev`` vs
+    # ``_index_persisted_rev`` decides whether a delta record must
+    # carry it.
+    index_state: dict | None = None
+    _index_rev: int = 0
+    _index_persisted_rev: int = 0
+    # centroid digest of the last persisted index state: delta records
+    # omit the ivf_centroids segment (the dominant byte term, ~√N·D·4)
+    # when the chain already carries it — centroids only change on
+    # retrain, while assignments/bounds move on every reassign
+    _index_persisted_centroid_sha: str | None = None
     # single-writer guard (see _single_writer below)
     _write_lock: threading.Lock = field(
         default_factory=threading.Lock, repr=False, compare=False
@@ -472,6 +487,73 @@ class KnowledgeBase:
     def n_docs(self) -> int:
         return len(self.records)
 
+    # ---- clustered-index state (written by core/engine.py) --------------
+
+    def set_index_state(self, state: dict) -> None:
+        """Adopt the serving plane's index state (writer thread — the
+        engine calls this from ``refresh()``, which the single-writer
+        contract puts on the same thread as mutations and publishes).
+        Bumps the index revision so the next ``save_delta`` journals it
+        even when no documents changed (e.g. a first train on an
+        already-persisted corpus)."""
+        self.index_state = state
+        self._index_rev += 1
+
+    def _index_aligned(self) -> bool:
+        """True when the index state matches the current doc layout
+        (stale state — e.g. docs mutated with no live ivf engine — is
+        skipped at save time; the next ivf engine retrains anyway)."""
+        return (self.index_state is not None
+                and len(self.index_state.get("assign", ()))
+                == len(self.records))
+
+    def _index_segments(self, include_centroids: bool = True
+                        ) -> dict[str, np.ndarray]:
+        st = self.index_state
+        segs = {
+            "ivf_sig_union": st["sig_union"],
+            "ivf_radius": st["radius"],
+            "ivf_assign": st["assign"],
+        }
+        if include_centroids:
+            segs["ivf_centroids"] = st["centroids"]
+        return segs
+
+    def _index_meta(self) -> dict:
+        st = self.index_state
+        return {k: st[k] for k in
+                ("kind", "drift", "trained_n", "seed", "ids_sha",
+                 "centroid_sha")}
+
+    @staticmethod
+    def _index_state_from(segs: dict, imeta: dict | None,
+                          prev: dict | None = None) -> dict | None:
+        """Index state from a container image / delta record.  A record
+        without the centroid segment inherits centroids from ``prev``
+        (the chain's prior state) when the digests agree; a broken
+        chain yields None — the next ivf engine retrains (safe)."""
+        if imeta is None:
+            return None
+        if "ivf_centroids" in segs:
+            centroids = segs["ivf_centroids"]
+        elif (prev is not None
+                and prev.get("centroid_sha") == imeta.get("centroid_sha")):
+            centroids = prev["centroids"]
+        else:
+            return None
+        return {
+            "kind": imeta.get("kind", "ivf"),
+            "centroids": centroids,
+            "sig_union": segs["ivf_sig_union"],
+            "radius": segs["ivf_radius"],
+            "assign": segs["ivf_assign"],
+            "drift": int(imeta["drift"]),
+            "trained_n": int(imeta["trained_n"]),
+            "seed": int(imeta["seed"]),
+            "ids_sha": imeta["ids_sha"],
+            "centroid_sha": imeta.get("centroid_sha"),
+        }
+
     # ---- container round-trip ------------------------------------------
 
     def _doc_meta(self, ids: list[str]) -> list[dict]:
@@ -548,6 +630,11 @@ class KnowledgeBase:
             "sig_words": self.sig_words,
             "docs": self._doc_meta(ids),
         }
+        if self._index_aligned():
+            segments.update(self._index_segments())
+            meta["index"] = self._index_meta()
+            self._index_persisted_centroid_sha = \
+                self.index_state.get("centroid_sha")
         digest = write_container(path, segments, meta, generation)
         reset_journal(path)
         self.loaded_generation = int(generation)
@@ -555,6 +642,7 @@ class KnowledgeBase:
         self._persisted_ids = set(ids)
         self._persisted_path = os.path.abspath(path)
         self._base_uid = digest
+        self._index_persisted_rev = self._index_rev
         return digest
 
     # journal auto-compaction threshold: fold when the journal outgrows
@@ -604,7 +692,14 @@ class KnowledgeBase:
             if v > self._persisted_version and p in self.records
             and p not in changed_set
         )
-        if not changed and not removed and not meta_changed:
+        # the clustered index journals alongside the docs: a record is
+        # due when the engine trained/maintained it since the last
+        # persist (possibly with zero doc changes, e.g. a first train
+        # over an already-persisted corpus)
+        index_changed = (self._index_rev > self._index_persisted_rev
+                         and self._index_aligned())
+        if not changed and not removed and not meta_changed \
+                and not index_changed:
             return self.loaded_generation  # nothing new: zero bytes written
         gen = self.loaded_generation + 1
         meta = {
@@ -615,9 +710,21 @@ class KnowledgeBase:
             "meta_docs": self._doc_meta(meta_changed),
             "removed": removed,
         }
-        append_journal_record(
-            path, self._doc_segments(changed), meta, gen, self._base_uid
-        )
+        segments = self._doc_segments(changed)
+        if index_changed:
+            # centroids ride the record only when they actually moved
+            # (train/retrain) — assignments/bounds are the O(N + √N·W)
+            # small terms that change on every reassign
+            csha = self.index_state.get("centroid_sha")
+            segments.update(self._index_segments(
+                include_centroids=csha != self._index_persisted_centroid_sha
+            ))
+            meta["index"] = self._index_meta()
+        append_journal_record(path, segments, meta, gen, self._base_uid)
+        if index_changed:
+            self._index_persisted_rev = self._index_rev
+            self._index_persisted_centroid_sha = \
+                self.index_state.get("centroid_sha")
         self.loaded_generation = gen
         self._persisted_version = self._version
         self._persisted_ids = set(self.records)
@@ -685,6 +792,12 @@ class KnowledgeBase:
         # identical to the saver's live statistics, never re-derived
         self.vectorizer.df = segs["df"]
         self.vectorizer.n_docs = int(meta["vectorizer"]["n_docs"])
+        if meta.get("index") is not None:
+            # later records win, replayed verbatim; centroids inherit
+            # from the chain's prior state when the record omitted them
+            self.index_state = self._index_state_from(
+                segs, meta["index"], prev=self.index_state
+            )
         if meta["docs"] or meta.get("removed"):
             self._dirty = True  # meta-only records leave ⟨V⟩/⟨I⟩ intact
 
@@ -711,6 +824,7 @@ class KnowledgeBase:
             kb._postings = PostingsIndex.from_segments(segs)
             kb._dirty = False
         # else: matrix rebuilds lazily from term counts at first query
+        kb.index_state = kb._index_state_from(segs, meta.get("index"))
         kb.loaded_generation = int(c.generation)
         kb._persisted_version = 0
         kb._persisted_path = os.path.abspath(path)
@@ -726,4 +840,7 @@ class KnowledgeBase:
                 kb._apply_delta_record(rmeta, rsegs)
                 kb.loaded_generation = gen
         kb._persisted_ids = set(kb.records)
+        if kb.index_state is not None:
+            kb._index_persisted_centroid_sha = \
+                kb.index_state.get("centroid_sha")
         return kb

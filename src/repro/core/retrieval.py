@@ -68,12 +68,19 @@ class Retriever:
     ``prefilter=True`` uses the ⟨I⟩-region postings to restrict HSF
     scoring to documents sharing at least one query term — sub-linear
     for selective queries.  Recall caveat (documented): char-level
-    substring matches inside *longer tokens* have no shared term and are
-    only found by the full scan, so prefiltering is an opt-in
+    substring matches inside *longer tokens* have no shared term and
+    are only found by the full scan, so prefiltering is an opt-in
     accelerator (exact for whole-token queries, e.g. entity codes).
-    The prefilter path keeps its own candidate-subset scoring (dynamic
-    shapes don't batch) and is not part of the engine's bit-stability
-    contract.
+    This is a *different* caveat from ``QueryEngine(index="ivf")``'s:
+    the IVF probe plane ranks clusters by cosine **and** a
+    signature-union containment test, so substring-only matches are
+    still probeable (and ``guarantee="exact"`` recovers them
+    provably); the postings prefilter simply cannot see them.  The
+    candidate subset is scored through the index plane's shared
+    gather helper (``index.ivf.score_candidate_rows`` →
+    ``score_batch_arrays``), so subset scores are bit-identical to the
+    corresponding rows of the full scan and ties break by global doc
+    index, same as every other path.
     """
 
     def __init__(
@@ -131,49 +138,42 @@ class Retriever:
         return self._query_prefiltered(text, k)
 
     def _query_prefiltered(self, text: str, k: int) -> list[RetrievalResult]:
+        from repro.core.engine import (
+            pack_query_arrays,
+            results_from_topk,
+            score_batch_arrays,
+        )
+        from repro.index.ivf import score_candidate_rows
+
+        if k <= 0:
+            raise ValueError(f"k must be a positive integer, got {k}")
         self.engine.refresh()
         if not self.doc_ids:
             return []
         qv, qs = self.engine._query_arrays(text)
-        q_vec, q_sig = jnp.asarray(qv), jnp.asarray(qs)
+        qvp, qsp = pack_query_arrays([(qv, qs)], self.kb.dim,
+                                     self.kb.sig_words)
         cand = self.kb.postings().candidates(
             text, mode="union",
             max_candidates=max(256, len(self.doc_ids) // 4),
         )
         if cand is not None and len(cand) == 0:
             return []
-        doc_vecs, doc_sigs = self.doc_vecs, self.doc_sigs
-        if cand is not None:
-            doc_vecs = doc_vecs[cand]
-            doc_sigs = doc_sigs[cand]
-        score_fn = hsf.hsf_scores_kernel if self.use_kernel else hsf.hsf_scores
-        scores = score_fn(
-            doc_vecs, doc_sigs, q_vec, q_sig,
-            alpha=self.alpha, beta=self.beta,
-        )
-        cosines = doc_vecs @ q_vec
-        k = min(k, doc_vecs.shape[0])
-        vals, idx = jax.lax.top_k(scores, k)
-        # exact containment bit for the k selected docs only — the
-        # boosted flag is never inferred from score − α·cos (misfires at
-        # β=0 / float noise), and O(k·W) beats a candidate-set-wide test
-        indicator = np.asarray(
-            hsf.containment(jnp.take(doc_sigs, idx, axis=0), q_sig)
-        )
-        out = []
-        for pos, (v, i) in enumerate(zip(np.asarray(vals), np.asarray(idx))):
-            local = int(i)
-            c = float(cosines[local])
-            gid = int(cand[local]) if cand is not None else local
-            out.append(
-                RetrievalResult(
-                    doc_id=self.doc_ids[gid],
-                    score=float(v),
-                    cosine=c,
-                    boosted=bool(indicator[pos] > 0.5),
-                )
+        n = len(self.doc_ids)
+        if cand is None:  # unselective query: full scan is cheaper
+            vals, idx, cos, ind = score_batch_arrays(
+                self.doc_vecs, self.doc_sigs, qvp, qsp,
+                scoring_path=self.engine.scoring_path, k=min(k, n),
+                alpha=self.alpha, beta=self.beta, n_docs=n,
             )
-        return out
+        else:
+            vals, idx, cos, ind = score_candidate_rows(
+                self.doc_vecs, self.doc_sigs,
+                np.sort(np.asarray(cand, np.int32)), qvp, qsp,
+                scoring_path=self.engine.scoring_path,
+                k=min(k, len(cand)), alpha=self.alpha, beta=self.beta,
+            )
+        return results_from_topk(self.doc_ids, 1, vals, idx, cos, ind)[0]
 
 
 # --------------------------------------------------------------------------

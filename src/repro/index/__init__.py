@@ -1,0 +1,31 @@
+"""The clustered index plane (docs/ARCHITECTURE.md §9).
+
+A new layer between the vectorizer and the scorer: instead of scanning
+all N documents per query (map/gemm/kernel all do), the IVF index
+scores a [k_clusters, D] centroid matrix, probes the top-``nprobe``
+clusters, and runs the **exact** HSF (cosine + substring boost) over
+the gathered candidate rows through the same
+``score_batch_arrays``/``hsf_score_topk_pallas`` machinery the flat
+paths use — so results within the probed set are bit-identical to the
+brute-force scan, and ``guarantee="exact"`` widens the probe set until
+the top-k is provably stable (see ivf.py for the bound).
+
+- ``kmeans.py``  — deterministic spherical k-means over the TF-IDF doc
+  matrix in pure JAX (k ≈ √N default, empty-cluster reseeding).
+- ``ivf.py``     — cluster assignment, probe/rerank search, incremental
+  maintenance off the engine's dirty-row log, and the container
+  (de)serialization the persistence plane journals.
+
+Consumed by ``QueryEngine(index="ivf")`` (core/engine.py); frozen
+per-generation by the serving snapshots (serving/snapshot.py).
+"""
+from repro.index.kmeans import default_n_clusters, spherical_kmeans
+from repro.index.ivf import IVFIndex, IVFSearchStats, score_candidate_rows
+
+__all__ = [
+    "IVFIndex",
+    "IVFSearchStats",
+    "default_n_clusters",
+    "score_candidate_rows",
+    "spherical_kmeans",
+]

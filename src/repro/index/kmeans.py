@@ -1,0 +1,95 @@
+"""Deterministic spherical k-means over the TF-IDF doc matrix (pure JAX).
+
+Documents rows are ℓ2-normalized (vectorizer.py), so cosine similarity
+is a dot product and the natural cluster geometry is spherical: assign
+by max dot against ℓ2-normalized centroids, update as the renormalized
+member mean.  This is the training half of the IVF index plane
+(ivf.py); EdgeRAG (arXiv:2412.21023) motivates exactly this primitive
+for memory-constrained edge retrieval.
+
+Determinism contract: the whole fit is a pure function of
+(doc matrix, n_clusters, seed, n_iter) — init rows come from a seeded
+``jax.random.permutation``, every step is jitted JAX arithmetic, and
+empty-cluster reseeding is rank-based (no data-dependent host
+branching) — so a retrain on the same corpus state reproduces the same
+centroids bit-for-bit, which is what lets tests and the persistence
+plane treat index state as replayable data.
+
+Empty clusters: a cluster that loses all members seizes the
+*worst-served* point (lowest best-similarity to any centroid); with
+``e`` empty clusters the ``e`` hardest points are taken in rank order,
+one per empty cluster.  This keeps k effective clusters without any
+dynamic-shape escape to the host.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def default_n_clusters(n_docs: int) -> int:
+    """The k ≈ √N default: balances centroid-scan cost (k·D per query)
+    against candidate-scan cost (nprobe·N/k·D per probe)."""
+    return max(1, int(round(math.sqrt(max(n_docs, 0)))))
+
+
+@partial(jax.jit, static_argnames=("n_clusters", "n_iter"))
+def _kmeans_fit(x: jnp.ndarray, init_rows: jnp.ndarray,
+                *, n_clusters: int, n_iter: int):
+    """Jitted Lloyd iterations on the sphere → (centroids, assign).
+
+    x [N, D] float32 (rows ℓ2-normalized); init_rows [n_clusters] int32.
+    """
+    n = x.shape[0]
+    cent = jnp.take(x, init_rows, axis=0)  # [k, D]
+
+    def step(cent):
+        sims = x @ cent.T                                  # [N, k]
+        assign = jnp.argmax(sims, axis=1)
+        best = jnp.max(sims, axis=1)                       # [N]
+        one_hot = jax.nn.one_hot(assign, n_clusters, dtype=x.dtype)
+        counts = one_hot.sum(axis=0)                       # [k]
+        sums = one_hot.T @ x                               # [k, D]
+        mean = sums / jnp.maximum(counts, 1.0)[:, None]
+        # empty clusters seize the hardest points, one per cluster in
+        # rank order (worst-served first) — deterministic, shape-static
+        empty = counts == 0
+        hardest = jnp.argsort(best)                        # ascending sim
+        erank = jnp.clip(jnp.cumsum(empty) - 1, 0, n - 1)
+        seize = jnp.take(x, jnp.take(hardest, erank), axis=0)
+        cent = jnp.where(empty[:, None], seize, mean)
+        norm = jnp.linalg.norm(cent, axis=1, keepdims=True)
+        return cent / jnp.maximum(norm, 1e-12)             # spherical
+
+    cent = jax.lax.fori_loop(0, n_iter, lambda _, c: step(c), cent)
+    assign = jnp.argmax(x @ cent.T, axis=1).astype(jnp.int32)
+    return cent, assign
+
+
+def spherical_kmeans(
+    doc_vecs,
+    n_clusters: int | None = None,
+    *,
+    seed: int = 0,
+    n_iter: int = 8,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Fit spherical k-means → (centroids [k, D] f32, assign [N] i32).
+
+    ``n_clusters=None`` uses the √N default, clamped to N.  Fully
+    deterministic from (doc_vecs, n_clusters, seed, n_iter).
+    """
+    x = jnp.asarray(doc_vecs, jnp.float32)
+    n = int(x.shape[0])
+    if n == 0:
+        return (np.zeros((0, int(x.shape[1]) if x.ndim == 2 else 0),
+                         np.float32),
+                np.zeros((0,), np.int32))
+    k = min(n_clusters or default_n_clusters(n), n)
+    init = jax.random.permutation(jax.random.PRNGKey(seed), n)[:k]
+    cent, assign = _kmeans_fit(x, init.astype(jnp.int32),
+                               n_clusters=k, n_iter=n_iter)
+    return np.asarray(cent), np.asarray(assign)

@@ -48,6 +48,15 @@ def main(argv=None):
                     help="auto = kernel on TPU, bit-stable map elsewhere")
     ap.add_argument("--use-kernel", action="store_true",
                     help="legacy alias for --scoring-path kernel")
+    ap.add_argument("--index", default="flat", choices=["flat", "ivf"],
+                    help="flat = full scan; ivf = clustered probe/rerank "
+                    "(sublinear, exact HSF within the probed set)")
+    ap.add_argument("--nprobe", type=int, default=8,
+                    help="clusters probed per query (index=ivf)")
+    ap.add_argument("--guarantee", default="probe",
+                    choices=["probe", "exact"],
+                    help="exact = widen probes until top-k provably "
+                    "matches the flat scan (index=ivf)")
     args = ap.parse_args(argv)
 
     if args.container:
@@ -68,6 +77,9 @@ def main(argv=None):
         max_batch=max(1, args.max_batch),
         flush_deadline=args.flush_deadline_ms / 1e3,
         scoring_path="kernel" if args.use_kernel else args.scoring_path,
+        index=args.index,
+        nprobe=args.nprobe,
+        guarantee=args.guarantee,
     )
     arch = get_arch(args.arch)
     cfg = arch.smoke_config  # CPU host: reduced generator

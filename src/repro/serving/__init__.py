@@ -18,6 +18,12 @@ from the (single) ingest thread after KB mutations.  Queries are
 micro-batched into the engine's power-of-two buckets, served from a
 generation-pinned immutable snapshot, cached per generation, and
 accounted in the metrics plane.
+
+Index-plane knobs thread straight through the engine kwargs:
+``ServingRuntime(kb, index="ivf", nprobe=4)`` serves every flush from
+the generation's *frozen* IVF index (snapshots pin the immutable
+``IVFIndex`` reference exactly like the doc arrays — readers never see
+a half-retrained index; docs/ARCHITECTURE.md §9).
 """
 from __future__ import annotations
 

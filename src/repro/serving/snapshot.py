@@ -61,6 +61,14 @@ class EngineSnapshot:
     scoring_path: str
     kernel_operands: tuple | None  # block-aligned pad, precomputed
     max_batch: int
+    # index plane pin: the engine's IVFIndex is immutable after build
+    # (maintenance *rebinds* engine.ivf, same as the arrays), so the
+    # capture is one reference — readers serve the clustered index of
+    # generation g lock-free while the writer retrains/reassigns g+1
+    index_kind: str = "flat"
+    ivf: object | None = None
+    nprobe: int = 8
+    guarantee: str = "probe"
 
     @staticmethod
     def capture(engine: QueryEngine) -> "EngineSnapshot":
@@ -82,6 +90,10 @@ class EngineSnapshot:
                 engine._kernel_operands() if engine.use_kernel else None
             ),
             max_batch=engine.max_batch,
+            index_kind=engine.index,
+            ivf=engine.ivf,
+            nprobe=engine.nprobe,
+            guarantee=engine.guarantee,
         )
 
     @property
@@ -97,6 +109,8 @@ class EngineSnapshot:
         result is bit-identical to ``QueryEngine.query_batch`` on a KB
         frozen at ``generation`` even while the live KB mutates.
         """
+        if k <= 0:
+            raise ValueError(f"k must be a positive integer, got {k}")
         if not self.doc_ids or not texts:
             return [[] for _ in texts]
         out: list[list[RetrievalResult]] = []
@@ -114,12 +128,20 @@ class EngineSnapshot:
         ]
         qv, qs = pack_query_arrays(pairs, self.vectorizer.dim, self.sig_words)
         n = len(self.doc_ids)
-        vals, idx, cos, ind = score_batch_arrays(
-            self.doc_vecs, self.doc_sigs, qv, qs,
-            scoring_path=self.scoring_path, k=min(k, n),
-            alpha=self.alpha, beta=self.beta, n_docs=n,
-            kernel_operands=self.kernel_operands,
-        )
+        if self.index_kind == "ivf" and self.ivf is not None:
+            vals, idx, cos, ind, _ = self.ivf.search(
+                self.doc_vecs, self.doc_sigs, qv, qs,
+                b=len(texts), k=min(k, n), nprobe=self.nprobe,
+                guarantee=self.guarantee, scoring_path=self.scoring_path,
+                alpha=self.alpha, beta=self.beta,
+            )
+        else:
+            vals, idx, cos, ind = score_batch_arrays(
+                self.doc_vecs, self.doc_sigs, qv, qs,
+                scoring_path=self.scoring_path, k=min(k, n),
+                alpha=self.alpha, beta=self.beta, n_docs=n,
+                kernel_operands=self.kernel_operands,
+            )
         return results_from_topk(self.doc_ids, len(texts),
                                  vals, idx, cos, ind)
 

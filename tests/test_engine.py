@@ -343,6 +343,50 @@ def test_k_larger_than_corpus():
     assert len(res) == 4
 
 
+@pytest.mark.parametrize("bad_k", [0, -1, -50])
+def test_query_batch_rejects_non_positive_k(bad_k):
+    """k ≤ 0 raises a clear ValueError instead of falling through to
+    the padded top-k machinery (regression for the silent k=0 case)."""
+    kb, _ = _kb(n_docs=6, n_entities=2)
+    engine = QueryEngine(kb)
+    with pytest.raises(ValueError, match="k must be"):
+        engine.query_batch(["anything"], k=bad_k)
+    with pytest.raises(ValueError, match="k must be"):
+        engine.query(  # single-query wrapper shares the contract
+            "anything", k=bad_k)
+    # the snapshot read plane enforces the same contract
+    from repro.serving import SnapshotManager
+
+    snap = SnapshotManager(kb, scoring_path="map").current
+    with pytest.raises(ValueError, match="k must be"):
+        snap.query_batch(["anything"], k=bad_k)
+    # and the prefiltered Retriever path
+    from repro.core.retrieval import Retriever
+
+    with pytest.raises(ValueError, match="k must be"):
+        Retriever(kb, prefilter=True).query("anything", k=bad_k)
+
+
+@pytest.mark.parametrize("make_engine", [
+    lambda kb: QueryEngine(kb),
+    lambda kb: QueryEngine(kb, gemm_batch=True),
+    lambda kb: QueryEngine(kb, use_kernel=True),
+    lambda kb: QueryEngine(kb, scoring_path="map", index="ivf",
+                           guarantee="exact"),
+])
+def test_k_larger_than_corpus_clamps_on_every_path(make_engine):
+    """k > n_docs clamps to the corpus size on every scoring path and
+    on the clustered index plane — results stay full-length-n and
+    identical to an exact-k query."""
+    kb, _ = _kb(n_docs=5, n_entities=2)
+    engine = make_engine(kb)
+    res = engine.query_batch(["invoice forecast"], k=50)[0]
+    assert len(res) == 5
+    exact = engine.query_batch(["invoice forecast"], k=5)[0]
+    assert [(r.doc_id, r.score) for r in res] == \
+        [(r.doc_id, r.score) for r in exact]
+
+
 def test_bucket_boundaries():
     assert [_bucket(b) for b in (1, 2, 3, 4, 5, 8, 9, 16, 17)] == \
         [1, 2, 4, 4, 8, 8, 16, 16, 32]

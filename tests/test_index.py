@@ -1,0 +1,297 @@
+"""Clustered index plane (src/repro/index/): deterministic k-means,
+IVF probe/rerank vs the flat scan (bit-identity under the exactness
+guarantee), incremental cluster maintenance off the engine's dirty-row
+log, and the candidate-gather helper shared with the postings
+prefilter."""
+import numpy as np
+import pytest
+
+from repro.core.engine import QueryEngine
+from repro.core.ingest import KnowledgeBase
+from repro.data.corpus import make_corpus
+from repro.index import IVFIndex, spherical_kmeans
+from repro.index.ivf import score_candidate_rows
+from repro.index.kmeans import default_n_clusters
+
+
+def _kb(n_docs=80, dim=1024, n_entities=6, seed=0):
+    docs, entities = make_corpus(n_docs=n_docs, n_entities=n_entities,
+                                 seed=seed)
+    kb = KnowledgeBase(dim=dim)
+    for i, d in enumerate(docs):
+        kb.add_text(f"doc_{i:05d}.txt", d)
+    return kb, entities
+
+
+def _rows(results):
+    return [
+        [(r.doc_id, r.score, r.cosine, r.boosted) for r in res]
+        for res in results
+    ]
+
+
+# --------------------------------------------------------------------------
+# k-means: determinism + degenerate corpora
+# --------------------------------------------------------------------------
+
+def test_kmeans_deterministic_from_seed():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(200, 64)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    c1, a1 = spherical_kmeans(x, 14, seed=7)
+    c2, a2 = spherical_kmeans(x, 14, seed=7)
+    np.testing.assert_array_equal(c1, c2)  # bit-identical refit
+    np.testing.assert_array_equal(a1, a2)
+    c3, _ = spherical_kmeans(x, 14, seed=8)
+    assert not np.array_equal(c1, c3)  # the seed actually matters
+
+
+def test_kmeans_centroids_are_unit_norm_and_assignments_valid():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(100, 32)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    cent, assign = spherical_kmeans(x, 10, seed=0)
+    np.testing.assert_allclose(np.linalg.norm(cent, axis=1), 1.0, rtol=1e-5)
+    assert assign.shape == (100,)
+    assert assign.min() >= 0 and assign.max() < 10
+
+
+def test_kmeans_survives_duplicate_points():
+    """Empty-cluster reseeding: more clusters than distinct points must
+    still terminate with finite centroids and in-range assignments."""
+    x = np.tile(np.eye(2, 16, dtype=np.float32), (5, 1))  # 10 rows, 2 unique
+    cent, assign = spherical_kmeans(x, 8, seed=0)
+    assert np.all(np.isfinite(cent))
+    assert assign.min() >= 0 and assign.max() < 8
+
+
+def test_kmeans_clamps_k_to_n_and_handles_empty():
+    x = np.eye(3, 8, dtype=np.float32)
+    cent, assign = spherical_kmeans(x, 50, seed=0)
+    assert cent.shape[0] == 3
+    cent, assign = spherical_kmeans(np.zeros((0, 8), np.float32), None)
+    assert cent.shape[0] == 0 and assign.shape == (0,)
+
+
+def test_default_n_clusters_is_sqrt_n():
+    assert default_n_clusters(0) == 1
+    assert default_n_clusters(100) == 10
+    assert default_n_clusters(50_000) == 224
+
+
+# --------------------------------------------------------------------------
+# the exactness guarantee: ivf@exact is bit-identical to the flat scan
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_docs", [7, 33, 100])   # ragged corpus sizes
+@pytest.mark.parametrize("beta", [1.0, 0.0])       # β=0: pure cosine
+def test_ivf_exact_bit_identical_to_flat_sweep(n_docs, beta):
+    kb, entities = _kb(n_docs=n_docs, dim=512,
+                       n_entities=min(4, max(1, n_docs // 4)))
+    flat = QueryEngine(kb, beta=beta, scoring_path="map")
+    ivf = QueryEngine(kb, beta=beta, scoring_path="map",
+                      index="ivf", guarantee="exact", nprobe=1)
+    queries = (list(entities)
+               + [f"lookup {c} record" for c in list(entities)[:2]]
+               + ["quarterly forecast", "unrelated text", ""])
+    for b in (1, 3, 8):  # batch sizes (padding buckets 1/4/8)
+        batch = (queries * 3)[:b]
+        assert _rows(flat.query_batch(batch, k=5)) == \
+            _rows(ivf.query_batch(batch, k=5)), (n_docs, beta, b)
+
+
+def test_ivf_exact_with_duplicate_ties():
+    """Duplicate docs tie exactly; the exact guarantee must reproduce
+    the flat scan's doc-index tie order (ties at the k-th score force
+    further probing — a '>' vs '>=' bug shows up precisely here)."""
+    kb = KnowledgeBase(dim=512)
+    for i in range(12):
+        kb.add_text(f"dup_{i:02d}", "identical tie content INV-7777")
+    for i in range(20):
+        kb.add_text(f"filler_{i:02d}", f"unrelated filler number {i}")
+    flat = QueryEngine(kb, scoring_path="map")
+    ivf = QueryEngine(kb, scoring_path="map", index="ivf",
+                      guarantee="exact", nprobe=1)
+    got = _rows(ivf.query_batch(["INV-7777"], k=6))
+    want = _rows(flat.query_batch(["INV-7777"], k=6))
+    assert got == want
+    assert len({s for _, s, _, _ in got[0]}) == 1  # genuinely tied
+
+
+def test_ivf_probe_mode_recall_and_sublinear_scan():
+    kb, entities = _kb(n_docs=400, dim=512, n_entities=8)
+    ivf = QueryEngine(kb, scoring_path="map", index="ivf", nprobe=1)
+    for code, target in entities.items():
+        top = ivf.query_batch([code], k=1)[0][0]
+        assert top.doc_id == f"doc_{target:05d}.txt", code
+        stats = ivf.index_stats()
+        assert stats["probed_fraction"] < 0.5  # genuinely pruned
+        assert stats["clusters_probed"] < stats["n_clusters"]
+
+
+def test_ivf_k_larger_than_corpus_clamps():
+    kb, _ = _kb(n_docs=5, dim=512, n_entities=1)
+    ivf = QueryEngine(kb, scoring_path="map", index="ivf",
+                      guarantee="exact")
+    assert len(ivf.query_batch(["anything"], k=50)[0]) == 5
+
+
+# --------------------------------------------------------------------------
+# incremental maintenance: reassign / restack / drift-triggered retrain
+# --------------------------------------------------------------------------
+
+def test_ivf_tracks_mutations_and_stays_exact():
+    kb, entities = _kb(n_docs=120, dim=512)
+    flat = QueryEngine(kb, scoring_path="map")
+    ivf = QueryEngine(kb, scoring_path="map", index="ivf",
+                      guarantee="exact", nprobe=2)
+    idx0 = ivf.ivf
+
+    kb.add_text("doc_00004.txt", "rewritten four ZZ-1111")   # in-place
+    stats = ivf.refresh()
+    assert stats.index_reassigned == 1 and not stats.restacked
+    assert ivf.ivf is not idx0  # maintenance rebinds, never mutates
+
+    kb.add_text("brand_new.txt", "fresh doc YY-2222")        # restack
+    kb._remove_doc("doc_00050.txt")
+    stats = ivf.refresh()
+    assert stats.restacked and stats.index_reassigned >= 1
+    assert len(ivf.ivf.assign) == kb.n_docs
+
+    queries = ["ZZ-1111", "YY-2222"] + list(entities)[:3]
+    assert _rows(flat.query_batch(queries, k=4)) == \
+        _rows(ivf.query_batch(queries, k=4))
+
+
+def test_ivf_drift_counter_triggers_retrain():
+    kb, _ = _kb(n_docs=60, dim=512)
+    ivf = QueryEngine(kb, scoring_path="map", index="ivf",
+                      retrain_drift=0.1)  # retrain after ~6 moved rows
+    assert ivf.ivf.drift == 0
+    for i in range(30):  # churn enough rows to cross the threshold
+        kb.add_text(f"doc_{i:05d}.txt",
+                    f"totally different content now {i} XK-{i:04d}")
+    stats = ivf.refresh()
+    assert stats.index_retrained
+    assert ivf.ivf.drift == 0 and ivf.ivf.trained_n == kb.n_docs
+
+
+def test_ivf_reassign_keeps_bounds_conservative():
+    """Incremental updates may only widen cluster bounds: the receiving
+    cluster's signature union gains the row's bits and its radius never
+    rises — the exactness bound stays safe without a rebuild."""
+    kb, _ = _kb(n_docs=80, dim=512)
+    ivf = QueryEngine(kb, scoring_path="map", index="ivf")
+    before = ivf.ivf
+    kb.add_text("doc_00007.txt", "mutated seven with novel terms WQ-4242")
+    ivf.refresh()
+    after = ivf.ivf
+    c = after.assign[ivf._row_of["doc_00007.txt"]]
+    assert after.radius[c] <= before.radius[c] + 1e-7
+    # the union can only gain bits (bitwise superset of the old union)
+    assert np.all((before.sig_union[c] & after.sig_union[c])
+                  == before.sig_union[c])
+
+
+def test_ivf_state_roundtrip_is_bit_identical():
+    kb, _ = _kb(n_docs=50, dim=512)
+    ivf = QueryEngine(kb, scoring_path="map", index="ivf")
+    st = ivf.ivf.state_dict(ivf.doc_ids)
+    clone = IVFIndex.from_state(st)
+    np.testing.assert_array_equal(clone.centroids, ivf.ivf.centroids)
+    np.testing.assert_array_equal(clone.assign, ivf.ivf.assign)
+    np.testing.assert_array_equal(clone.radius, ivf.ivf.radius)
+    np.testing.assert_array_equal(clone.sig_union, ivf.ivf.sig_union)
+    for a, b in zip(clone.members, ivf.ivf.members):
+        np.testing.assert_array_equal(a, b)
+    assert (clone.drift, clone.trained_n, clone.seed) == \
+        (ivf.ivf.drift, ivf.ivf.trained_n, ivf.ivf.seed)
+
+
+def test_stale_index_state_is_not_adopted_after_inplace_rewrite(monkeypatch):
+    """Regression: the persisted state's key covers doc *content*, not
+    just ids.  An in-place rewrite with no live index maintenance
+    leaves stale sig_union/radius bounds that could underestimate a
+    cluster — adoption must refuse and retrain, and exact mode must
+    still match the flat scan."""
+    import repro.index.ivf as ivf_mod
+
+    kb, _ = _kb(n_docs=40, dim=512)
+    QueryEngine(kb, scoring_path="map", index="ivf")  # writes kb.index_state
+    # rewrite in place: id set unchanged, content (and signature) moved
+    kb.add_text("doc_00012.txt", "rewritten with a brand new code PJ-3131")
+
+    calls = []
+    orig = ivf_mod.spherical_kmeans
+    monkeypatch.setattr(ivf_mod, "spherical_kmeans",
+                        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+    fresh = QueryEngine(kb, scoring_path="map", index="ivf",
+                        guarantee="exact")
+    assert calls == [1]  # stale state rejected → retrained
+    flat = QueryEngine(kb, scoring_path="map")
+    assert _rows(fresh.query_batch(["PJ-3131"], k=4)) == \
+        _rows(flat.query_batch(["PJ-3131"], k=4))
+
+
+# --------------------------------------------------------------------------
+# candidate-gather helper (shared with the postings prefilter)
+# --------------------------------------------------------------------------
+
+def test_score_candidate_rows_matches_flat_subset():
+    from repro.core.engine import pack_query_arrays, score_batch_arrays
+
+    kb, entities = _kb(n_docs=90, dim=512)
+    eng = QueryEngine(kb, scoring_path="map")
+    code = next(iter(entities))
+    qv, qs = eng._query_arrays(code)
+    qvp, qsp = pack_query_arrays([(qv, qs)], kb.dim, kb.sig_words)
+    n = len(eng.doc_ids)
+    fv, fi, fc, fd = score_batch_arrays(
+        eng.doc_vecs, eng.doc_sigs, qvp, qsp,
+        scoring_path="map", k=n, alpha=eng.alpha, beta=eng.beta, n_docs=n,
+    )
+    cand = np.sort(np.random.default_rng(0).choice(n, 40, replace=False)
+                   ).astype(np.int32)
+    sv, si, sc, sd = score_candidate_rows(
+        eng.doc_vecs, eng.doc_sigs, cand, qvp, qsp,
+        scoring_path="map", k=10, alpha=eng.alpha, beta=eng.beta,
+    )
+    # subset results == the flat ranking restricted to the subset
+    in_cand = np.isin(fi[0], cand)
+    np.testing.assert_array_equal(si[0], fi[0][in_cand][:10])
+    np.testing.assert_array_equal(sv[0], fv[0][in_cand][:10])
+
+
+def test_prefilter_uses_shared_gather_and_matches_full_scan():
+    from repro.core.retrieval import Retriever
+
+    kb, entities = _kb(n_docs=100, dim=512)
+    pre = Retriever(kb, prefilter=True, scoring_path="map")
+    full = Retriever(kb, prefilter=False, scoring_path="map")
+    for code in list(entities)[:3]:
+        got = pre.query(code, k=5)
+        want = full.query(code, k=5)
+        # whole-token entity queries: prefilter is exact over its
+        # candidate set (the caveat is substring-only matches, which
+        # these are not) — scores bit-match the full scan's ranking
+        # prefix; the unique code's postings may hold < k candidates
+        assert len(got) >= 1
+        assert [(r.doc_id, r.score, r.cosine, r.boosted) for r in got] == \
+            [(r.doc_id, r.score, r.cosine, r.boosted)
+             for r in want[:len(got)]]
+
+
+# --------------------------------------------------------------------------
+# parameter validation
+# --------------------------------------------------------------------------
+
+def test_ivf_parameter_validation():
+    kb, _ = _kb(n_docs=10, dim=512, n_entities=1)
+    with pytest.raises(ValueError, match="index"):
+        QueryEngine(kb, index="bogus")
+    with pytest.raises(ValueError, match="guarantee"):
+        QueryEngine(kb, index="ivf", guarantee="bogus")
+    with pytest.raises(ValueError, match="nprobe"):
+        QueryEngine(kb, index="ivf", nprobe=0)
+    with pytest.raises(ValueError, match="alpha"):
+        QueryEngine(kb, index="ivf", alpha=-1.0)

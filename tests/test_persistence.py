@@ -352,6 +352,125 @@ def test_durable_publish_requires_container_path():
         mgr.publish(durable=True)
 
 
+def test_ivf_index_survives_delta_load_publish_cycle(tmp_path, monkeypatch):
+    """Acceptance bar for the clustered index plane: an IVF-indexed KB
+    survives ``save_delta`` → ``load`` → ``publish(durable=True)`` with
+    the index state replayed **bit-identically** — centroids,
+    assignments, bounds, drift — and the loaded engine adopts it
+    without a cold k-means retrain."""
+    import repro.index.ivf as ivf_mod
+
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(40)
+    eng = QueryEngine(kb, scoring_path="map", index="ivf", nprobe=2)
+    kb.save(p)  # base: full save carries the ivf_* segments
+
+    kb.add_text("doc005.txt", "rewritten five IDX-1111")
+    kb.add_text("fresh.txt", "brand new doc IDX-2222")
+    kb._remove_doc("doc011.txt")
+    eng.refresh()  # reassigns rows + writes index state back to the KB
+    kb.save_delta(p, compact_ratio=None)
+
+    kb2 = KnowledgeBase.load(p)
+    st1, st2 = kb.index_state, kb2.index_state
+    assert st2 is not None
+    for key in ("centroids", "assign", "radius", "sig_union"):
+        np.testing.assert_array_equal(st1[key], st2[key])
+    assert (st1["drift"], st1["trained_n"], st1["ids_sha"]) == \
+        (st2["drift"], st2["trained_n"], st2["ids_sha"])
+
+    # the loaded engine must adopt, never retrain (the whole point of
+    # persisting the index): any k-means call here is a failure
+    calls = []
+    orig = ivf_mod.spherical_kmeans
+    monkeypatch.setattr(ivf_mod, "spherical_kmeans",
+                        lambda *a, **k: (calls.append(1), orig(*a, **k))[1])
+    eng2 = QueryEngine(kb2, scoring_path="map", index="ivf", nprobe=2)
+    queries = ["IDX-1111", "IDX-2222", "topic3"]
+    got = eng2.query_batch(queries, k=4)
+    assert calls == []  # no cold retrain on load
+    np.testing.assert_array_equal(eng2.ivf.assign, eng.ivf.assign)
+    for a, b in zip(got, eng.query_batch(queries, k=4)):
+        assert results_equal(a, b)
+
+    # durable publish continues the chain: the published index replays
+    mgr = SnapshotManager(kb2, engine=eng2, container_path=p,
+                          compact_ratio=None)
+    kb2.add_text("late.txt", "late doc IDX-3333")
+    snap = mgr.publish(durable=True)
+    kb3 = KnowledgeBase.load(p)
+    assert kb3.loaded_generation == kb2.loaded_generation
+    for key in ("centroids", "assign", "radius", "sig_union"):
+        np.testing.assert_array_equal(kb3.index_state[key],
+                                      kb2.index_state[key])
+    eng3 = QueryEngine(kb3, scoring_path="map", index="ivf", nprobe=2)
+    assert calls == []  # adoption again, not retraining
+    assert results_equal(
+        snap.query_batch(["IDX-3333"], k=3)[0],
+        eng3.query_batch(["IDX-3333"], k=3)[0],
+    )
+
+
+def test_index_delta_omits_unchanged_centroids(tmp_path):
+    """Centroids only change on retrain, so a reassign-only delta
+    record must not re-journal the ~√N·D centroid segment — the
+    replayed chain inherits it from the base (and still loads the full
+    state bit-identically)."""
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(30)
+    eng = QueryEngine(kb, scoring_path="map", index="ivf")
+    kb.save(p)
+    kb.add_text("doc004.txt", "reassign-only update IDX-4444")
+    eng.refresh()
+    assert not eng.refresh().index_retrained  # just a reassign
+    kb.save_delta(p, compact_ratio=None)
+
+    records = C.read_journal(p, C.Container.open(p).uid)
+    assert len(records) == 1
+    _, rmeta, rsegs = records[0]
+    assert "index" in rmeta
+    assert "ivf_centroids" not in rsegs       # omitted: chain carries it
+    assert "ivf_assign" in rsegs
+    out = KnowledgeBase.load(p)
+    np.testing.assert_array_equal(out.index_state["centroids"],
+                                  kb.index_state["centroids"])
+    np.testing.assert_array_equal(out.index_state["assign"],
+                                  kb.index_state["assign"])
+
+    # a retrain re-journals the centroids in its delta record (corpus
+    # growth past retrain_drift × trained_n deterministically triggers)
+    for i in range(20):
+        kb.add_text(f"grown{i:03d}.txt", f"fresh doc for retrain {i}")
+    stats = eng.refresh()
+    assert stats.index_retrained
+    kb.save_delta(p, compact_ratio=None)
+    records = C.read_journal(p, C.Container.open(p).uid)
+    assert "ivf_centroids" in records[-1][2]
+    np.testing.assert_array_equal(
+        KnowledgeBase.load(p).index_state["centroids"],
+        kb.index_state["centroids"])
+
+
+def test_index_only_delta_record_persists_first_train(tmp_path):
+    """Training an IVF engine over an already-persisted corpus changes
+    *only* the index — save_delta must still emit a (tiny) record so a
+    restart adopts instead of retraining."""
+    p = str(tmp_path / "kb.ragdb")
+    kb = _mk_kb(15)
+    kb.save(p)
+    assert KnowledgeBase.load(p).index_state is None  # no index yet
+    QueryEngine(kb, scoring_path="map", index="ivf")  # trains + writes back
+    gen = kb.save_delta(p, compact_ratio=None)
+    assert gen == 1  # index-only mutation is worth a record
+    out = KnowledgeBase.load(p)
+    assert out.index_state is not None
+    np.testing.assert_array_equal(out.index_state["assign"],
+                                  kb.index_state["assign"])
+    # replayed docs are still bit-identical to a plain full save
+    _assert_identical(_fingerprint(out),
+                      _fingerprint(kb) | {"generation": 1})
+
+
 def test_serving_runtime_durable_passthrough(tmp_path):
     p = str(tmp_path / "kb.ragdb")
     kb = _mk_kb(10)

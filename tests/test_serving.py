@@ -158,6 +158,37 @@ def test_publish_is_noop_without_mutations():
     assert manager.publish() is snap  # same object: no spurious swap
 
 
+def test_snapshot_pins_frozen_ivf_index_per_generation():
+    """The clustered index is pinned exactly like the doc arrays: a
+    snapshot captured at generation g keeps serving g's IVFIndex object
+    (maintenance only rebinds engine.ivf), so readers never observe a
+    half-retrained index and pinned results stay bit-stable."""
+    kb, entities = _kb(n_docs=60)
+    code = next(iter(entities))
+    manager = SnapshotManager(kb, scoring_path="map", index="ivf",
+                              nprobe=2, guarantee="exact")
+    snap0 = manager.current
+    assert snap0.index_kind == "ivf" and snap0.ivf is not None
+    before = snap0.query_batch([code, "PINNED-9090"], k=3)
+
+    kb.add_text("pinned_doc", "fresh document about PINNED-9090 exactly")
+    snap1 = manager.publish()
+    assert snap1.ivf is not snap0.ivf  # maintenance rebound the index
+    assert snap1.ivf is manager.engine.ivf  # the live reference moved on
+
+    again = snap0.query_batch([code, "PINNED-9090"], k=3)
+    for a, b in zip(before, again):
+        assert results_equal(a, b)  # g's index still serves g's results
+    assert all(r.doc_id != "pinned_doc" for r in again[1])
+    top = snap1.query_batch(["PINNED-9090"], k=1)[0][0]
+    assert top.doc_id == "pinned_doc" and top.boosted
+    # the pinned snapshots match a flat engine frozen at each generation
+    flat_now = QueryEngine(kb, scoring_path="map")
+    for g, w in zip(snap1.query_batch([code], k=3),
+                    flat_now.query_batch([code], k=3)):
+        assert results_equal(g, w)
+
+
 # --------------------------------------------------------------------------
 # result cache: (query, k, generation) keying
 # --------------------------------------------------------------------------
@@ -173,6 +204,72 @@ def test_result_cache_generation_keying_and_lru():
     assert cache.get("Q", 5, 1) is None
     assert cache.evict_generations_before(2) == 1  # drops "other"@gen1
     assert len(cache) == 1
+
+
+def test_result_cache_evict_generations_before():
+    """The hygiene hook drops exactly the entries pinned below the
+    cutoff, keeps the rest queryable, and is idempotent."""
+    cache = ResultCache(capacity=16)
+    for gen in (1, 1, 2, 3):
+        cache.put(f"q{gen}", 5, gen, [f"r{gen}"])
+    cache.put("q1b", 5, 1, ["r1b"])
+    assert len(cache) == 4  # ("q1",1) was overwritten by the dup put
+    assert cache.evict_generations_before(3) == 3  # both gen-1 + gen-2
+    assert len(cache) == 1
+    assert cache.get("q3", 5, 3) == ["r3"]
+    assert cache.get("q1", 5, 1) is None
+    assert cache.evict_generations_before(3) == 0  # idempotent
+    # eviction never touches the hit/miss counters' consistency
+    s = cache.stats()
+    assert s["hits"] == 1 and s["misses"] == 1
+
+
+def test_result_cache_capacity_eviction_is_lru_ordered():
+    """Capacity pressure evicts least-recently-*used*, not
+    least-recently-inserted: a get() refreshes recency, and a put() to
+    an existing key does too."""
+    cache = ResultCache(capacity=3)
+    cache.put("a", 5, 1, ["a"])
+    cache.put("b", 5, 1, ["b"])
+    cache.put("c", 5, 1, ["c"])
+    assert cache.get("a", 5, 1) == ["a"]   # a → most recent
+    cache.put("d", 5, 1, ["d"])            # evicts b (LRU), not a
+    assert cache.get("b", 5, 1) is None
+    assert cache.get("a", 5, 1) == ["a"]
+    cache.put("c", 5, 1, ["c2"])           # refresh c by re-put
+    cache.put("e", 5, 1, ["e"])            # evicts d (now LRU)
+    assert cache.get("d", 5, 1) is None
+    assert cache.get("c", 5, 1) == ["c2"]
+    assert len(cache) == 3
+
+
+def test_result_cache_counters_consistent_under_concurrent_access():
+    """hits + misses must equal total get() calls even under concurrent
+    get/put from many threads (the counters sit inside the lock)."""
+    cache = ResultCache(capacity=32)
+    n_threads, n_ops = 8, 400
+    errors = []
+
+    def worker(tid):
+        try:
+            for i in range(n_ops):
+                key = f"q{(tid * n_ops + i) % 16}"  # overlap across threads
+                if cache.get(key, 5, 1) is None:
+                    cache.put(key, 5, 1, [key])
+        except Exception as exc:  # noqa: BLE001
+            errors.append(exc)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    s = cache.stats()
+    assert s["hits"] + s["misses"] == n_threads * n_ops
+    assert s["hits"] > 0 and s["misses"] > 0
+    assert len(cache) <= 32
 
 
 def test_runtime_cache_hit_serves_same_generation_results():
