@@ -171,6 +171,100 @@ def bench_index(smoke: bool = False):
     return rows
 
 
+def bench_sharded(smoke: bool = False, max_shards: int = 8):
+    """Shard-count sweep over the mesh-partitioned IVF plane.
+
+    For each shard count S ∈ {1, 2, 4, 8} (capped at ``max_shards``):
+    asserts ``index="ivf-sharded", guarantee="exact"`` is bit-identical
+    to the flat map scan, then reports exact-mode QPS with the
+    host-side stable-merge overhead (``merge_seconds`` as a fraction of
+    wall time) and probe-mode QPS with topical Recall@10.  On a
+    single-device host every S runs the logical per-shard fallback —
+    identical numerics to the mesh placement (tests prove it), so the
+    parity sweep is meaningful anywhere; run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to measure
+    the real ``shard_map`` dispatch (the CI multi-device leg does).
+    """
+    sizes, dim = (SMOKE_SIZES, SMOKE_DIM) if smoke else ((50_000,), FULL_DIM)
+    reps = 2 if smoke else 3
+    shard_counts = [s for s in (1, 2, 4, 8) if s <= max_shards]
+    rows = []
+    for n_docs in sizes:
+        kb, entities, topics = _build_kb(n_docs, dim)
+        queries, topical = _workload(entities, topics)
+        flat = QueryEngine(kb, scoring_path="map")
+        truth = flat.query_batch(queries, k=K)
+        flat_qps = _qps(flat, queries, reps)
+        rows.append((f"index_flat_map_{n_docs}docs",
+                     1e6 / flat_qps, f"qps={flat_qps:.0f}"))
+        for n_shards in shard_counts:
+            exact = QueryEngine(kb, scoring_path="map",
+                                index="ivf-sharded", guarantee="exact",
+                                nprobe=8, n_shards=n_shards)
+            got = exact.query_batch(queries, k=K)
+            mism = sum(
+                [(r.doc_id, r.score, r.cosine, r.boosted) for r in x]
+                != [(r.doc_id, r.score, r.cosine, r.boosted) for r in y]
+                for x, y in zip(truth, got)
+            )
+            assert mism == 0, (
+                f"sharded@exact (S={n_shards}) diverged from the flat "
+                f"scan on {mism} queries"
+            )
+            placement = "mesh" if exact.ivf.mesh is not None else "logical"
+            rows.append((f"index_sharded_parity_{n_docs}docs_s{n_shards}",
+                         0.0,
+                         f"queries={len(queries)}_mismatches=0"
+                         f"_{placement}"))
+
+            qps = _qps(exact, queries, reps)
+            # merge overhead: host stable-merge seconds of one warmed
+            # dispatch as a fraction of that dispatch's wall time
+            t0 = time.perf_counter()
+            exact.query_batch(queries[:BATCH], k=K)
+            batch_wall = time.perf_counter() - t0
+            merge = exact.index_stats()["merge_seconds"]
+            rows.append((
+                f"index_sharded_exact_{n_docs}docs_s{n_shards}",
+                1e6 / qps,
+                f"qps={qps:.0f}_speedup={qps / flat_qps:.2f}x"
+                f"_merge_frac={min(1.0, merge / max(batch_wall, 1e-9)):.3f}"
+                f"_{placement}",
+            ))
+
+            probe = QueryEngine(kb, scoring_path="map",
+                                index="ivf-sharded", nprobe=8,
+                                n_shards=n_shards)
+            got = probe.query_batch(queries, k=K)
+            rec = _recall(got[topical], truth[topical], K)
+            pqps = _qps(probe, queries, reps)
+            rows.append((
+                f"index_sharded_probe_{n_docs}docs_s{n_shards}_p8",
+                1e6 / pqps,
+                f"qps={pqps:.0f}_recall{K}={rec:.3f}"
+                f"_speedup={pqps / flat_qps:.2f}x_{placement}",
+            ))
+        # entity Recall@1 bar on the sharded probe plane (smoke gate)
+        probe1 = QueryEngine(kb, scoring_path="map", index="ivf-sharded",
+                             nprobe=1, n_shards=shard_counts[-1])
+        hits = sum(
+            res[0].doc_id == f"doc_{target:06d}.txt"
+            for res, target in zip(
+                probe1.query_batch(list(entities), k=1), entities.values()
+            )
+        )
+        recall1 = hits / len(entities)
+        rows.append((f"index_sharded_entity_recall1_{n_docs}docs"
+                     f"_s{shard_counts[-1]}_p1", 0.0,
+                     f"recall1={recall1:.3f}"))
+        if smoke:
+            assert recall1 >= 0.9, (
+                f"sharded entity Recall@1 at nprobe=1 was {recall1:.2f} "
+                "(need ≥0.9)"
+            )
+    return rows
+
+
 ALL = [bench_index]
 
 
@@ -180,10 +274,18 @@ def main(argv=None) -> int:
                     help="tiny corpus (CI): asserts ivf@exact is "
                     "bit-identical to flat and entity Recall@1 ≥ 0.9 "
                     "at nprobe=1")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="also sweep the sharded plane over shard counts "
+                    "1/2/4/8 capped at this value (asserts sharded@exact "
+                    "bit-parity with the flat scan at every count)")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     for fn in ALL:
         for name, us, derived in fn(smoke=args.smoke):
+            print(f"{name},{us:.1f},{derived}", flush=True)
+    if args.shards:
+        for name, us, derived in bench_sharded(smoke=args.smoke,
+                                               max_shards=args.shards):
             print(f"{name},{us:.1f},{derived}", flush=True)
     return 0
 

@@ -109,8 +109,10 @@ def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, n_valid,
     Returns (vals [B,k], idx [B,k], cos [B,k], ind [B,k]) — ``ind`` is
     the exact containment indicator of each selected doc (0.0/1.0), the
     ground truth for the ``boosted`` flag (never inferred from float
-    score arithmetic, which misfires at β=0).  The non-gemm path keeps
-    each query's reduction identical to the single-query matvec.
+    score arithmetic, which misfires at β=0).  The non-gemm path scores
+    with ``hsf.stable_rowdot`` — the pinned-reduction-order matvec — so
+    every row's cosine is the same bits whether it is scored here, in a
+    gathered IVF candidate block, or on a shard's resident block.
 
     ``n_valid`` (traced) masks doc rows ≥ n_valid to −inf before the
     top-k — the index plane's candidate-gather path pads the doc
@@ -122,7 +124,7 @@ def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, n_valid,
     if gemm:
         cos = q_vecs.astype(jnp.float32) @ dv.T
     else:
-        cos = jax.lax.map(lambda q: dv @ q.astype(jnp.float32), q_vecs)
+        cos = jax.lax.map(lambda q: hsf.stable_rowdot(dv, q), q_vecs)
     ind = jax.vmap(lambda s: hsf.containment(doc_sigs, s))(q_sigs)
     scores = alpha * cos + beta * ind
     scores = jnp.where(
@@ -314,7 +316,7 @@ class QueryEngine:
     O(changed docs), not O(corpus).
     """
 
-    INDEX_KINDS = ("flat", "ivf")
+    INDEX_KINDS = ("flat", "ivf", "ivf-sharded")
     GUARANTEES = ("probe", "exact")
 
     def __init__(
@@ -333,15 +335,20 @@ class QueryEngine:
         n_clusters: int | None = None,
         retrain_drift: float = 0.3,
         ivf_seed: int = 0,
+        n_shards: int | None = None,
     ):
         self.kb = kb
         self.alpha = float(alpha)
         self.beta = float(beta)
-        # ---- index plane (docs/ARCHITECTURE.md §9) ----------------------
+        # ---- index plane (docs/ARCHITECTURE.md §9/§10) ------------------
         # "flat" (default) scans all N docs — the bit-stability baseline.
         # "ivf" probes the top-`nprobe` clusters and reranks candidates
         # with the exact HSF; `guarantee="exact"` widens probes until the
         # top-k provably equals the flat scan (bit-identical).
+        # "ivf-sharded" partitions the clusters across a device mesh
+        # (`n_shards`, default = the device count): each device reranks
+        # its own cluster subset and only [B, k] candidates merge — the
+        # same guarantees, applied per shard.
         if index not in self.INDEX_KINDS:
             raise ValueError(
                 f"index must be one of {self.INDEX_KINDS}, got {index!r}"
@@ -351,9 +358,11 @@ class QueryEngine:
                 f"guarantee must be one of {self.GUARANTEES}, "
                 f"got {guarantee!r}"
             )
-        if index == "ivf" and (self.alpha < 0 or self.beta < 0):
+        if index != "flat" and (self.alpha < 0 or self.beta < 0):
             # the cluster pruning bound assumes non-negative HSF weights
-            raise ValueError("index='ivf' requires alpha >= 0 and beta >= 0")
+            raise ValueError(
+                f"index={index!r} requires alpha >= 0 and beta >= 0"
+            )
         if nprobe < 1:
             raise ValueError(f"nprobe must be >= 1, got {nprobe}")
         self.index = index
@@ -362,7 +371,7 @@ class QueryEngine:
         self.n_clusters = n_clusters
         self.retrain_drift = float(retrain_drift)
         self.ivf_seed = int(ivf_seed)
-        self.ivf = None  # IVFIndex | None — built/adopted on refresh
+        self.ivf = None  # IVFIndex | ShardedIVFIndex | None (see refresh)
         self._last_index_stats = None
         # "auto" resolves at construction: kernel on real TPU backends,
         # the bit-stable map path elsewhere.  The booleans are kept as
@@ -370,6 +379,31 @@ class QueryEngine:
         self.scoring_path = resolve_scoring_path(
             scoring_path, use_kernel=use_kernel, gemm_batch=gemm_batch
         )
+        if index == "ivf-sharded":
+            if n_shards is not None and n_shards < 1:
+                raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+            # the per-shard local rerank always scores with the
+            # bit-stable map formulation ("auto" coerces; an explicit
+            # gemm/kernel request would silently change numerics, so it
+            # is rejected rather than ignored)
+            if self.scoring_path != "map":
+                if scoring_path == "auto" and not use_kernel \
+                        and not gemm_batch:
+                    self.scoring_path = "map"
+                else:
+                    raise ValueError(
+                        "index='ivf-sharded' reranks with the bit-stable "
+                        "map formulation; scoring_path must be 'map' or "
+                        f"'auto', got {self.scoring_path!r}"
+                    )
+            self.n_shards = int(n_shards) if n_shards is not None \
+                else max(1, jax.device_count())
+        else:
+            if n_shards is not None:
+                raise ValueError(
+                    "n_shards is only meaningful with index='ivf-sharded'"
+                )
+            self.n_shards = None
         self.use_kernel = self.scoring_path == "kernel"
         self.gemm_batch = self.scoring_path == "gemm"
         self.cache_size = cache_size
@@ -424,8 +458,8 @@ class QueryEngine:
             changed_ids = changed
             old_row_of = self._row_of  # pre-delta layout (for ivf remap)
             self._apply_delta(changed, stats)
-        if self.index == "ivf" and (self.ivf is None
-                                    or changed_ids is not None):
+        if self.index != "flat" and (self.ivf is None
+                                     or changed_ids is not None):
             self._sync_ivf(changed_ids, old_row_of, stats)
         self._synced = target
         stats.n_docs = len(self.doc_ids)
@@ -555,6 +589,21 @@ class QueryEngine:
         refresh before a durable publish — serving/snapshot.py).
         """
         from repro.index.ivf import IVFIndex, ids_digest
+        from repro.index.sharded import ShardedIVFIndex
+
+        sharded = self.index == "ivf-sharded"
+
+        def _train():
+            if sharded:
+                return ShardedIVFIndex.train(
+                    self.doc_vecs, np.asarray(self.doc_sigs),
+                    n_clusters=self.n_clusters, seed=self.ivf_seed,
+                    n_shards=self.n_shards,
+                )
+            return IVFIndex.train(
+                self.doc_vecs, np.asarray(self.doc_sigs),
+                n_clusters=self.n_clusters, seed=self.ivf_seed,
+            )
 
         n = len(self.doc_ids)
         if n == 0:
@@ -568,13 +617,19 @@ class QueryEngine:
                 # the key covers doc ids AND content hashes: a stale
                 # state (doc rewritten in place with no live index
                 # maintenance) must never adopt — its sig_union/radius
-                # could underestimate a cluster and break exactness
-                self.ivf = IVFIndex.from_state(st)  # bit-identical adopt
+                # could underestimate a cluster and break exactness.
+                # Both kinds persist kind="ivf": a sharded engine adopts
+                # flat-written state (deriving its deterministic
+                # partition) and vice versa — bit-identical, no retrain
+                if sharded:
+                    self.ivf = ShardedIVFIndex.from_state(
+                        st, self.doc_vecs, self.doc_sigs,
+                        n_shards=self.n_shards,
+                    )
+                else:
+                    self.ivf = IVFIndex.from_state(st)
                 return
-            self.ivf = IVFIndex.train(
-                self.doc_vecs, np.asarray(self.doc_sigs),
-                n_clusters=self.n_clusters, seed=self.ivf_seed,
-            )
+            self.ivf = _train()
             stats.index_retrained = True
             self._write_index_state()
             return
@@ -595,22 +650,30 @@ class QueryEngine:
             stats.index_reassigned = int(np.sum(carried < 0))
         elif changed_ids:
             # O(U) path: gather only the dirty rows on device before the
-            # host transfer — never a full [N, ·] device→host copy
+            # host transfer — never a full [N, ·] device→host copy.
+            # The sharded plane additionally routes each dirty row to
+            # its owning shard's resident block (index/sharded.py), so
+            # it takes the live doc arrays for cross-shard regathers
             rows = np.array([self._row_of[i] for i in changed_ids], np.int32)
             rows_j = jnp.asarray(rows)
-            self.ivf = self.ivf.reassign(
-                rows,
-                np.asarray(jnp.take(self.doc_vecs, rows_j, axis=0)),
-                np.asarray(jnp.take(self.doc_sigs, rows_j, axis=0)),
-            )
+            row_vecs = np.asarray(jnp.take(self.doc_vecs, rows_j, axis=0))
+            row_sigs = np.asarray(jnp.take(self.doc_sigs, rows_j, axis=0))
+            if sharded:
+                # reweighted => the refresh rebuilt every doc vector
+                # (idf moved), so the resident blocks regather in full;
+                # otherwise only the dirty rows patch (O(U))
+                self.ivf = self.ivf.reassign(
+                    rows, row_vecs, row_sigs,
+                    self.doc_vecs, self.doc_sigs,
+                    reweighted=stats.reweighted,
+                )
+            else:
+                self.ivf = self.ivf.reassign(rows, row_vecs, row_sigs)
             stats.index_reassigned = len(rows)
         else:
             return  # metadata-only mutation: index untouched
         if self.ivf.needs_retrain(self.retrain_drift):
-            self.ivf = IVFIndex.train(
-                self.doc_vecs, np.asarray(self.doc_sigs),
-                n_clusters=self.n_clusters, seed=self.ivf_seed,
-            )
+            self.ivf = _train()
             stats.index_retrained = True
         self._write_index_state()
 
@@ -641,6 +704,9 @@ class QueryEngine:
             "clusters_probed": s.clusters_probed if s else None,
             "candidate_rows": s.candidate_rows if s else None,
             "rounds": s.rounds if s else None,
+            # distribution terms (None unless the sharded plane served)
+            "n_shards": getattr(s, "n_shards", None) if s else None,
+            "merge_seconds": getattr(s, "merge_seconds", None) if s else None,
         }
 
     # ---- query-vector cache --------------------------------------------
@@ -698,7 +764,7 @@ class QueryEngine:
         pairs = [self._query_arrays(t) for t in texts]
         qv, qs = pack_query_arrays(pairs, self.kb.dim, self.kb.sig_words)
         n = len(self.doc_ids)
-        if self.index == "ivf" and self.ivf is not None:
+        if self.index != "flat" and self.ivf is not None:
             vals, idx, cos, ind, self._last_index_stats = self.ivf.search(
                 self.doc_vecs, self.doc_sigs, qv, qs,
                 b=b, k=min(k, n), nprobe=self.nprobe,

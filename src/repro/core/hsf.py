@@ -22,6 +22,36 @@ DEFAULT_ALPHA = 1.0
 DEFAULT_BETA = 1.0
 
 
+def stable_rowdot(mat: jnp.ndarray, vec: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic [n, D] · [D] matvec — float32 [n].
+
+    XLA's ``dot`` leaves the reduction order unspecified: the compiled
+    schedule varies with operand height, gather fusion, and thread
+    partitioning, so the *same row* can round to different last ulps
+    between a flat [N, D] scan and a gathered candidate block — which
+    silently breaks every bit-identity contract in this repo (flat vs
+    IVF rerank, flat vs the sharded mesh plane, snapshot pins).  This
+    formulation pins the order instead of hoping: elementwise products,
+    then an explicit pairwise-halving tree over the feature axis
+    (zero-padded to a power of two; padding with +0.0 is exact).
+    Separate HLO adds are not reassociated by XLA, so each row's dot is
+    a pure function of that row's values — independent of how many rows
+    ride along, which device scores them, or where they were gathered
+    from.  Every "map"-path cosine (engine, IVF rerank, sharded shard
+    blocks) routes through here; that shared formulation *is* the
+    exactness guarantee.
+    """
+    p = mat.astype(jnp.float32) * vec.astype(jnp.float32)[None, :]
+    d = p.shape[-1]
+    width = 1 << max(0, d - 1).bit_length() if d > 1 else 1
+    if width != d:
+        p = jnp.pad(p, ((0, 0), (0, width - d)))
+    while width > 1:
+        width //= 2
+        p = p[:, :width] + p[:, width:]
+    return p[:, 0]
+
+
 def containment(doc_sigs: jnp.ndarray, query_sig: jnp.ndarray) -> jnp.ndarray:
     """Bloom containment indicator, float32 [n_docs].
 
@@ -41,8 +71,12 @@ def hsf_scores(
     alpha: float = DEFAULT_ALPHA,
     beta: float = DEFAULT_BETA,
 ) -> jnp.ndarray:
-    """Reference HSF: α·(docs @ q) + β·containment.  float32 [n]."""
-    cos = doc_vecs.astype(jnp.float32) @ query_vec.astype(jnp.float32)
+    """Reference HSF: α·(docs @ q) + β·containment.  float32 [n].
+
+    The cosine rides the pinned-order ``stable_rowdot`` so this
+    reference is bit-identical to the engine's map path row for row.
+    """
+    cos = stable_rowdot(doc_vecs, query_vec)
     return alpha * cos + beta * containment(doc_sigs, query_sig)
 
 

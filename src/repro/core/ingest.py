@@ -517,13 +517,23 @@ class KnowledgeBase:
         }
         if include_centroids:
             segs["ivf_centroids"] = st["centroids"]
+        if st.get("shard_of_cluster") is not None:
+            # sharded plane (index/sharded.py): the cluster→shard
+            # ownership map rides as one more tiny segment so a reload
+            # adopts the exact same partition — small like the
+            # assignment array, so it journals with every index delta
+            segs["ivf_shard_of_cluster"] = np.asarray(
+                st["shard_of_cluster"], np.int32)
         return segs
 
     def _index_meta(self) -> dict:
         st = self.index_state
-        return {k: st[k] for k in
+        meta = {k: st[k] for k in
                 ("kind", "drift", "trained_n", "seed", "ids_sha",
                  "centroid_sha")}
+        if st.get("n_shards") is not None:
+            meta["n_shards"] = int(st["n_shards"])
+        return meta
 
     @staticmethod
     def _index_state_from(segs: dict, imeta: dict | None,
@@ -541,7 +551,7 @@ class KnowledgeBase:
             centroids = prev["centroids"]
         else:
             return None
-        return {
+        state = {
             "kind": imeta.get("kind", "ivf"),
             "centroids": centroids,
             "sig_union": segs["ivf_sig_union"],
@@ -553,6 +563,14 @@ class KnowledgeBase:
             "ids_sha": imeta["ids_sha"],
             "centroid_sha": imeta.get("centroid_sha"),
         }
+        if (imeta.get("n_shards") is not None
+                and "ivf_shard_of_cluster" in segs):
+            # the sharded plane's ownership map (absent from states
+            # written by a flat-ivf engine — the sharded engine then
+            # derives its deterministic partition on adoption)
+            state["n_shards"] = int(imeta["n_shards"])
+            state["shard_of_cluster"] = segs["ivf_shard_of_cluster"]
+        return state
 
     # ---- container round-trip ------------------------------------------
 

@@ -15,17 +15,31 @@ the top-k is provably stable (see ivf.py for the bound).
 - ``ivf.py``     — cluster assignment, probe/rerank search, incremental
   maintenance off the engine's dirty-row log, and the container
   (de)serialization the persistence plane journals.
+- ``sharded.py`` — the cluster plane partitioned across a device mesh
+  (``shard_map``): each device owns a disjoint cluster subset and
+  reranks it locally; only per-device [B, k] top-k candidates cross
+  the interconnect for a stable merge, with the same exactness bound
+  applied per shard (docs/ARCHITECTURE.md §10).
 
-Consumed by ``QueryEngine(index="ivf")`` (core/engine.py); frozen
-per-generation by the serving snapshots (serving/snapshot.py).
+Consumed by ``QueryEngine(index="ivf" | "ivf-sharded")``
+(core/engine.py); frozen per-generation by the serving snapshots
+(serving/snapshot.py).
 """
 from repro.index.kmeans import default_n_clusters, spherical_kmeans
 from repro.index.ivf import IVFIndex, IVFSearchStats, score_candidate_rows
+from repro.index.sharded import (
+    ShardedIVFIndex,
+    ShardedIVFSearchStats,
+    partition_clusters,
+)
 
 __all__ = [
     "IVFIndex",
     "IVFSearchStats",
+    "ShardedIVFIndex",
+    "ShardedIVFSearchStats",
     "default_n_clusters",
+    "partition_clusters",
     "score_candidate_rows",
     "spherical_kmeans",
 ]

@@ -64,6 +64,40 @@ from repro.index.kmeans import spherical_kmeans
 _UB_EPS = 1e-6
 
 
+def exact_cos_upper_bound(a: np.ndarray, radius: np.ndarray) -> np.ndarray:
+    """Spherical-cap cosine bound ``cos(max(0, θ_q − θ_c))`` per
+    (query, cluster), in float64 with the over-probe cushions.
+
+    ``a`` [b, kc] are clipped query·centroid cosines; ``radius`` [kc] is
+    the stored min member·centroid dot.  The stored radius is an f32
+    dot; its rounding error is amplified by the cap's curvature near
+    rb → 1 (d cap/d rb ~ 1/√(1−rb²)), so cushion rb by 1e-4 — widening
+    the cap can only over-probe, never exclude a true top-k doc.  Shared
+    by the flat IVF search and the per-shard bound of the sharded plane
+    (index/sharded.py) — one bound, one proof.
+    """
+    rb = np.clip(radius.astype(np.float64) - 1e-4, -1.0, 1.0)[None, :]
+    cap = a * rb + np.sqrt(np.maximum(1 - a * a, 0.0)) \
+        * np.sqrt(np.maximum(1 - rb * rb, 0.0))
+    return np.where(a >= rb, 1.0, cap) + _UB_EPS
+
+
+def interleave_probe_order(boosted_rank: np.ndarray,
+                           a: np.ndarray) -> np.ndarray:
+    """Per-query cluster probe order [b, kc]: the boost-aware ranking
+    interleaved with pure centroid cosine (see ``IVFIndex.search`` for
+    why both are needed), duplicates dropped at first occurrence."""
+    b, kc = boosted_rank.shape
+    order = np.empty((b, kc), np.int64)
+    o_boost = np.argsort(-boosted_rank, axis=1, kind="stable")
+    o_cos = np.argsort(-a, axis=1, kind="stable")
+    for i in range(b):
+        merged = np.ravel(np.column_stack((o_boost[i], o_cos[i])))
+        _, first = np.unique(merged, return_index=True)
+        order[i] = merged[np.sort(first)]
+    return order
+
+
 def ids_digest(keys) -> str:
     """Digest of the corpus layout the index state was computed against.
 
@@ -320,15 +354,7 @@ class IVFIndex:
             == qsig[:, None, :], axis=2,
         )                                                   # [b, kc] bool
         if guarantee == "exact":
-            # the stored radius is an f32 dot; its rounding error is
-            # amplified by the cap's curvature near rb → 1 (d cap/d rb ~
-            # 1/√(1−rb²)), so cushion rb by 1e-4 — widening the cap can
-            # only over-probe, never exclude a true top-k doc
-            rb = np.clip(self.radius.astype(np.float64) - 1e-4,
-                         -1.0, 1.0)[None, :]
-            cap = a * rb + np.sqrt(np.maximum(1 - a * a, 0.0)) \
-                * np.sqrt(np.maximum(1 - rb * rb, 0.0))
-            cos_ub = np.where(a >= rb, 1.0, cap) + _UB_EPS
+            cos_ub = exact_cos_upper_bound(a, self.radius)
             ub = alpha * cos_ub + beta * contain            # score bound
             boosted_rank = ub
         else:
@@ -341,13 +367,7 @@ class IVFIndex:
         # fire broadly — rank-by-boost alone would drown the semantic
         # neighborhoods a topical query needs).  With β = 0 the two
         # rankings coincide.
-        order = np.empty((b, kc), np.int64)
-        o_boost = np.argsort(-boosted_rank, axis=1, kind="stable")
-        o_cos = np.argsort(-a, axis=1, kind="stable")
-        for i in range(b):
-            merged = np.ravel(np.column_stack((o_boost[i], o_cos[i])))
-            _, first = np.unique(merged, return_index=True)
-            order[i] = merged[np.sort(first)]
+        order = interleave_probe_order(boosted_rank, a)
 
         # initial probe width: nprobe, widened until each query's own
         # probed clusters cover ≥ kk docs (so top-k is always full)

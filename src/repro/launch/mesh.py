@@ -30,6 +30,25 @@ def make_host_mesh(model_parallel: int = 1):
     )
 
 
+def make_shard_mesh(n_shards: int):
+    """1-D ("shards",) mesh over the first ``n_shards`` devices — the
+    retrieval index plane's distribution axis (index/sharded.py): each
+    device owns a disjoint cluster subset and reranks it locally.
+
+    Returns None when n_shards == 1 (nothing to distribute) or the host
+    can't field that many devices — callers fall back to a logical
+    per-shard loop on the default device with identical numerics.
+    """
+    if n_shards <= 1:
+        return None
+    import numpy as np
+
+    devices = jax.devices()
+    if len(devices) < n_shards:
+        return None
+    return jax.sharding.Mesh(np.array(devices[:n_shards]), ("shards",))
+
+
 def dp_axes(mesh) -> tuple[str, ...]:
     """Data-parallel axes: pod (if present) + data."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -48,15 +48,22 @@ def main(argv=None):
                     help="auto = kernel on TPU, bit-stable map elsewhere")
     ap.add_argument("--use-kernel", action="store_true",
                     help="legacy alias for --scoring-path kernel")
-    ap.add_argument("--index", default="flat", choices=["flat", "ivf"],
+    ap.add_argument("--index", default="flat",
+                    choices=["flat", "ivf", "ivf-sharded"],
                     help="flat = full scan; ivf = clustered probe/rerank "
-                    "(sublinear, exact HSF within the probed set)")
+                    "(sublinear, exact HSF within the probed set); "
+                    "ivf-sharded = the cluster plane partitioned across "
+                    "the device mesh (--shards)")
     ap.add_argument("--nprobe", type=int, default=8,
                     help="clusters probed per query (index=ivf)")
     ap.add_argument("--guarantee", default="probe",
                     choices=["probe", "exact"],
                     help="exact = widen probes until top-k provably "
                     "matches the flat scan (index=ivf)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="cluster shards for index=ivf-sharded (default: "
+                    "the jax device count; falls back to a logical "
+                    "per-shard loop when devices are fewer)")
     args = ap.parse_args(argv)
 
     if args.container:
@@ -80,6 +87,8 @@ def main(argv=None):
         index=args.index,
         nprobe=args.nprobe,
         guarantee=args.guarantee,
+        **({"n_shards": args.shards}
+           if args.index == "ivf-sharded" and args.shards else {}),
     )
     arch = get_arch(args.arch)
     cfg = arch.smoke_config  # CPU host: reduced generator
@@ -89,8 +98,13 @@ def main(argv=None):
     with runtime:
         # scope the throughput clock to serving, not model init
         runtime.metrics.reset()
+        shard_note = ""
+        if args.index == "ivf-sharded" and runtime.engine.ivf is not None:
+            ivf = runtime.engine.ivf
+            shard_note = (f", shards: {ivf.n_shards} "
+                          f"{'mesh' if ivf.mesh is not None else 'logical'}")
         print(f"serving generation {runtime.generation} "
-              f"(scoring path: {runtime.engine.scoring_path}, "
+              f"(scoring path: {runtime.engine.scoring_path}{shard_note}, "
               f"flush ≤ {args.flush_deadline_ms:.1f} ms, "
               f"batch ≤ {args.max_batch})")
         t0 = time.perf_counter()

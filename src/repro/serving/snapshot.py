@@ -61,10 +61,14 @@ class EngineSnapshot:
     scoring_path: str
     kernel_operands: tuple | None  # block-aligned pad, precomputed
     max_batch: int
-    # index plane pin: the engine's IVFIndex is immutable after build
-    # (maintenance *rebinds* engine.ivf, same as the arrays), so the
-    # capture is one reference — readers serve the clustered index of
-    # generation g lock-free while the writer retrains/reassigns g+1
+    # index plane pin: the engine's IVFIndex / ShardedIVFIndex is
+    # immutable after build (maintenance *rebinds* engine.ivf, same as
+    # the arrays), so the capture is one reference — readers serve the
+    # clustered index of generation g lock-free while the writer
+    # retrains/reassigns g+1.  For the sharded plane that one reference
+    # pins the whole replica set: every per-device resident block of
+    # generation g rides the same publish protocol, so a reader's merge
+    # never mixes shard blocks from two generations
     index_kind: str = "flat"
     ivf: object | None = None
     nprobe: int = 8
@@ -128,7 +132,7 @@ class EngineSnapshot:
         ]
         qv, qs = pack_query_arrays(pairs, self.vectorizer.dim, self.sig_words)
         n = len(self.doc_ids)
-        if self.index_kind == "ivf" and self.ivf is not None:
+        if self.index_kind != "flat" and self.ivf is not None:
             vals, idx, cos, ind, _ = self.ivf.search(
                 self.doc_vecs, self.doc_sigs, qv, qs,
                 b=len(texts), k=min(k, n), nprobe=self.nprobe,

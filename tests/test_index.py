@@ -13,6 +13,8 @@ from repro.index import IVFIndex, spherical_kmeans
 from repro.index.ivf import score_candidate_rows
 from repro.index.kmeans import default_n_clusters
 
+from conftest import assert_bit_identical
+
 
 def _kb(n_docs=80, dim=1024, n_entities=6, seed=0):
     docs, entities = make_corpus(n_docs=n_docs, n_entities=n_entities,
@@ -23,11 +25,8 @@ def _kb(n_docs=80, dim=1024, n_entities=6, seed=0):
     return kb, entities
 
 
-def _rows(results):
-    return [
-        [(r.doc_id, r.score, r.cosine, r.boosted) for r in res]
-        for res in results
-    ]
+def _scores(results):
+    return [[r.score for r in res] for res in results]
 
 
 # --------------------------------------------------------------------------
@@ -96,8 +95,9 @@ def test_ivf_exact_bit_identical_to_flat_sweep(n_docs, beta):
                + ["quarterly forecast", "unrelated text", ""])
     for b in (1, 3, 8):  # batch sizes (padding buckets 1/4/8)
         batch = (queries * 3)[:b]
-        assert _rows(flat.query_batch(batch, k=5)) == \
-            _rows(ivf.query_batch(batch, k=5)), (n_docs, beta, b)
+        assert_bit_identical(flat.query_batch(batch, k=5),
+                             ivf.query_batch(batch, k=5),
+                             label=f"n_docs={n_docs} beta={beta} b={b}")
 
 
 def test_ivf_exact_with_duplicate_ties():
@@ -112,10 +112,9 @@ def test_ivf_exact_with_duplicate_ties():
     flat = QueryEngine(kb, scoring_path="map")
     ivf = QueryEngine(kb, scoring_path="map", index="ivf",
                       guarantee="exact", nprobe=1)
-    got = _rows(ivf.query_batch(["INV-7777"], k=6))
-    want = _rows(flat.query_batch(["INV-7777"], k=6))
-    assert got == want
-    assert len({s for _, s, _, _ in got[0]}) == 1  # genuinely tied
+    got = ivf.query_batch(["INV-7777"], k=6)
+    assert_bit_identical(flat.query_batch(["INV-7777"], k=6), got)
+    assert len(set(_scores(got)[0])) == 1  # genuinely tied
 
 
 def test_ivf_probe_mode_recall_and_sublinear_scan():
@@ -159,8 +158,8 @@ def test_ivf_tracks_mutations_and_stays_exact():
     assert len(ivf.ivf.assign) == kb.n_docs
 
     queries = ["ZZ-1111", "YY-2222"] + list(entities)[:3]
-    assert _rows(flat.query_batch(queries, k=4)) == \
-        _rows(ivf.query_batch(queries, k=4))
+    assert_bit_identical(flat.query_batch(queries, k=4),
+                         ivf.query_batch(queries, k=4))
 
 
 def test_ivf_drift_counter_triggers_retrain():
@@ -229,8 +228,8 @@ def test_stale_index_state_is_not_adopted_after_inplace_rewrite(monkeypatch):
                         guarantee="exact")
     assert calls == [1]  # stale state rejected → retrained
     flat = QueryEngine(kb, scoring_path="map")
-    assert _rows(fresh.query_batch(["PJ-3131"], k=4)) == \
-        _rows(flat.query_batch(["PJ-3131"], k=4))
+    assert_bit_identical(fresh.query_batch(["PJ-3131"], k=4),
+                         flat.query_batch(["PJ-3131"], k=4))
 
 
 # --------------------------------------------------------------------------

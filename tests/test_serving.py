@@ -19,9 +19,10 @@ from repro.serving import (
     ServingMetrics,
     ServingRuntime,
     SnapshotManager,
-    results_equal,
 )
 from repro.serving.metrics import LatencyHistogram
+
+from conftest import assert_bit_identical
 
 
 def _kb(n_docs=40, dim=256, n_entities=6, seed=0):
@@ -49,7 +50,8 @@ def test_scheduled_results_match_direct_engine():
         for q, k, fut in futs:
             served = fut.result(timeout=60)
             want = engine.query_batch([q], k=k)[0]
-            assert results_equal(served.results, want), (q, k)
+            assert_bit_identical([served.results], [want],
+                                 label=f"{q!r} k={k}")
             assert served.generation == runtime.generation
 
 
@@ -59,9 +61,7 @@ def test_runtime_query_batch_blocking_facade():
     queries = list(entities)[:4]
     with ServingRuntime(kb, max_batch=4) as runtime:
         got = runtime.query_batch(queries, k=2)
-    want = engine.query_batch(queries, k=2)
-    for g, w in zip(got, want):
-        assert results_equal(g, w)
+    assert_bit_identical(got, engine.query_batch(queries, k=2))
 
 
 def test_scheduler_coalesces_duplicate_queries():
@@ -80,7 +80,7 @@ def test_scheduler_coalesces_duplicate_queries():
     assert m["batch_occupancy_mean"] == 7.0
     assert m["scored_queries"] == 2  # 7 requests, 2 distinct queries
     for d in done[:6]:
-        assert results_equal(d.results, done[0].results)
+        assert_bit_identical([d.results], [done[0].results])
 
 
 def test_scheduler_backpressure_rejects_when_full():
@@ -125,8 +125,7 @@ def test_snapshot_pins_generation_across_mutations():
 
     # the pinned snapshot still serves generation g bit-identically …
     again = snap0.query_batch([code, "TORN-1111"], k=3)
-    for a, b in zip(before, again):
-        assert results_equal(a, b)
+    assert_bit_identical(before, again)
     assert all(r.doc_id != "torn_doc" for r in again[1])
     # … while the published one sees the new generation
     top = snap1.query_batch(["TORN-1111"], k=1)[0][0]
@@ -147,8 +146,7 @@ def test_snapshot_matches_engine_frozen_at_same_generation():
     for i in range(5):  # shift idf hard after the pin
         kb.add_text(f"noise_{i}", f"noise document {i} about filler query")
     got = snap.query_batch(queries, k=4)
-    for g, w in zip(got, want):
-        assert results_equal(g, w)
+    assert_bit_identical(got, want)
 
 
 def test_publish_is_noop_without_mutations():
@@ -177,16 +175,14 @@ def test_snapshot_pins_frozen_ivf_index_per_generation():
     assert snap1.ivf is manager.engine.ivf  # the live reference moved on
 
     again = snap0.query_batch([code, "PINNED-9090"], k=3)
-    for a, b in zip(before, again):
-        assert results_equal(a, b)  # g's index still serves g's results
+    assert_bit_identical(before, again)  # g's index still serves g's results
     assert all(r.doc_id != "pinned_doc" for r in again[1])
     top = snap1.query_batch(["PINNED-9090"], k=1)[0][0]
     assert top.doc_id == "pinned_doc" and top.boosted
     # the pinned snapshots match a flat engine frozen at each generation
     flat_now = QueryEngine(kb, scoring_path="map")
-    for g, w in zip(snap1.query_batch([code], k=3),
-                    flat_now.query_batch([code], k=3)):
-        assert results_equal(g, w)
+    assert_bit_identical(snap1.query_batch([code], k=3),
+                         flat_now.query_batch([code], k=3))
 
 
 # --------------------------------------------------------------------------
@@ -279,7 +275,7 @@ def test_runtime_cache_hit_serves_same_generation_results():
         first = runtime.submit(code, k=3).result(timeout=60)
         second = runtime.submit(code, k=3).result(timeout=60)
         assert second.cached and not first.cached
-        assert results_equal(first.results, second.results)
+        assert_bit_identical([first.results], [second.results])
         assert second.generation == first.generation
 
         # a publish invalidates naturally: new generation → fresh miss
@@ -466,7 +462,7 @@ def test_concurrent_serving_with_live_sync_is_torn_read_free(tmp_path):
     }
     for q, k, res in served:
         want = references[res.generation].query_batch([q], k=k)[0]
-        assert results_equal(res.results, want), (
-            f"torn read: {q!r}@k={k} diverged from the engine at pinned "
+        assert_bit_identical([res.results], [want], label=(
+            f"torn read: {q!r}@k={k} vs the engine at pinned "
             f"generation {res.generation}"
-        )
+        ))

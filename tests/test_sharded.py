@@ -9,12 +9,16 @@ import textwrap
 import pytest
 
 SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+TESTS = os.path.abspath(os.path.dirname(__file__))
 
 
 def run_with_devices(code: str, n_devices: int = 8) -> str:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
-    env["PYTHONPATH"] = SRC
+    # tests dir too, so subprocess snippets can use conftest helpers
+    # (assert_bit_identical) for the same comparisons the in-process
+    # suites make
+    env["PYTHONPATH"] = SRC + os.pathsep + TESTS
     out = subprocess.run(
         [sys.executable, "-c", textwrap.dedent(code)],
         env=env, capture_output=True, text=True, timeout=600,
@@ -43,8 +47,8 @@ def test_sharded_retrieval_equals_single_device():
         ps_d = jax.device_put(ps, NamedSharding(mesh, P(("data","model"), None)))
         vals, ids = jax.jit(ret)(pv_d, ps_d, jnp.asarray(qv), jnp.asarray(qs))
         rv, ri = retrieval.single_device_reference(pv, ps, qv, qs, nd, 7)
-        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ri))
-        np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), rtol=1e-6)
+        from conftest import assert_bit_identical
+        assert_bit_identical((vals, ids), (rv, ri), score_rtol=1e-6)
         print("OK")
     """)
 
@@ -73,9 +77,9 @@ def test_sharded_retrieval_kernel_path_equals_single_device():
         ps_d = jax.device_put(ps, NamedSharding(mesh, P(("data","model"), None)))
         vals, ids = jax.jit(ret)(pv_d, ps_d, jnp.asarray(qv), jnp.asarray(qs))
         rv, ri = retrieval.single_device_reference(pv, ps, qv, qs, nd, 7)
-        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ri))
-        np.testing.assert_allclose(np.asarray(vals), np.asarray(rv),
-                                   rtol=1e-5, atol=1e-6)
+        from conftest import assert_bit_identical
+        assert_bit_identical((vals, ids), (rv, ri),
+                             score_rtol=1e-5, score_atol=1e-6)
         print("OK")
     """)
 
