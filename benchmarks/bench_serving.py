@@ -31,6 +31,7 @@ import argparse
 import threading
 import time
 
+from repro.analysis import sanitizers
 from repro.core.ingest import KnowledgeBase
 from repro.data.corpus import make_corpus
 from repro.serving import RequestRejected, ServingRuntime
@@ -70,6 +71,10 @@ def _warm(runtime: ServingRuntime, queries: list[str]) -> None:
         while b <= runtime.scheduler.max_batch:
             runtime.query_batch(queries[:b], k=K)
             b *= 2
+        if sanitizers.enabled():
+            # RAGDB_SANITIZERS=1: baseline the jit caches — any
+            # steady-state recompile now fails the run loudly
+            runtime.arm_sanitizers(k=K)
         runtime.metrics.reset()
 
 

@@ -1,0 +1,61 @@
+"""Zero-dependency invariant analyzer + runtime sanitizers
+(docs/ARCHITECTURE.md §11).
+
+Six PRs of hard invariants back the paper's claims — pinned-order
+``stable_rowdot`` for every map-path cosine, the ``KnowledgeBase``
+single-writer lock, fsync-then-rename commits, immutable
+generation-pinned snapshots, power-of-two jit buckets.  Until now they
+were enforced only by tests and reviewer memory; PR 6 showed how easily
+one slips (XLA reduction-order drift broke cross-plane bit-identity).
+This package encodes them as machine-checked contracts:
+
+- **Static rules** (pure ``ast``, no new dependencies — the analyzer
+  obeys the same zero-dependency thesis it guards):
+
+  =====================  ==================================================
+  ``unpinned-reduction``  raw ``@``/``dot``/``einsum`` over the feature
+                          axis in scoring modules must route through
+                          ``hsf.stable_rowdot`` (R1)
+  ``writer-lock``         public ``KnowledgeBase`` mutators must hold the
+                          ``_single_writer`` guard (R2)
+  ``durability``          container/journal publishes must go through the
+                          fsync-then-rename helpers, never bare
+                          ``open(.., "w")`` + rename (R3)
+  ``snapshot-mutation``   ``EngineSnapshot`` is written only at
+                          construction — frozen dataclass, no attribute
+                          stores, no ``object.__setattr__`` (R4)
+  ``host-sync``           no ``.item()``/``float()``/``np.asarray``/
+                          ``jax.device_get`` inside jitted scoring
+                          functions (R5)
+  =====================  ==================================================
+
+  Intentional exceptions carry an inline, reviewable pragma::
+
+      # analysis: allow[unpinned-reduction] -- opt-in gemm path, ...
+
+  ``python -m repro.analysis --strict`` is the CI gate: exit 0 only when
+  the tree is clean and every pragma carries a justification.
+
+- **Runtime sanitizers** (``sanitizers.py``, opt-in via
+  ``RAGDB_SANITIZERS=1``): a NaN/Inf guard on every scoring path's
+  host-boundary output and a retrace guard asserting zero steady-state
+  jit recompiles in the serving loop after warmup.
+
+Import note: this ``__init__`` stays dependency-free and cheap — hot
+modules (core/engine.py) import ``repro.analysis.sanitizers`` at module
+load, so nothing here may pull in jax or the analyzer runner.  The CLI
+(``__main__``) imports the runner lazily.
+"""
+from __future__ import annotations
+
+__all__ = ["run_analysis", "RULES", "Finding"]
+
+
+def __getattr__(name):
+    # lazy re-exports: keep `import repro.analysis.sanitizers` from
+    # paying for the ast runner (and vice versa)
+    if name in __all__:
+        from repro.analysis import runner
+
+        return getattr(runner, name)
+    raise AttributeError(name)

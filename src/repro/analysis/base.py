@@ -1,0 +1,132 @@
+"""Shared analyzer machinery: findings, the rule interface, AST helpers.
+
+Everything here is pure stdlib (``ast`` + ``fnmatch``) — the analyzer
+must be importable and runnable on the barest edge install, matching
+the paper's zero-dependency thesis.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from fnmatch import fnmatch
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str      # package-relative, e.g. "core/engine.py"
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+class Rule:
+    """One invariant checker.
+
+    Subclasses set ``id`` (the pragma-facing kebab-case name), ``title``
+    and ``rationale`` (the §11 docs table is generated from these), and
+    ``scope`` — fnmatch patterns over package-relative paths.  ``check``
+    returns raw findings; the runner applies pragma suppression.
+    """
+
+    id: str = ""
+    title: str = ""
+    rationale: str = ""
+    scope: tuple[str, ...] = ("*",)
+
+    def applies_to(self, relpath: str) -> bool:
+        return any(fnmatch(relpath, pat) for pat in self.scope)
+
+    def check(self, tree: ast.Module, relpath: str) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, relpath: str, node: ast.AST, message: str) -> Finding:
+        return Finding(
+            rule=self.id,
+            path=relpath,
+            line=getattr(node, "lineno", 0),
+            col=getattr(node, "col_offset", 0),
+            message=message,
+        )
+
+
+# --------------------------------------------------------------------------
+# AST helpers
+# --------------------------------------------------------------------------
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``jnp.dot`` / ``jax.lax.top_k`` → their dotted string, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted_name(node.func)
+
+
+def is_self_attr(node: ast.AST, attrs: set[str] | None = None) -> str | None:
+    """``self.<attr>`` → attr (optionally restricted to ``attrs``)."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        if attrs is None or node.attr in attrs:
+            return node.attr
+    return None
+
+
+def decorator_names(fn: ast.FunctionDef) -> list[str]:
+    """Dotted names of a function's decorators; for ``Call`` decorators
+    (``@partial(jax.jit, ...)``) both the callee and — when the callee
+    is ``partial`` — the first argument's dotted name are reported, so
+    jit detection sees through the ``functools.partial`` idiom."""
+    names: list[str] = []
+    for dec in fn.decorator_list:
+        if isinstance(dec, ast.Call):
+            callee = dotted_name(dec.func)
+            if callee is not None:
+                names.append(callee)
+            if callee in ("partial", "functools.partial") and dec.args:
+                inner = dotted_name(dec.args[0])
+                if inner is not None:
+                    names.append(inner)
+        else:
+            name = dotted_name(dec)
+            if name is not None:
+                names.append(name)
+    return names
+
+
+JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+
+
+def is_jitted(fn: ast.FunctionDef) -> bool:
+    return any(n in JIT_NAMES for n in decorator_names(fn))
+
+
+def assigned_jit_targets(tree: ast.Module) -> set[str]:
+    """Function names wrapped by a module-level ``x = jax.jit(fn, ...)``
+    — the non-decorator jit idiom (index/sharded.py)."""
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and call_name(node) in JIT_NAMES:
+            if node.args and isinstance(node.args[0], ast.Name):
+                out.add(node.args[0].id)
+    return out
+
+
+def walk_functions(tree: ast.Module):
+    """Yield every FunctionDef/AsyncFunctionDef (including nested)."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

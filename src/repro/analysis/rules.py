@@ -1,0 +1,494 @@
+"""The invariant rules (R1–R5).  See docs/ARCHITECTURE.md §11 for the
+rationale table; each rule's ``rationale`` string is the one-line form.
+
+Every rule is a conservative *syntactic* checker: it flags the pattern
+wherever it appears in scope and relies on the pragma grammar
+(pragmas.py) to make intentional exceptions explicit and justified.
+False positives are cheap (one reviewed pragma line); false negatives
+are the expensive failure mode — PR 6's reduction-order drift survived
+two review passes before a parity test caught it.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.base import (
+    Finding,
+    Rule,
+    assigned_jit_targets,
+    call_name,
+    decorator_names,
+    dotted_name,
+    is_jitted,
+    is_self_attr,
+    walk_functions,
+)
+
+# --------------------------------------------------------------------------
+# R1 — pinned-reduction discipline in scoring modules
+# --------------------------------------------------------------------------
+
+_REDUCTION_FNS = {"dot", "matmul", "einsum", "inner", "tensordot", "vdot"}
+_NUMERIC_MODULES = {"jnp", "np", "numpy", "jax.numpy"}
+_LAX_REDUCTIONS = {"jax.lax.dot", "jax.lax.dot_general",
+                   "lax.dot", "lax.dot_general"}
+
+
+class PinnedReductionRule(Rule):
+    """R1: every cosine on a bit-identity path routes through
+    ``hsf.stable_rowdot``."""
+
+    id = "unpinned-reduction"
+    title = "Pinned-order reductions in scoring modules"
+    rationale = (
+        "XLA leaves dot-product reduction order unspecified, so a raw "
+        "`@`/`dot`/`einsum` over the feature axis can round differently "
+        "between the flat scan, a gathered IVF block, and a shard — "
+        "silently breaking every bit-identity contract.  Scoring-module "
+        "reductions must route through hsf.stable_rowdot (the explicit "
+        "pairwise-halving tree) or carry a pragma stating why the path "
+        "is intentionally unpinned (e.g. the opt-in gemm/kernel paths)."
+    )
+    scope = (
+        "core/hsf.py",
+        "core/engine.py",
+        "core/retrieval.py",
+        "index/*.py",
+    )
+    # the pinned formulation itself (and clones of it in fixtures) is
+    # the one place elementwise-multiply trees may live
+    exempt_functions = ("stable_rowdot",)
+
+    def check(self, tree: ast.Module, relpath: str) -> list[Finding]:
+        exempt_spans: list[tuple[int, int]] = [
+            (fn.lineno, fn.end_lineno or fn.lineno)
+            for fn in walk_functions(tree)
+            if fn.name in self.exempt_functions
+        ]
+
+        def exempt(node: ast.AST) -> bool:
+            line = getattr(node, "lineno", 0)
+            return any(a <= line <= b for a, b in exempt_spans)
+
+        out: list[Finding] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+                if not exempt(node):
+                    out.append(self.finding(
+                        relpath, node,
+                        "raw `@` matmul in a scoring module — route the "
+                        "cosine through hsf.stable_rowdot or justify the "
+                        "unpinned reduction with a pragma",
+                    ))
+            elif isinstance(node, ast.Call):
+                name = call_name(node)
+                if name is None or exempt(node):
+                    continue
+                mod, _, fn = name.rpartition(".")
+                if ((mod in _NUMERIC_MODULES and fn in _REDUCTION_FNS)
+                        or name in _LAX_REDUCTIONS):
+                    out.append(self.finding(
+                        relpath, node,
+                        f"unpinned reduction `{name}` in a scoring module "
+                        "— route through hsf.stable_rowdot or justify "
+                        "with a pragma",
+                    ))
+        return out
+
+
+# --------------------------------------------------------------------------
+# R2 — single-writer lock discipline on KnowledgeBase mutators
+# --------------------------------------------------------------------------
+
+# authoritative writer state: doc regions, the change log, the df/idf
+# statistics (via vectorizer), the index state, and the persistence
+# chain.  Derived caches (_matrix/_dirty/_postings/...) are excluded:
+# they are rebuilt idempotently and guarded by the same contract.
+_WRITER_ATTRS = {
+    "records", "texts", "term_counts", "signatures", "vectorizer",
+    "index_state", "loaded_generation",
+    "_version", "_changed_at", "_removed_at", "_meta_changed_at",
+    "_index_rev", "_index_persisted_rev", "_index_persisted_centroid_sha",
+    "_persisted_version", "_persisted_ids", "_persisted_path", "_base_uid",
+}
+_MUTATING_METHODS = {
+    "pop", "clear", "update", "setdefault", "add", "discard", "remove",
+    "append", "extend", "add_doc", "remove_doc", "popitem",
+}
+_GUARD_NAME = "_single_writer"
+
+
+def _method_mutates_directly(fn: ast.FunctionDef) -> list[str]:
+    """Attr names of authoritative state this method writes directly."""
+    hits: list[str] = []
+    for node in ast.walk(fn):
+        targets: list[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        for t in targets:
+            # self.attr = ... / self.attr[...] = ... / self.vectorizer.df = ...
+            probe = t
+            if isinstance(probe, ast.Subscript):
+                probe = probe.value
+            if isinstance(probe, ast.Attribute) and is_self_attr(probe.value):
+                probe = probe.value  # nested: self.vectorizer.df
+            attr = is_self_attr(probe, _WRITER_ATTRS)
+            if attr is not None:
+                hits.append(attr)
+        if isinstance(node, ast.Call):
+            # self.<state>.pop(...) / self.vectorizer.add_doc(...)
+            f = node.func
+            if (isinstance(f, ast.Attribute)
+                    and f.attr in _MUTATING_METHODS
+                    and is_self_attr(f.value, _WRITER_ATTRS) is not None):
+                hits.append(f.value.attr)  # type: ignore[union-attr]
+    return hits
+
+
+def _has_writer_guard(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                expr = item.context_expr
+                if (isinstance(expr, ast.Call)
+                        and isinstance(expr.func, ast.Attribute)
+                        and expr.func.attr == _GUARD_NAME
+                        and isinstance(expr.func.value, ast.Name)
+                        and expr.func.value.id == "self"):
+                    return True
+    return False
+
+
+class WriterLockRule(Rule):
+    """R2: public mutators of a single-writer class hold the guard."""
+
+    id = "writer-lock"
+    title = "Single-writer lock discipline"
+    rationale = (
+        "KnowledgeBase is not a concurrent structure: a second writer "
+        "silently corrupts df counts and change-log ordering, which the "
+        "serving snapshots then pin forever.  Every public method that "
+        "mutates authoritative state (doc regions, change log, df, "
+        "index state, persistence chain) must run under the "
+        "non-blocking `_single_writer` guard; internal `_*` helpers are "
+        "called under it by their public wrappers."
+    )
+    scope = ("core/ingest.py",)
+
+    def check(self, tree: ast.Module, relpath: str) -> list[Finding]:
+        out: list[Finding] = []
+        for cls in ast.walk(tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            members = {n.name for n in cls.body
+                       if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+            fields = {t.target.id for t in cls.body
+                      if isinstance(t, ast.AnnAssign)
+                      and isinstance(t.target, ast.Name)}
+            if _GUARD_NAME not in members and "_write_lock" not in fields:
+                continue  # not a single-writer class
+            methods = {n.name: n for n in cls.body
+                       if isinstance(n, ast.FunctionDef)}
+            # transitive closure: a method mutates if it writes state or
+            # calls a sibling method that does
+            mutates: dict[str, list[str]] = {
+                name: _method_mutates_directly(fn)
+                for name, fn in methods.items()
+            }
+            changed = True
+            while changed:
+                changed = False
+                for name, fn in methods.items():
+                    for node in ast.walk(fn):
+                        if (isinstance(node, ast.Call)
+                                and isinstance(node.func, ast.Attribute)
+                                and isinstance(node.func.value, ast.Name)
+                                and node.func.value.id == "self"
+                                and node.func.attr in methods
+                                and mutates[node.func.attr]
+                                and not mutates[name]):
+                            mutates[name] = [f"{node.func.attr}()"]
+                            changed = True
+            for name, fn in methods.items():
+                if name.startswith("_") or not mutates[name]:
+                    continue  # internal helper / read-only method
+                if any("staticmethod" in d for d in decorator_names(fn)):
+                    continue  # no self: constructs a fresh instance
+                if not _has_writer_guard(fn):
+                    what = ", ".join(sorted(set(mutates[name]))[:4])
+                    out.append(self.finding(
+                        relpath, fn,
+                        f"public method `{cls.name}.{name}` mutates writer "
+                        f"state ({what}) without `with "
+                        f"self.{_GUARD_NAME}(...)`",
+                    ))
+        return out
+
+
+# --------------------------------------------------------------------------
+# R3 — durability discipline for container/journal publishes
+# --------------------------------------------------------------------------
+
+_WRITE_MODE_CHARS = set("wax+")
+# The fsync-then-rename commit protocol lives in exactly these
+# functions; new publish sites must either call them or be added here
+# with a review of their crash-safety story.
+_DURABILITY_HELPERS = {
+    "_atomic_write_json",    # fsync'd JSON + atomic rename + dir fsync
+    "write_container",       # fsync'd container image + atomic rename
+    "append_journal_record", # truncate-to-commit, append, fsync, manifest
+    "reset_journal",         # unlink-only (journal fold)
+    "publish_sharded",       # content-addressed rename before manifest commit
+    "_gc_shard_files",       # unlink-only (post-publish collection)
+}
+
+
+def _open_mode(node: ast.Call) -> str | None:
+    """The mode literal of an ``open``/``os.fdopen`` call, if constant."""
+    mode: ast.AST | None = None
+    if len(node.args) >= 2:
+        mode = node.args[1]
+    for kw in node.keywords:
+        if kw.arg == "mode":
+            mode = kw.value
+    if mode is None:
+        return "r"  # default mode: read-only
+    if isinstance(mode, ast.Constant) and isinstance(mode.value, str):
+        return mode.value
+    return None  # dynamic — conservatively unknown
+
+
+class DurabilityRule(Rule):
+    """R3: artifact publishes go through the fsync-then-rename helpers."""
+
+    id = "durability"
+    title = "Durability discipline for file publishes"
+    rationale = (
+        "Crash-safe persistence hangs on one protocol: write to a temp "
+        "file, fsync, atomic-rename, fsync the directory "
+        "(core/container.py).  A bare `open(.., 'w')` or `os.rename` "
+        "publish can surface a torn or vanishing artifact after power "
+        "loss — every write/rename in a persistence module must live "
+        "inside one of the audited durability helpers."
+    )
+    scope = (
+        "core/container.py",
+        "core/ingest.py",
+        "checkpoint/*.py",
+        "serving/*.py",
+        "index/*.py",
+    )
+
+    def check(self, tree: ast.Module, relpath: str) -> list[Finding]:
+        helper_spans = [
+            (fn.lineno, fn.end_lineno or fn.lineno)
+            for fn in walk_functions(tree)
+            if fn.name in _DURABILITY_HELPERS
+        ]
+
+        def inside_helper(node: ast.AST) -> bool:
+            line = getattr(node, "lineno", 0)
+            return any(a <= line <= b for a, b in helper_spans)
+
+        out: list[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name == "os.rename":
+                # flagged even inside helpers: the blessed primitive is
+                # os.replace (clobbering atomic rename) — os.rename has
+                # platform-dependent failure on existing targets
+                out.append(self.finding(
+                    relpath, node,
+                    "`os.rename` is never the publish primitive — use "
+                    "the fsync-then-`os.replace` helpers "
+                    "(core/container.py)",
+                ))
+            elif name == "os.replace" and not inside_helper(node):
+                out.append(self.finding(
+                    relpath, node,
+                    "bare `os.replace` outside the durability helpers — "
+                    "a rename-commit without fsync is not power-loss "
+                    "durable; route through _atomic_write_json/"
+                    "write_container or justify with a pragma",
+                ))
+            elif name in ("open", "os.fdopen") and not inside_helper(node):
+                mode = _open_mode(node)
+                if mode is None or _WRITE_MODE_CHARS & set(mode):
+                    out.append(self.finding(
+                        relpath, node,
+                        f"writable `{name}(..., {mode!r})` outside the "
+                        "durability helpers — artifact writes must use "
+                        "the fsync-then-rename protocol or justify with "
+                        "a pragma",
+                    ))
+        return out
+
+
+# --------------------------------------------------------------------------
+# R4 — snapshot immutability
+# --------------------------------------------------------------------------
+
+_SNAPSHOT_CLASSES = {"EngineSnapshot"}
+
+
+def _is_frozen_dataclass(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        if (isinstance(dec, ast.Call)
+                and dotted_name(dec.func) in ("dataclass", "dataclasses.dataclass")):
+            for kw in dec.keywords:
+                if (kw.arg == "frozen"
+                        and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    return True
+    return False
+
+
+def _snapshot_sources(node: ast.AST) -> bool:
+    """Expressions that yield a published snapshot: the class
+    constructor, ``EngineSnapshot.capture(...)``, a ``.current``
+    property read, or the manager's ``self._current``."""
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        if name in _SNAPSHOT_CLASSES:
+            return True
+        if name is not None:
+            head, _, tail = name.rpartition(".")
+            if tail == "capture" and head.rpartition(".")[2] in _SNAPSHOT_CLASSES:
+                return True
+    if isinstance(node, ast.Attribute) and node.attr in ("current", "_current"):
+        return True
+    return False
+
+
+class SnapshotMutationRule(Rule):
+    """R4: ``EngineSnapshot`` attributes are assigned only in
+    construction."""
+
+    id = "snapshot-mutation"
+    title = "Snapshot immutability"
+    rationale = (
+        "Readers serve published EngineSnapshots lock-free; the torn-"
+        "read guarantee is exactly that a snapshot's attributes never "
+        "change after capture.  The class must stay a frozen dataclass, "
+        "and no code may assign attributes on a captured snapshot or "
+        "bypass freezing via `object.__setattr__`."
+    )
+    scope = ("*",)
+
+    def check(self, tree: ast.Module, relpath: str) -> list[Finding]:
+        out: list[Finding] = []
+        for cls in ast.walk(tree):
+            if (isinstance(cls, ast.ClassDef)
+                    and cls.name in _SNAPSHOT_CLASSES
+                    and not _is_frozen_dataclass(cls)):
+                out.append(self.finding(
+                    relpath, cls,
+                    f"`{cls.name}` must be declared "
+                    "`@dataclass(frozen=True)` — snapshots are the "
+                    "lock-free read plane",
+                ))
+        for fn in walk_functions(tree):
+            tainted: set[str] = set()
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    if _snapshot_sources(node.value):
+                        for t in node.targets:
+                            if isinstance(t, ast.Name):
+                                tainted.add(t.id)
+                    for t in node.targets:
+                        if (isinstance(t, ast.Attribute)
+                                and (( isinstance(t.value, ast.Name)
+                                       and t.value.id in tainted)
+                                     or _snapshot_sources(t.value))):
+                            out.append(self.finding(
+                                relpath, t,
+                                "attribute store on a captured "
+                                "EngineSnapshot — snapshots are "
+                                "immutable after construction; build a "
+                                "new snapshot and swap the reference",
+                            ))
+                elif (isinstance(node, ast.Call)
+                        and call_name(node) == "object.__setattr__"):
+                    out.append(self.finding(
+                        relpath, node,
+                        "`object.__setattr__` bypasses frozen-dataclass "
+                        "immutability — construct new state instead, or "
+                        "justify with a pragma",
+                    ))
+        return out
+
+
+# --------------------------------------------------------------------------
+# R5 — no host synchronization inside jitted scoring functions
+# --------------------------------------------------------------------------
+
+_HOST_SYNC_CALLS = {
+    "jax.device_get", "np.asarray", "numpy.asarray", "np.array",
+    "numpy.array",
+}
+_HOST_SYNC_BUILTINS = {"float", "int", "bool"}
+
+
+class HostSyncRule(Rule):
+    """R5: jitted scoring functions never force a device round-trip."""
+
+    id = "host-sync"
+    title = "Hot-path host-sync hygiene"
+    rationale = (
+        "A `.item()`, `float()`, `np.asarray` or `jax.device_get` "
+        "inside a jitted function either fails tracing or (via "
+        "callbacks / implicit conversion at trace boundaries) forces a "
+        "device→host sync per dispatch — the silent serving-latency "
+        "cliff EdgeRAG warns about.  Host materialization belongs at "
+        "the one audited boundary (score_batch_arrays' return)."
+    )
+    scope = ("core/*.py", "index/*.py", "serving/*.py", "kernels/*")
+
+    def check(self, tree: ast.Module, relpath: str) -> list[Finding]:
+        jit_assigned = assigned_jit_targets(tree)
+        out: list[Finding] = []
+        for fn in walk_functions(tree):
+            if not (is_jitted(fn) or fn.name in jit_assigned):
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = call_name(node)
+                if (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "item"
+                        and not node.args):
+                    out.append(self.finding(
+                        relpath, node,
+                        f"`.item()` inside jitted `{fn.name}` — host "
+                        "sync per dispatch",
+                    ))
+                elif name in _HOST_SYNC_CALLS:
+                    out.append(self.finding(
+                        relpath, node,
+                        f"`{name}` inside jitted `{fn.name}` — host "
+                        "materialization belongs outside the traced "
+                        "function",
+                    ))
+                elif (name in _HOST_SYNC_BUILTINS and node.args
+                        and not isinstance(node.args[0], ast.Constant)):
+                    out.append(self.finding(
+                        relpath, node,
+                        f"`{name}(...)` on a traced value inside jitted "
+                        f"`{fn.name}` — concretization forces a host "
+                        "sync (static-arg coercions: justify with a "
+                        "pragma)",
+                    ))
+        return out
+
+
+RULES: tuple[Rule, ...] = (
+    PinnedReductionRule(),
+    WriterLockRule(),
+    DurabilityRule(),
+    SnapshotMutationRule(),
+    HostSyncRule(),
+)

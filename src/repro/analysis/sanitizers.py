@@ -1,0 +1,182 @@
+"""Opt-in runtime sanitizers: retrace detection + NaN/Inf score guard.
+
+Static rules catch contract violations the AST can see; these catch the
+two failure modes it cannot — a jit recompile sneaking into the steady-
+state serving loop (a latency cliff EdgeRAG measures in seconds on edge
+hardware), and a non-finite score escaping a scoring path (which top-k
+silently absorbs until results are garbage).
+
+Both are disabled by default and cost nothing when off.  Enable with::
+
+    RAGDB_SANITIZERS=1 python -m benchmarks.bench_serving --smoke
+
+or programmatically via :func:`enable`.  A tripped sanitizer raises
+:class:`SanitizerError` (an ``AssertionError`` subclass, so test
+harnesses that catch assertion failures see it naturally).
+
+This module is stdlib-only and imports neither jax nor numpy — hot
+modules import it at load time; it duck-types on the objects handed to
+it (``_cache_size`` for jitted callables, elementwise comparison for
+score arrays).
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+ENV_FLAG = "RAGDB_SANITIZERS"
+
+_TRUTHY = {"1", "true", "yes", "on"}
+
+_enabled: bool | None = None  # None → read ENV_FLAG lazily
+_lock = threading.Lock()
+
+
+class SanitizerError(AssertionError):
+    """A runtime invariant the sanitizers guard was violated."""
+
+
+def enabled() -> bool:
+    if _enabled is not None:
+        return _enabled
+    return os.environ.get(ENV_FLAG, "").strip().lower() in _TRUTHY
+
+
+def enable(on: bool = True) -> None:
+    """Programmatic override of the env flag (tests, bench harness)."""
+    global _enabled
+    _enabled = on
+
+
+# --------------------------------------------------------------------------
+# NaN/Inf score guard
+# --------------------------------------------------------------------------
+
+def check_finite_scores(vals, n_rows: int, where: str) -> None:
+    """Raise if any selected top-k score in the first ``n_rows`` rows is
+    NaN or ±Inf.
+
+    ``vals`` is the host-side (row, k) score array at the one audited
+    device→host boundary (``engine.results_from_topk``).  Rows beyond
+    ``n_rows`` are bucket padding and legitimately hold -inf sentinels;
+    selected scores of real rows must be finite — probe widening
+    guarantees every returned slot holds a real candidate.
+    """
+    if not enabled():
+        return
+    head = vals[:n_rows]
+    # duck-typed finiteness: x != x catches NaN; the comparisons catch
+    # ±inf without importing numpy here
+    bad = (head != head) | (head == float("inf")) | (head == float("-inf"))
+    if bool(bad.any()):
+        raise SanitizerError(
+            f"non-finite score escaped the scoring path at {where}: "
+            f"{int(bad.sum())} of {head.size} selected scores are "
+            "NaN/Inf — upstream vectors or masks are corrupt"
+        )
+
+
+# --------------------------------------------------------------------------
+# Retrace guard
+# --------------------------------------------------------------------------
+
+# name → jitted callable.  Modules register their steady-state jitted
+# entry points at import; kmeans training fns are deliberately absent
+# (retrains legitimately trace new shapes).
+_registry: dict[str, object] = {}
+
+
+def register_jit(name: str, fn) -> None:
+    """Register a jitted callable for retrace accounting.  Idempotent
+    per name; costs one dict slot when sanitizers are off."""
+    _registry[name] = fn
+
+
+def jit_cache_sizes() -> dict[str, int]:
+    """Current compiled-variant count per registered jit function.
+
+    Uses the ``_cache_size()`` introspection hook on jitted callables;
+    functions not exposing it (API drift, plain-function stubs in
+    tests) are skipped rather than failing the guard.
+    """
+    out: dict[str, int] = {}
+    for name, fn in _registry.items():
+        probe = getattr(fn, "_cache_size", None)
+        if probe is None:
+            continue
+        try:
+            out[name] = int(probe())
+        except Exception:
+            continue
+    return out
+
+
+class RetraceGuard:
+    """Asserts zero steady-state recompiles after an explicit warmup.
+
+    Protocol (wired through ``ServingRuntime``):
+
+    1. warm every power-of-two batch bucket the serving loop can emit;
+    2. :meth:`arm` — baseline the per-function jit cache sizes;
+    3. the scheduler calls :meth:`check` after each flush — any cache
+       growth means a shape/dtype escaped the bucket discipline and
+       recompiled on the hot path;
+    4. a snapshot publish calls :meth:`reset` (new corpus generation
+       may legitimately trace new padded shapes); the caller re-arms
+       after re-warming.
+
+    After a trip the baseline is rebased to the current sizes, so one
+    regression raises once instead of failing every later batch.
+    """
+
+    def __init__(self) -> None:
+        self._baseline: dict[str, int] | None = None
+        self._lock = threading.Lock()
+
+    @property
+    def armed(self) -> bool:
+        return self._baseline is not None
+
+    def arm(self) -> None:
+        with self._lock:
+            self._baseline = jit_cache_sizes()
+
+    def reset(self) -> None:
+        with self._lock:
+            self._baseline = None
+
+    def report(self) -> dict[str, int]:
+        """Cache growth per function since arming (empty when clean)."""
+        with self._lock:
+            if self._baseline is None:
+                return {}
+            now = jit_cache_sizes()
+            return {
+                name: size - self._baseline.get(name, 0)
+                for name, size in now.items()
+                if size > self._baseline.get(name, 0)
+            }
+
+    def check(self, where: str) -> None:
+        if not enabled():
+            return
+        with self._lock:
+            if self._baseline is None:
+                return
+            now = jit_cache_sizes()
+            grew = {
+                name: (self._baseline.get(name, 0), size)
+                for name, size in now.items()
+                if size > self._baseline.get(name, 0)
+            }
+            if grew:
+                self._baseline = now  # rebase: report each regression once
+        if grew:
+            detail = ", ".join(
+                f"{name}: {a}→{b}" for name, (a, b) in sorted(grew.items())
+            )
+            raise SanitizerError(
+                f"steady-state jit recompile at {where}: {detail} — a "
+                "shape or dtype escaped the power-of-two bucket "
+                "discipline (warm every bucket before arming)"
+            )

@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizers
 from repro.core import hsf, signature as sigmod
 from repro.core.ingest import KnowledgeBase
 from repro.core.tokenizer import normalize
@@ -122,6 +123,8 @@ def _score_topk(doc_vecs, doc_sigs, q_vecs, q_sigs, n_valid,
     """
     dv = doc_vecs.astype(jnp.float32)
     if gemm:
+        # analysis: allow[unpinned-reduction] -- opt-in gemm branch
+        #   (scoring_path="gemm"), documented non-bit-stable
         cos = q_vecs.astype(jnp.float32) @ dv.T
     else:
         cos = jax.lax.map(lambda q: hsf.stable_rowdot(dv, q), q_vecs)
@@ -139,6 +142,9 @@ def _selected_cos_ind(doc_vecs, doc_sigs, q_vecs, q_sigs, idx):
     """Per-result cosine + exact containment for selected docs only —
     O(B·k·D) instead of the O(B·N·D) full recompute."""
     sel_vecs = jnp.take(doc_vecs, idx, axis=0).astype(jnp.float32)  # [B,k,D]
+    # analysis: allow[unpinned-reduction] -- pallas-path per-result
+    #   diagnostics only; ranking comes from the kernel scores, and the
+    #   kernel path is already documented non-bit-stable vs map
     cos = jnp.einsum("bkd,bd->bk", sel_vecs, q_vecs.astype(jnp.float32))
     sel_sigs = jnp.take(doc_sigs, idx, axis=0)                      # [B,k,W]
     qs = q_sigs[:, None, :]
@@ -169,6 +175,11 @@ def _score_topk_pallas(doc_vecs, doc_sigs, q_vecs, q_sigs, n_valid,
     )
     cos, ind = _selected_cos_ind(doc_vecs, doc_sigs, q_vecs, q_sigs, idx)
     return vals, idx, cos, ind
+
+
+# steady-state retrace accounting (no-op unless RAGDB_SANITIZERS is on)
+sanitizers.register_jit("engine._score_topk", _score_topk)
+sanitizers.register_jit("engine._score_topk_pallas", _score_topk_pallas)
 
 
 def _bucket(b: int) -> int:
@@ -262,7 +273,14 @@ def results_from_topk(
     """Materialize RetrievalResult rows for the first ``b`` queries of a
     padded batch (the ``boosted`` flag is the exact containment
     indicator returned by the scoring path, never inferred from
-    score − α·cos)."""
+    score − α·cos).
+
+    This is the one audited device→host boundary every scoring path
+    funnels through (flat scan, IVF rerank, sharded merge, scheduler),
+    so the opt-in NaN/Inf sanitizer hooks here: only the first ``b``
+    rows are checked — rows beyond are bucket padding and legitimately
+    hold -inf sentinels."""
+    sanitizers.check_finite_scores(vals, b, "engine.results_from_topk")
     out = []
     for i in range(b):
         row = []

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizers
+
 DEFAULT_ALPHA = 1.0
 DEFAULT_BETA = 1.0
 
@@ -90,10 +92,17 @@ def hsf_scores_batched(
     beta: float = DEFAULT_BETA,
 ) -> jnp.ndarray:
     """Multi-query HSF (serving batch): float32 [q, n]."""
+    # analysis: allow[unpinned-reduction] -- opt-in batched gemm path,
+    #   documented non-bit-stable vs the map path (ARCHITECTURE §5)
     cos = query_vecs.astype(jnp.float32) @ doc_vecs.astype(jnp.float32).T
     hits = (doc_sigs[None, :, :] & query_sigs[:, None, :]) == query_sigs[:, None, :]
     ind = jnp.all(hits, axis=-1).astype(jnp.float32)
     return alpha * cos + beta * ind
+
+
+# steady-state retrace accounting (no-op unless RAGDB_SANITIZERS is on)
+sanitizers.register_jit("hsf.hsf_scores", hsf_scores)
+sanitizers.register_jit("hsf.hsf_scores_batched", hsf_scores_batched)
 
 
 def hsf_scores_kernel(
@@ -152,6 +161,8 @@ def top_k(scores: jnp.ndarray, k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
 
 def numpy_reference(doc_vecs, doc_sigs, query_vec, query_sig, alpha, beta):
     """Pure-numpy oracle for tests (no jax involvement at all)."""
+    # analysis: allow[unpinned-reduction] -- float64 test oracle; extra
+    #   mantissa absorbs reduction-order error, tests allow an eps band
     cos = doc_vecs.astype(np.float64) @ query_vec.astype(np.float64)
     d = doc_sigs.view(np.uint32)
     q = query_sig.view(np.uint32)

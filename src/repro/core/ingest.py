@@ -496,8 +496,9 @@ class KnowledgeBase:
         Bumps the index revision so the next ``save_delta`` journals it
         even when no documents changed (e.g. a first train on an
         already-persisted corpus)."""
-        self.index_state = state
-        self._index_rev += 1
+        with self._single_writer("set_index_state"):
+            self.index_state = state
+            self._index_rev += 1
 
     def _index_aligned(self) -> bool:
         """True when the index state matches the current doc layout
@@ -636,6 +637,12 @@ class KnowledgeBase:
         matrix — it is fully derivable from the stored term counts + df,
         so edge deployments can trade first-query latency for a much
         smaller single file (see RQ3)."""
+        with self._single_writer("save"):
+            return self._save_locked(path, generation=generation,
+                                     include_matrix=include_matrix)
+
+    def _save_locked(self, path: str, generation: int | None = None,
+                     include_matrix: bool = True) -> str:
         matrix, sigs, ids = self.materialize()
         if generation is None:
             generation = self.loaded_generation + 1
@@ -693,7 +700,7 @@ class KnowledgeBase:
         apath = os.path.abspath(path)
         if (self._base_uid is None or self._persisted_path != apath
                 or not os.path.exists(path)):
-            self.save(path)  # cold publish starts (or restarts) the chain
+            self._save_locked(path)  # cold publish (re)starts the chain
             return self.loaded_generation
         changed = sorted(
             p for p, v in self._changed_at.items()
@@ -748,7 +755,7 @@ class KnowledgeBase:
         self._persisted_ids = set(self.records)
         if (compact_ratio is not None
                 and journal_size(path) > compact_ratio * os.path.getsize(path)):
-            self.compact(path)
+            self._compact_locked(path)
         return self.loaded_generation
 
     def compact(self, path: str) -> str:
@@ -761,11 +768,15 @@ class KnowledgeBase:
         already persisted the on-disk state is equivalent, so the
         generation is retained; unpersisted changes fold in and bump it
         (the compact is then also a publish)."""
+        with self._single_writer("compact"):
+            return self._compact_locked(path)
+
+    def _compact_locked(self, path: str) -> str:
         fully_persisted = (self._persisted_version == self._version
                            and self._persisted_ids == set(self.records))
         gen = (self.loaded_generation
                if fully_persisted and self.loaded_generation >= 0 else None)
-        return self.save(path, generation=gen)
+        return self._save_locked(path, generation=gen)
 
     @staticmethod
     def _record_from_meta(d: dict) -> DocRecord:

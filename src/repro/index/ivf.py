@@ -56,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizers
 from repro.core.engine import _bucket, score_batch_arrays
 from repro.index.kmeans import spherical_kmeans
 
@@ -190,6 +191,9 @@ class IVFIndex:
         if assign.size:
             np.bitwise_or.at(sig_union, assign, sigs.astype(np.int32))
             dv = np.asarray(doc_vecs, np.float32)
+            # analysis: allow[unpinned-reduction] -- cluster radius
+            #   bound for pruning; the f64 probe margin absorbs f32
+            #   rounding, and the exact rerank guards correctness
             dots = np.einsum("nd,nd->n", dv, centroids[assign])
             np.minimum.at(radius, assign, dots.astype(np.float32))
         return IVFIndex(
@@ -277,6 +281,8 @@ class IVFIndex:
         if rows.size == 0:
             return self
         sub = np.asarray(row_vecs, np.float32)
+        # analysis: allow[unpinned-reduction] -- incremental reassign
+        #   routing; assignment choice never affects served scores
         sims = sub @ self.centroids.T                       # [U, kc]
         new = np.argmax(sims, axis=1).astype(np.int32)
         dots = sims[np.arange(rows.size), new]
@@ -317,6 +323,8 @@ class IVFIndex:
         fill = np.nonzero(carried < 0)[0]
         if fill.size:
             sub = np.asarray(doc_vecs, np.float32)[fill]
+            # analysis: allow[unpinned-reduction] -- remap routing for
+            #   compacted rows; routing-only, same argument as reassign
             carried[fill] = np.argmax(
                 sub @ self.centroids.T, axis=1
             ).astype(np.int32)
@@ -344,6 +352,8 @@ class IVFIndex:
         sizes = np.array([m.size for m in self.members], np.int64)
 
         # -- probe plane (host, float64 for the exactness bound) ----------
+        # analysis: allow[unpinned-reduction] -- f64 probe bound, clipped
+        #   to [-1,1]; prunes candidates only, exact rerank follows
         a = np.clip(
             qv[:b].astype(np.float64) @ self.centroids.T.astype(np.float64),
             -1.0, 1.0,
@@ -493,6 +503,12 @@ def _gather_rows(doc_vecs, doc_sigs, cand):
     per-op dispatch overhead twice on the per-query hot path)."""
     return (jnp.take(doc_vecs, cand, axis=0),
             jnp.take(doc_sigs, cand, axis=0))
+
+
+# steady-state retrace accounting (no-op unless RAGDB_SANITIZERS is on);
+# kmeans training fns are deliberately unregistered — retrains trace
+# new shapes legitimately
+sanitizers.register_jit("ivf._gather_rows", _gather_rows)
 
 
 def score_candidate_rows(doc_vecs, doc_sigs, cand_rows: np.ndarray,

@@ -48,11 +48,16 @@ def _kmeans_fit(x: jnp.ndarray, init_rows: jnp.ndarray,
     cent = jnp.take(x, init_rows, axis=0)  # [k, D]
 
     def step(cent):
+        # analysis: allow[unpinned-reduction] -- training geometry, not
+        #   served scores: assignments feed routing only, and the exact
+        #   HSF rerank makes results invariant to them
         sims = x @ cent.T                                  # [N, k]
         assign = jnp.argmax(sims, axis=1)
         best = jnp.max(sims, axis=1)                       # [N]
         one_hot = jax.nn.one_hot(assign, n_clusters, dtype=x.dtype)
         counts = one_hot.sum(axis=0)                       # [k]
+        # analysis: allow[unpinned-reduction] -- centroid accumulation
+        #   during training; same routing-only argument as above
         sums = one_hot.T @ x                               # [k, D]
         mean = sums / jnp.maximum(counts, 1.0)[:, None]
         # empty clusters seize the hardest points, one per cluster in
@@ -66,6 +71,8 @@ def _kmeans_fit(x: jnp.ndarray, init_rows: jnp.ndarray,
         return cent / jnp.maximum(norm, 1e-12)             # spherical
 
     cent = jax.lax.fori_loop(0, n_iter, lambda _, c: step(c), cent)
+    # analysis: allow[unpinned-reduction] -- final training assignment;
+    #   routing-only, results invariant under the exact rerank
     assign = jnp.argmax(x @ cent.T, axis=1).astype(jnp.int32)
     return cent, assign
 

@@ -484,6 +484,8 @@ class ShardedIVFIndex:
         sizes = np.array([m.size for m in base.members], np.int64)
 
         # -- global probe plane (host, float64 bound) ---------------------
+        # analysis: allow[unpinned-reduction] -- f64 probe bound, clipped
+        #   to [-1,1]; prunes candidates only, exact rerank follows
         a = np.clip(
             qv[:b].astype(np.float64) @ base.centroids.T.astype(np.float64),
             -1.0, 1.0,

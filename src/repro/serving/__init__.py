@@ -29,6 +29,7 @@ from __future__ import annotations
 
 from concurrent.futures import Future
 
+from repro.analysis import sanitizers
 from repro.core.engine import QueryEngine, RetrievalResult  # noqa: F401
 from repro.core.ingest import KnowledgeBase
 
@@ -85,6 +86,9 @@ class ServingRuntime:
         self.cache = (
             ResultCache(result_cache_size) if result_cache_size else None
         )
+        # always constructed (one dict + a lock); inert until armed, and
+        # check() additionally no-ops unless RAGDB_SANITIZERS is on
+        self.retrace_guard = sanitizers.RetraceGuard()
         self.scheduler = MicroBatchScheduler(
             self.snapshots,
             max_batch=max_batch,
@@ -92,6 +96,7 @@ class ServingRuntime:
             max_queue=max_queue,
             cache=self.cache,
             metrics=self.metrics,
+            retrace_guard=self.retrace_guard,
         )
 
     # ---- lifecycle ------------------------------------------------------
@@ -135,7 +140,35 @@ class ServingRuntime:
         O(U) delta record to the container's journal, so a crash never
         loses a published generation — restart with
         ``KnowledgeBase.load(container_path)`` to resume exactly there."""
-        return self.snapshots.publish(durable=durable).generation
+        gen = self.snapshots.publish(durable=durable).generation
+        # a new generation may legitimately trace new padded shapes
+        # (corpus growth crosses a doc-rows bucket) — disarm the retrace
+        # guard; callers re-arm via arm_sanitizers() once re-warmed
+        self.retrace_guard.reset()
+        return gen
+
+    # ---- runtime sanitizers ----------------------------------------------
+
+    def arm_sanitizers(self, k: int = 5) -> None:
+        """Warm every query-batch jit bucket the serving loop can emit,
+        then baseline the jit caches — after this, any recompile on the
+        flush path raises ``sanitizers.SanitizerError`` on the batch
+        that caused it (when ``RAGDB_SANITIZERS`` is on).
+
+        Warming covers the power-of-two buckets {1, 2, 4, ..,
+        max_batch} at the given ``k`` against the *current* snapshot;
+        this is also the bucket-set pin that keeps steady-state serving
+        recompile-free.  Re-call after every ``publish()`` (which
+        disarms the guard).
+        """
+        snap = self.snapshots.current
+        b = 1
+        while True:
+            snap.query_batch(["warmup bucket probe"] * b, k)
+            if b >= self.scheduler.max_batch:
+                break
+            b *= 2
+        self.retrace_guard.arm()
 
     # ---- introspection ---------------------------------------------------
 

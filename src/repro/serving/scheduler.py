@@ -88,6 +88,7 @@ class MicroBatchScheduler:
         max_queue: int = 1024,
         cache: ResultCache | None = None,
         metrics: ServingMetrics | None = None,
+        retrace_guard=None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -96,6 +97,9 @@ class MicroBatchScheduler:
         self.flush_deadline = flush_deadline
         self.cache = cache
         self.metrics = metrics or ServingMetrics()
+        # opt-in sanitizers.RetraceGuard: checked after every flush so a
+        # steady-state recompile surfaces on the batch that caused it
+        self.retrace_guard = retrace_guard
         self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
         self._thread: threading.Thread | None = None
         self._stopping = threading.Event()
@@ -228,6 +232,11 @@ class MicroBatchScheduler:
                         texts.append(req.text)
                 results = snap.query_batch(texts, k)
                 scored += len(texts)
+                if self.retrace_guard is not None:
+                    # raises SanitizerError on steady-state jit cache
+                    # growth — checked before fan-out so the failure
+                    # lands on the futures of the batch that caused it
+                    self.retrace_guard.check("scheduler._flush")
                 for req in group:
                     res = results[order[normalize(req.text)]]
                     if self.cache is not None:

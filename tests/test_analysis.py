@@ -1,0 +1,488 @@
+"""Invariant-analyzer contracts (analysis/): every rule catches its
+failing fixture and passes its clean one, pragmas suppress exactly what
+they name (and are audited themselves), the CLI exit codes hold, the
+runtime sanitizers catch forced retraces and injected NaNs, and — the
+point of the whole plane — the repo itself is strict-clean, making the
+analyzer a tier-1 gate."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizers
+from repro.analysis.pragmas import parse_pragmas
+from repro.analysis.runner import render_audit, run_analysis
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fixture_tree(tmp_path, files: dict[str, str]) -> str:
+    """Materialize {relpath: source} under tmp_path and return the root
+    (run_analysis treats a dir without src/repro as the package root,
+    so fixture paths like core/hsf.py match the real rule scopes)."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return str(tmp_path)
+
+
+def _findings(tmp_path, files, rule=None, strict=False):
+    report = run_analysis(_fixture_tree(tmp_path, files), strict=strict)
+    assert not report.errors, report.errors
+    if rule is None:
+        return report.findings
+    return [f for f in report.findings if f.rule == rule]
+
+
+@pytest.fixture(autouse=True)
+def _reset_sanitizers():
+    yield
+    sanitizers._enabled = None  # back to env-driven
+
+
+# --------------------------------------------------------------------------
+# R1 unpinned-reduction
+# --------------------------------------------------------------------------
+
+def test_r1_flags_matmul_and_calls(tmp_path):
+    found = _findings(tmp_path, {"core/engine.py": """
+        import jax.numpy as jnp
+        def score(q, dv):
+            a = q @ dv.T
+            b = jnp.dot(q, dv.T)
+            c = jnp.einsum("bd,nd->bn", q, dv)
+            return a + b + c
+    """}, rule="unpinned-reduction")
+    assert len(found) == 3
+    assert {f.line for f in found} == {4, 5, 6}
+
+
+def test_r1_clean_inside_stable_rowdot_and_out_of_scope(tmp_path):
+    found = _findings(tmp_path, {
+        # the pinned reduction itself may use whatever it wants
+        "core/hsf.py": """
+            import jax.numpy as jnp
+            def stable_rowdot(mat, vec):
+                return (mat @ vec).sum()
+        """,
+        # scoring-module scopes only: a model file may matmul freely
+        "models/lm.py": """
+            def fwd(x, w):
+                return x @ w
+        """,
+    }, rule="unpinned-reduction")
+    assert found == []
+
+
+def test_r1_pragma_suppresses_trailing_and_comment_only(tmp_path):
+    found = _findings(tmp_path, {"core/engine.py": """
+        def score(q, dv):
+            a = q @ dv.T  # analysis: allow[unpinned-reduction] -- fixture
+            # analysis: allow[unpinned-reduction] -- spans the whole
+            #   statement, continuation comments included
+            b = (
+                q @ dv.T
+            )
+            return a + b
+    """})
+    assert found == []
+
+
+# --------------------------------------------------------------------------
+# R2 writer-lock
+# --------------------------------------------------------------------------
+
+_R2_CLASS = """
+    import contextlib
+
+    class KnowledgeBase:
+        @contextlib.contextmanager
+        def _single_writer(self, op):
+            yield
+
+        def reader(self):
+            return len(self.records)
+
+        def locked_mutator(self, x):
+            with self._single_writer("ok"):
+                self.records[x] = x
+
+        def _helper(self, x):
+            self.records[x] = x
+"""
+
+
+def test_r2_flags_unlocked_public_mutator(tmp_path):
+    found = _findings(tmp_path, {"core/ingest.py": _R2_CLASS + """
+        def bad(self, x):
+            self.records[x] = x
+"""}, rule="writer-lock")
+    assert [f for f in found if "bad" in f.message]
+    assert not [f for f in found if "reader" in f.message
+                or "locked_mutator" in f.message
+                or "_helper" in f.message]
+
+
+def test_r2_flags_transitive_mutation_via_helper(tmp_path):
+    found = _findings(tmp_path, {"core/ingest.py": _R2_CLASS + """
+        def bad_indirect(self, x):
+            self._helper(x)
+"""}, rule="writer-lock")
+    assert [f for f in found if "bad_indirect" in f.message]
+
+
+def test_r2_ignores_classes_without_the_lock(tmp_path):
+    found = _findings(tmp_path, {"core/ingest.py": """
+        class PlainBag:
+            def put(self, x):
+                self.records = x
+    """}, rule="writer-lock")
+    assert found == []
+
+
+# --------------------------------------------------------------------------
+# R3 durability
+# --------------------------------------------------------------------------
+
+def test_r3_flags_bare_write_rename_and_replace(tmp_path):
+    found = _findings(tmp_path, {"serving/dump.py": """
+        import os
+        def publish(path, blob):
+            with open(path + ".tmp", "w") as fh:
+                fh.write(blob)
+            os.rename(path + ".tmp", path)
+            os.replace(path + ".tmp", path)
+    """}, rule="durability")
+    assert len(found) == 3
+
+
+def test_r3_allows_reads_and_blessed_helpers(tmp_path):
+    found = _findings(tmp_path, {"core/container.py": """
+        import os
+        def _atomic_write_json(path, obj):
+            fd = os.open(path + ".tmp", os.O_WRONLY)
+            with os.fdopen(fd, "w") as fh:
+                fh.write(obj)
+            os.replace(path + ".tmp", path)
+        def load(path):
+            with open(path) as fh:
+                return fh.read()
+    """}, rule="durability")
+    assert found == []
+
+
+def test_r3_pragma_suppressed(tmp_path):
+    found = _findings(tmp_path, {"checkpoint/scratch.py": """
+        def debug_dump(path, blob):
+            with open(path, "w") as fh:  # analysis: allow[durability] -- fixture
+                fh.write(blob)
+    """})
+    assert found == []
+
+
+# --------------------------------------------------------------------------
+# R4 snapshot-mutation
+# --------------------------------------------------------------------------
+
+def test_r4_flags_unfrozen_class_and_mutation(tmp_path):
+    found = _findings(tmp_path, {"serving/snap.py": """
+        from dataclasses import dataclass
+
+        @dataclass
+        class EngineSnapshot:
+            generation: int
+
+        def touch(mgr):
+            snap = EngineSnapshot(generation=0)
+            snap.generation = 1
+            object.__setattr__(snap, "generation", 2)
+    """}, rule="snapshot-mutation")
+    assert len(found) == 3  # unfrozen decl, attr store, __setattr__
+
+
+def test_r4_clean_frozen_capture_and_swap(tmp_path):
+    found = _findings(tmp_path, {"serving/snap.py": """
+        from dataclasses import dataclass
+
+        @dataclass(frozen=True)
+        class EngineSnapshot:
+            generation: int
+
+        class Manager:
+            def publish(self):
+                snap = EngineSnapshot(generation=1)
+                self._current = snap  # swapping the ref is the protocol
+                return self._current
+    """}, rule="snapshot-mutation")
+    assert found == []
+
+
+def test_r4_flags_store_on_manager_current(tmp_path):
+    found = _findings(tmp_path, {"apps/consumer.py": """
+        def poke(mgr):
+            snap = mgr.current
+            snap.doc_ids = ()
+    """}, rule="snapshot-mutation")
+    assert len(found) == 1
+
+
+# --------------------------------------------------------------------------
+# R5 host-sync
+# --------------------------------------------------------------------------
+
+def test_r5_flags_host_syncs_in_jitted_fns_only(tmp_path):
+    found = _findings(tmp_path, {"core/score.py": """
+        import jax, numpy as np
+        from functools import partial
+
+        @jax.jit
+        def bad_item(x):
+            return x.sum().item()
+
+        @partial(jax.jit, static_argnames=("k",))
+        def bad_asarray(x, *, k):
+            return np.asarray(x)[:k]
+
+        def _core(x):
+            return float(x.sum())
+        worse = jax.jit(_core)
+
+        def host_boundary(x):
+            return float(x.sum())  # not jitted: fine
+    """}, rule="host-sync")
+    assert len(found) == 3
+    assert {f.line for f in found} == {7, 11, 14}
+
+
+def test_r5_pragma_suppressed(tmp_path):
+    found = _findings(tmp_path, {"core/score.py": """
+        import jax
+
+        @jax.jit
+        def fn(x):
+            return int(x.shape[0])  # analysis: allow[host-sync] -- static shape
+    """})
+    assert found == []
+
+
+# --------------------------------------------------------------------------
+# pragma hygiene
+# --------------------------------------------------------------------------
+
+def test_unknown_rule_pragma_is_a_finding(tmp_path):
+    found = _findings(tmp_path, {"core/x.py": """
+        x = 1  # analysis: allow[unpinned-reductionz] -- typo
+    """}, rule="pragma")
+    assert len(found) == 1 and "unknown rule" in found[0].message
+
+
+def test_unused_pragma_is_a_finding(tmp_path):
+    found = _findings(tmp_path, {"core/x.py": """
+        x = 1  # analysis: allow[durability] -- nothing here to excuse
+    """}, rule="pragma")
+    assert len(found) == 1 and "unused" in found[0].message
+
+
+def test_strict_requires_justification(tmp_path):
+    files = {"core/engine.py": """
+        def score(q, dv):
+            return q @ dv.T  # analysis: allow[unpinned-reduction]
+    """}
+    assert _findings(tmp_path, files, rule="pragma", strict=False) == []
+    found = _findings(tmp_path, files, rule="pragma", strict=True)
+    assert len(found) == 1 and "justification" in found[0].message
+
+
+def test_pragma_statement_span_stops_at_bracket_close(tmp_path):
+    src = textwrap.dedent("""
+        # analysis: allow[unpinned-reduction] -- first statement only
+        a = (
+            q @ dv.T
+        )
+        b = q @ dv.T
+    """)
+    pragmas = parse_pragmas("core/x.py", src.splitlines())
+    assert len(pragmas) == 1
+    assert (pragmas[0].applies_to, pragmas[0].applies_end) == (3, 5)
+
+
+# --------------------------------------------------------------------------
+# the repo itself is the final fixture: strict-clean, audited
+# --------------------------------------------------------------------------
+
+def test_repo_is_strict_clean():
+    report = run_analysis(REPO_ROOT, strict=True)
+    assert report.ok, "\n" + report.format()
+    # every suppression in the tree carries a justification
+    used = [p for p in report.pragmas if p.used]
+    assert used, "expected the documented suppressions to be present"
+    assert all(p.justification for p in used)
+
+
+def test_checked_in_audit_is_current():
+    report = run_analysis(REPO_ROOT, strict=True)
+    audit_path = os.path.join(REPO_ROOT, "docs", "ANALYSIS_AUDIT.md")
+    with open(audit_path, encoding="utf-8") as fh:
+        assert fh.read() == render_audit(report), (
+            "docs/ANALYSIS_AUDIT.md is stale — regenerate with "
+            "PYTHONPATH=src python -m repro.analysis "
+            "--write-audit docs/ANALYSIS_AUDIT.md"
+        )
+
+
+# --------------------------------------------------------------------------
+# CLI exit-code contract
+# --------------------------------------------------------------------------
+
+def _cli(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=cwd or REPO_ROOT,
+    )
+
+
+def test_cli_exit0_on_clean_repo_strict():
+    proc = _cli("--strict", "--root", REPO_ROOT)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_exit1_on_failing_fixture(tmp_path):
+    root = _fixture_tree(tmp_path, {"core/engine.py": """
+        def score(q, dv):
+            return q @ dv.T
+    """})
+    proc = _cli("--root", root)
+    assert proc.returncode == 1
+    assert "unpinned-reduction" in proc.stdout
+
+
+def test_cli_exit3_on_audit_drift(tmp_path):
+    root = _fixture_tree(tmp_path, {"core/clean.py": "x = 1\n"})
+    stale = tmp_path / "audit.md"
+    stale.write_text("# not the audit\n")
+    proc = _cli("--root", root, "--check-audit", str(stale))
+    assert proc.returncode == 3
+    # and --write-audit repairs it
+    proc = _cli("--root", root, "--write-audit", str(stale))
+    assert proc.returncode == 0
+    proc = _cli("--root", root, "--check-audit", str(stale))
+    assert proc.returncode == 0
+
+
+# --------------------------------------------------------------------------
+# runtime sanitizers: NaN guard
+# --------------------------------------------------------------------------
+
+def test_nan_guard_off_by_default():
+    vals = np.array([[1.0, np.nan]], np.float32)
+    sanitizers.check_finite_scores(vals, 1, "test")  # silently passes
+
+
+def test_nan_guard_catches_injection_and_ignores_padding():
+    sanitizers.enable(True)
+    ok = np.array([[1.0, 0.5], [-np.inf, -np.inf]], np.float32)
+    # row 1 is bucket padding (n_rows=1): -inf sentinels are legitimate
+    sanitizers.check_finite_scores(ok, 1, "test")
+    for poison in (np.nan, np.inf, -np.inf):
+        bad = np.array([[1.0, poison]], np.float32)
+        with pytest.raises(sanitizers.SanitizerError, match="non-finite"):
+            sanitizers.check_finite_scores(bad, 1, "test")
+
+
+def test_nan_guard_fires_through_results_from_topk():
+    from repro.core.engine import results_from_topk
+    sanitizers.enable(True)
+    vals = np.array([[1.0, np.nan]], np.float32)
+    idx = np.array([[0, 1]], np.int32)
+    cos = np.zeros_like(vals)
+    ind = np.zeros_like(vals)
+    with pytest.raises(sanitizers.SanitizerError):
+        results_from_topk(["a", "b"], 1, vals, idx, cos, ind)
+    # same call with the padded row poisoned instead: clean
+    vals2 = np.array([[1.0, 0.5], [np.nan, np.nan]], np.float32)
+    out = results_from_topk(
+        ["a", "b"], 1, vals2, np.array([[0, 1], [0, 0]], np.int32),
+        np.zeros((2, 2), np.float32), np.zeros((2, 2), np.float32),
+    )
+    assert len(out) == 1
+
+
+# --------------------------------------------------------------------------
+# runtime sanitizers: retrace guard
+# --------------------------------------------------------------------------
+
+def test_retrace_guard_detects_forced_retrace():
+    import jax.numpy as jnp
+    import jax
+    sanitizers.enable(True)
+    traced = jax.jit(lambda x: x * 2)
+    sanitizers.register_jit("test.traced_fn", traced)
+    try:
+        traced(jnp.zeros((4,), jnp.float32))  # warm one shape
+        guard = sanitizers.RetraceGuard()
+        guard.arm()
+        guard.check("steady")  # no growth: clean
+        traced(jnp.zeros((8,), jnp.float32))  # forced retrace
+        with pytest.raises(sanitizers.SanitizerError,
+                           match="test.traced_fn"):
+            guard.check("after-retrace")
+        # baseline rebased: one regression raises once
+        guard.check("rebased")
+        assert guard.report() == {}
+    finally:
+        sanitizers._registry.pop("test.traced_fn", None)
+
+
+def test_retrace_guard_disarmed_and_reset_paths():
+    sanitizers.enable(True)
+    guard = sanitizers.RetraceGuard()
+    guard.check("unarmed")  # never raises before arm()
+    guard.arm()
+    assert guard.armed
+    guard.reset()
+    assert not guard.armed
+    guard.check("after-reset")
+
+
+# --------------------------------------------------------------------------
+# steady-state serving loop: zero recompiles across bucket transitions
+# (the satellite regression test — _warm/arm_sanitizers pins the
+# bucket set; any flush size 1..max_batch must reuse compiled shapes)
+# --------------------------------------------------------------------------
+
+def test_serving_steady_state_has_zero_recompiles():
+    from repro.core.ingest import KnowledgeBase
+    from repro.data.corpus import make_corpus
+    from repro.serving import ServingRuntime
+
+    docs, entities = make_corpus(n_docs=24, n_entities=4, seed=3)
+    kb = KnowledgeBase(dim=256)
+    for i, d in enumerate(docs):
+        kb.add_text(f"doc_{i:05d}.txt", d)
+    queries = [f"lookup {e} status report" for e in entities]
+
+    sanitizers.enable(True)
+    rt = ServingRuntime(kb, max_batch=8, flush_deadline=0.001,
+                        result_cache_size=0)
+    with rt:
+        rt.arm_sanitizers(k=3)
+        assert rt.retrace_guard.armed
+        # drive every batch size 1..max_batch through the scheduler —
+        # each flush buckets to a warmed power-of-two shape, so the
+        # armed guard must stay silent
+        for size in range(1, rt.scheduler.max_batch + 1):
+            futs = [rt.submit(queries[j % len(queries)], k=3)
+                    for j in range(size)]
+            for f in futs:
+                f.result(timeout=60)  # raises if the guard tripped
+        assert rt.retrace_guard.report() == {}
+        # publish disarms (new generation may trace new shapes)
+        kb.add_text("doc_new.txt", "fresh content about " + queries[0])
+        rt.publish()
+        assert not rt.retrace_guard.armed
