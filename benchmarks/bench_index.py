@@ -168,6 +168,17 @@ def bench_index(smoke: bool = False):
                 f"no swept nprobe reached 3x at Recall@{K} ≥ 0.95 "
                 f"(best {best[0]:.2f}x at nprobe={best[2]})"
             )
+
+        # ---- index health counters (engine.index_stats) -----------------
+        # probe1 served the recall workload above, so its probe
+        # accounting is populated
+        s = probe1.index_stats()
+        rows.append((
+            f"index_stats_{n_docs}docs", 0.0,
+            f"clusters={s['n_clusters']}_probed={s['probed_fraction']:.3f}"
+            f"_rounds={s['rounds']}_drift={s['drift']}"
+            f"_retrains={s['retrains']}",
+        ))
     return rows
 
 

@@ -34,6 +34,12 @@ import time
 from repro.analysis import sanitizers
 from repro.core.ingest import KnowledgeBase
 from repro.data.corpus import make_corpus
+from repro.obs import (
+    format_breakdown,
+    request_decomposition,
+    trace as obs_trace,
+    write_chrome_trace,
+)
 from repro.serving import RequestRejected, ServingRuntime
 
 # (n_docs, dim, n_requests, n_workers, open-loop arrival rate qps)
@@ -195,7 +201,95 @@ def bench_serving_open(smoke: bool = False):
     return rows
 
 
-ALL = [bench_serving_closed, bench_serving_open]
+TRACE_SAMPLE = 0.25  # the documented production sampling default
+
+
+def bench_serving_traced(smoke: bool = False, trace_path: str | None = None,
+                         sample: float = TRACE_SAMPLE):
+    """The observability overhead + correctness contract, measured:
+
+    1. closed loop untraced vs traced (1-in-4 request sampling, the
+       production default) — the traced arm must keep ≥ 95% of
+       untraced throughput;
+    2. every sampled request's stage spans (queue_wait + flush_wait +
+       score + merge) must tile the request span exactly — the sum is
+       asserted against the end-to-end duration per request;
+    3. optionally exports the Chrome trace-event JSON (``--trace``)
+       and prints the per-stage breakdown table.
+
+    Methodology: one runtime, warmed once, then tightly interleaved
+    off/on run pairs (the arms are seconds apart, so slow host drift
+    cancels) aggregated by the *median* per-pair QPS ratio — host
+    noise on short closed loops is heavy-tailed (transient ±20%
+    stalls), so best-of or mean aggregation would gate on the noise
+    floor, not the overhead.  Workers run at 2x ``max_batch`` so every
+    flush fills without waiting out the deadline (batch-phase jitter
+    is the other big variance source).  More pairs are added (up to
+    15) until the median stabilizes past the gate.
+    """
+    n_docs, dim, n_requests, _, _ = SMOKE if smoke else FULL
+    kb, queries = _build_kb(n_docs, dim)
+    n_requests = max(n_requests, 1000)  # short runs measure only noise
+    max_batch = 16
+
+    rt = _runtime(kb, max_batch=max_batch, deadline_s=0.002)
+    _warm(rt, queries)
+
+    def run_qps() -> float:
+        r = closed_loop(rt, queries, n_requests, 2 * max_batch)
+        return r["throughput_qps"]
+
+    tracer = obs_trace.get()
+    ratios: list[float] = []
+    spans = []
+    median = 0.0
+    try:
+        for round_ in range(3):
+            for _ in range(5):
+                tracer.disable()
+                off = run_qps()
+                tracer.enable(sample=sample)
+                on = run_qps()
+                got = tracer.drain()
+                spans = got or spans
+                tracer.disable()
+                ratios.append(on / off)
+            srt = sorted(ratios)
+            median = srt[len(srt) // 2]
+            if median >= 0.95:
+                break
+    finally:
+        tracer.disable()
+
+    reqs = request_decomposition(spans)
+    assert reqs, "traced run produced no request spans"
+    worst = max(abs(r["request_s"] - r["stage_sum_s"]) for r in reqs)
+    # the four stages share perf_counter timestamps, so they tile the
+    # request exactly up to the ~1 ns span-record quantization
+    assert worst < 1e-6, (
+        f"stage decomposition does not tile request latency: worst "
+        f"residual {worst * 1e6:.3f} us across {len(reqs)} requests"
+    )
+    assert median >= 0.95, (
+        f"tracing overhead exceeds the 5% budget: median traced/untraced "
+        f"qps ratio {median:.3f} over {len(ratios)} interleaved pairs"
+    )
+
+    if trace_path:
+        n = write_chrome_trace(trace_path, spans)
+        print(f"# trace: {n} events -> {trace_path}")
+        print("\n".join("# " + ln
+                        for ln in format_breakdown(spans).splitlines()))
+    return [
+        (f"serving_traced_overhead_{n_docs}docs", 0.0,
+         f"median_qps_ratio={median:.3f}_pairs={len(ratios)}"
+         f"_sample={sample:g}"),
+        (f"serving_trace_decomposition_{n_docs}docs", 0.0,
+         f"requests={len(reqs)}_worst_residual_us={worst * 1e6:.3f}"),
+    ]
+
+
+ALL = [bench_serving_closed, bench_serving_open, bench_serving_traced]
 
 
 def main(argv=None) -> int:
@@ -203,10 +297,21 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny corpus, ~100 requests (CI concurrency "
                     "smoke for the scheduler/snapshot machinery)")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="write the traced run's Chrome trace-event "
+                    "JSON here (Perfetto-loadable; inspect with "
+                    "`python -m repro.obs FILE`)")
+    ap.add_argument("--trace-sample", type=float, default=TRACE_SAMPLE,
+                    help="request sampling rate for the traced arm "
+                    f"(default {TRACE_SAMPLE:g})")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     for fn in ALL:
-        for name, us, derived in fn(smoke=args.smoke):
+        kwargs = {"smoke": args.smoke}
+        if fn is bench_serving_traced:
+            kwargs["trace_path"] = args.trace
+            kwargs["sample"] = args.trace_sample
+        for name, us, derived in fn(**kwargs):
             print(f"{name},{us:.1f},{derived}", flush=True)
     return 0
 

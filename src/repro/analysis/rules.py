@@ -444,7 +444,11 @@ class HostSyncRule(Rule):
         "callbacks / implicit conversion at trace boundaries) forces a "
         "device→host sync per dispatch — the silent serving-latency "
         "cliff EdgeRAG warns about.  Host materialization belongs at "
-        "the one audited boundary (score_batch_arrays' return)."
+        "the one audited boundary (score_batch_arrays' return).  "
+        "`block_until_ready` is flagged *anywhere* in a scoped module, "
+        "jitted or not: it stalls the dispatch pipeline, so every call "
+        "site must carry a pragma stating why the barrier is deliberate "
+        "(e.g. tracing-only span attribution, gated off the hot path)."
     )
     scope = ("core/*.py", "index/*.py", "serving/*.py", "kernels/*")
 
@@ -482,6 +486,27 @@ class HostSyncRule(Rule):
                         "sync (static-arg coercions: justify with a "
                         "pragma)",
                     ))
+        # explicit barriers are audited everywhere in scope, not just
+        # inside jitted bodies — `jax.block_until_ready(x)` and the
+        # `x.block_until_ready()` method both stall the dispatch queue
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            is_barrier = (
+                (name is not None
+                 and name.rpartition(".")[2] == "block_until_ready")
+                or (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "block_until_ready")
+            )
+            if is_barrier:
+                out.append(self.finding(
+                    relpath, node,
+                    "`block_until_ready` in a hot-path module — an "
+                    "explicit device barrier must be a deliberate, "
+                    "pragma-justified boundary (tracing attribution, "
+                    "measurement), never ambient synchronization",
+                ))
         return out
 
 

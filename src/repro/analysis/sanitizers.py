@@ -24,6 +24,8 @@ from __future__ import annotations
 import os
 import threading
 
+from repro.obs.metrics import global_registry
+
 ENV_FLAG = "RAGDB_SANITIZERS"
 
 _TRUTHY = {"1", "true", "yes", "on"}
@@ -34,6 +36,17 @@ _lock = threading.Lock()
 
 class SanitizerError(AssertionError):
     """A runtime invariant the sanitizers guard was violated."""
+
+
+def _count_trip(rule: str, where: str) -> None:
+    """Surface a trip as a first-class metric before the raise — the
+    exception may be swallowed by a request future, but the counter
+    survives in the obs registry for the metrics endpoint."""
+    global_registry().counter(
+        "ragdb_sanitizer_trips_total",
+        "runtime sanitizer violations (finite-score / retrace guards)",
+        rule=rule, where=where,
+    ).inc()
 
 
 def enabled() -> bool:
@@ -69,6 +82,7 @@ def check_finite_scores(vals, n_rows: int, where: str) -> None:
     # ±inf without importing numpy here
     bad = (head != head) | (head == float("inf")) | (head == float("-inf"))
     if bool(bad.any()):
+        _count_trip("finite-scores", where)
         raise SanitizerError(
             f"non-finite score escaped the scoring path at {where}: "
             f"{int(bad.sum())} of {head.size} selected scores are "
@@ -172,6 +186,7 @@ class RetraceGuard:
             if grew:
                 self._baseline = now  # rebase: report each regression once
         if grew:
+            _count_trip("retrace", where)
             detail = ", ".join(
                 f"{name}: {a}→{b}" for name, (a, b) in sorted(grew.items())
             )

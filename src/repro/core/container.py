@@ -62,6 +62,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import global_registry
+
 MAGIC = b"RAGDB1\x00\n"
 
 
@@ -349,20 +352,29 @@ def append_journal_record(
         + hashlib.sha256(payload).digest()
         + payload
     )
-    fd = os.open(journal_path(base_path), os.O_RDWR | os.O_CREAT, 0o644)
-    with os.fdopen(fd, "r+b") as f:
-        f.truncate(committed)
-        f.seek(committed)
-        f.write(frame)
-        f.flush()
-        os.fsync(f.fileno())
+    with obs_trace.span("journal_append", bytes=len(frame),
+                        generation=generation):
+        fd = os.open(journal_path(base_path), os.O_RDWR | os.O_CREAT, 0o644)
+        with os.fdopen(fd, "r+b") as f:
+            f.truncate(committed)
+            f.seek(committed)
+            f.write(frame)
+            f.flush()
+            os.fsync(f.fileno())
     man = {
         "base_uid": base_uid,
         "committed_bytes": committed + len(frame),
         "records": records + 1,
         "generation": generation,
     }
-    _publish_journal_manifest(base_path, man)
+    with obs_trace.span("journal_commit", generation=generation):
+        _publish_journal_manifest(base_path, man)
+    reg = global_registry()
+    reg.counter("ragdb_journal_bytes_total",
+                "delta-record bytes appended (frame incl. header)").inc(
+        len(frame))
+    reg.counter("ragdb_journal_records_total",
+                "delta records appended").inc()
     return {**man, "appended_at": committed}
 
 

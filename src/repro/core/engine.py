@@ -67,6 +67,8 @@ from repro.analysis import sanitizers
 from repro.core import hsf, signature as sigmod
 from repro.core.ingest import KnowledgeBase
 from repro.core.tokenizer import normalize
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import global_registry
 
 
 @dataclass
@@ -249,22 +251,30 @@ def score_batch_arrays(
     is the optional pre-padded (block-aligned) doc operand pair for the
     kernel path.
     """
-    if scoring_path == "kernel":
-        if kernel_operands is None:
-            kernel_operands = hsf.hsf_kernel_pad_docs(doc_vecs, doc_sigs)
-        dv, ds = kernel_operands
-        vals, idx, cos, ind = _score_topk_pallas(
-            dv, ds, jnp.asarray(qv), jnp.asarray(qs), jnp.int32(n_docs),
-            k=k, alpha=alpha, beta=beta,
-        )
-    else:
-        vals, idx, cos, ind = _score_topk(
-            doc_vecs, doc_sigs, jnp.asarray(qv), jnp.asarray(qs),
-            jnp.int32(n_docs),
-            k=k, alpha=alpha, beta=beta, gemm=scoring_path == "gemm",
-        )
-    return (np.asarray(vals), np.asarray(idx),
-            np.asarray(cos), np.asarray(ind))
+    with obs_trace.span("device_dispatch", path=scoring_path,
+                        rows=int(n_docs), k=k):
+        if scoring_path == "kernel":
+            if kernel_operands is None:
+                kernel_operands = hsf.hsf_kernel_pad_docs(doc_vecs, doc_sigs)
+            dv, ds = kernel_operands
+            vals, idx, cos, ind = _score_topk_pallas(
+                dv, ds, jnp.asarray(qv), jnp.asarray(qs), jnp.int32(n_docs),
+                k=k, alpha=alpha, beta=beta,
+            )
+        else:
+            vals, idx, cos, ind = _score_topk(
+                doc_vecs, doc_sigs, jnp.asarray(qv), jnp.asarray(qs),
+                jnp.int32(n_docs),
+                k=k, alpha=alpha, beta=beta, gemm=scoring_path == "gemm",
+            )
+        if obs_trace.enabled():
+            # tracing-only audited sync: without it the async dispatch
+            # returns immediately and all device time would be charged
+            # to the host_transfer span below.  Never runs untraced.
+            jax.block_until_ready(vals)  # analysis: allow[host-sync] -- tracing-only audited boundary attributing device time to the dispatch span; no-op when tracing is off
+    with obs_trace.span("host_transfer", k=k):
+        return (np.asarray(vals), np.asarray(idx),
+                np.asarray(cos), np.asarray(ind))
 
 
 def results_from_topk(
@@ -281,6 +291,12 @@ def results_from_topk(
     rows are checked — rows beyond are bucket padding and legitimately
     hold -inf sentinels."""
     sanitizers.check_finite_scores(vals, b, "engine.results_from_topk")
+    with obs_trace.span("materialize", rows=b):
+        out = _materialize_rows(doc_ids, b, vals, idx, cos, ind)
+    return out
+
+
+def _materialize_rows(doc_ids, b, vals, idx, cos, ind):
     out = []
     for i in range(b):
         row = []
@@ -309,6 +325,28 @@ def pack_query_arrays(
         qv[i] = v
         qs[i] = s
     return qv, qs
+
+
+def _record_ivf_stats(s) -> None:
+    """Surface the per-dispatch ``IVFSearchStats`` — previously computed
+    and dropped — as first-class metrics in the obs global registry."""
+    if s is None:
+        return
+    reg = global_registry()
+    reg.histogram("ragdb_ivf_probed_fraction",
+                  "fraction of clusters probed per dispatch").record(
+        float(s.probed_fraction))
+    reg.histogram("ragdb_ivf_widen_rounds",
+                  "probe/widen rounds per dispatch").record(float(s.rounds))
+    reg.counter("ragdb_ivf_candidate_rows_total",
+                "candidate rows gathered for rerank").inc(
+        int(s.candidate_rows))
+    reg.counter("ragdb_ivf_searches_total", "ivf dispatches").inc()
+    merge_s = getattr(s, "merge_seconds", None)
+    if merge_s is not None:
+        reg.histogram("ragdb_ivf_merge_seconds",
+                      "sharded local-top-k merge per dispatch").record(
+            float(merge_s))
 
 
 def _pad_row_update(rows: np.ndarray, block: np.ndarray):
@@ -391,6 +429,7 @@ class QueryEngine:
         self.ivf_seed = int(ivf_seed)
         self.ivf = None  # IVFIndex | ShardedIVFIndex | None (see refresh)
         self._last_index_stats = None
+        self.retrains = 0  # cumulative k-means (re)trains this engine ran
         # "auto" resolves at construction: kernel on real TPU backends,
         # the bit-stable map path elsewhere.  The booleans are kept as
         # resolved views for back-compat (retrieval.py checks them).
@@ -649,6 +688,7 @@ class QueryEngine:
                 return
             self.ivf = _train()
             stats.index_retrained = True
+            self._note_retrain()
             self._write_index_state()
             return
         if stats.restacked:
@@ -693,7 +733,14 @@ class QueryEngine:
         if self.ivf.needs_retrain(self.retrain_drift):
             self.ivf = _train()
             stats.index_retrained = True
+            self._note_retrain()
         self._write_index_state()
+
+    def _note_retrain(self) -> None:
+        self.retrains += 1
+        global_registry().counter(
+            "ragdb_ivf_retrains_total",
+            "k-means (re)trains across all engines").inc()
 
     def _ivf_state_key(self) -> list[str]:
         """Layout **and content** key the persisted index is pinned to:
@@ -718,6 +765,7 @@ class QueryEngine:
             "index": self.index,
             "n_clusters": self.ivf.n_clusters if self.ivf else 0,
             "drift": self.ivf.drift if self.ivf else 0,
+            "retrains": self.retrains,
             "probed_fraction": s.probed_fraction if s else None,
             "clusters_probed": s.clusters_probed if s else None,
             "candidate_rows": s.candidate_rows if s else None,
@@ -779,8 +827,9 @@ class QueryEngine:
         self, texts: list[str], k: int
     ) -> list[list[RetrievalResult]]:
         b = len(texts)
-        pairs = [self._query_arrays(t) for t in texts]
-        qv, qs = pack_query_arrays(pairs, self.kb.dim, self.kb.sig_words)
+        with obs_trace.span("query_embed", queries=b):
+            pairs = [self._query_arrays(t) for t in texts]
+            qv, qs = pack_query_arrays(pairs, self.kb.dim, self.kb.sig_words)
         n = len(self.doc_ids)
         if self.index != "flat" and self.ivf is not None:
             vals, idx, cos, ind, self._last_index_stats = self.ivf.search(
@@ -789,6 +838,7 @@ class QueryEngine:
                 guarantee=self.guarantee, scoring_path=self.scoring_path,
                 alpha=self.alpha, beta=self.beta,
             )
+            _record_ivf_stats(self._last_index_stats)
         else:
             vals, idx, cos, ind = score_batch_arrays(
                 self.doc_vecs, self.doc_sigs, qv, qs,

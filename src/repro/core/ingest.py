@@ -50,6 +50,7 @@ from repro.core.container import (
 )
 from repro.core.tokenizer import TermCounts
 from repro.core.vectorizer import HashedTfIdf
+from repro.obs import trace as obs_trace
 
 # --------------------------------------------------------------------------
 # modality sniffing (paper §3.2 "magic-byte analysis")
@@ -258,6 +259,10 @@ class KnowledgeBase:
     _persisted_ids: set[str] = field(default_factory=set)
     _persisted_path: str | None = None  # abspath of the journal chain's base
     _base_uid: str | None = None     # data_sha256 of the base container
+    # observability: perf_counter stamp of the oldest mutation no
+    # snapshot publish has absorbed yet (-1 = nothing pending); read +
+    # cleared by serving/snapshot.py to gauge publish lag
+    _pending_first_t: float = field(default=-1.0, repr=False, compare=False)
 
     def __post_init__(self):
         if self.vectorizer is None:
@@ -299,7 +304,9 @@ class KnowledgeBase:
 
     def _ingest_doc(self, path: str, data: bytes, digest: str, mtime: float,
                     size: int = -1, mtime_ns: int = -1):
-        text, kind = extract(data, path)
+        with obs_trace.span("extract") as sp:
+            text, kind = extract(data, path)
+            sp.set(modality=kind, bytes=len(data))
         if path in self.term_counts:  # changed file: retire old stats
             self.vectorizer.remove_doc(self.term_counts[path])
         tc = TermCounts.from_text(text)
@@ -316,6 +323,7 @@ class KnowledgeBase:
         self._removed_at.pop(path, None)
         self._meta_changed_at.pop(path, None)  # superseded by full change
         self._dirty = True
+        self._note_mutation()
 
     # Removal-log bound: entries beyond this are dropped oldest-first.
     # Consumers must treat the removed list as advisory (the engine
@@ -336,6 +344,24 @@ class KnowledgeBase:
         while len(self._removed_at) > self.REMOVED_LOG_MAX:
             self._removed_at.pop(next(iter(self._removed_at)))
         self._dirty = True
+        self._note_mutation()
+
+    # ---- publish-lag accounting (read by serving/snapshot.py) -----------
+
+    def _note_mutation(self) -> None:
+        if self._pending_first_t < 0:
+            self._pending_first_t = time.perf_counter()
+
+    def take_publish_lag(self) -> float | None:
+        """Seconds since the oldest mutation no snapshot publish has
+        absorbed, clearing the stamp (writer thread only — the
+        snapshot manager calls this right after its reference swap).
+        None when nothing was pending."""
+        t = self._pending_first_t
+        if t < 0:
+            return None
+        self._pending_first_t = -1.0
+        return time.perf_counter() - t
 
     # ---- dirty-row accounting (consumed by core/engine.py) --------------
 
@@ -389,8 +415,13 @@ class KnowledgeBase:
         Single-writer: concurrent mutation from a second thread raises
         (see ``_single_writer``).
         """
-        with self._single_writer("sync"):
-            return self._sync_locked(source_dir, verify_hashes)
+        with self._single_writer("sync"), \
+                obs_trace.span("ingest_sync") as sp:
+            stats = self._sync_locked(source_dir, verify_hashes)
+            sp.set(scanned=stats.scanned, added=stats.added,
+                   updated=stats.updated, removed=stats.removed,
+                   skipped=stats.skipped)
+            return stats
 
     def _sync_locked(self, source_dir: str, verify_hashes: bool) -> IngestStats:
         t0 = time.perf_counter()
@@ -637,7 +668,8 @@ class KnowledgeBase:
         matrix — it is fully derivable from the stored term counts + df,
         so edge deployments can trade first-query latency for a much
         smaller single file (see RQ3)."""
-        with self._single_writer("save"):
+        with self._single_writer("save"), \
+                obs_trace.span("container_save", cold=True):
             return self._save_locked(path, generation=generation,
                                      include_matrix=include_matrix)
 
@@ -700,7 +732,8 @@ class KnowledgeBase:
         apath = os.path.abspath(path)
         if (self._base_uid is None or self._persisted_path != apath
                 or not os.path.exists(path)):
-            self._save_locked(path)  # cold publish (re)starts the chain
+            with obs_trace.span("container_save", cold=True):
+                self._save_locked(path)  # cold publish (re)starts the chain
             return self.loaded_generation
         changed = sorted(
             p for p, v in self._changed_at.items()
@@ -755,7 +788,8 @@ class KnowledgeBase:
         self._persisted_ids = set(self.records)
         if (compact_ratio is not None
                 and journal_size(path) > compact_ratio * os.path.getsize(path)):
-            self._compact_locked(path)
+            with obs_trace.span("compact", auto=True):
+                self._compact_locked(path)
         return self.loaded_generation
 
     def compact(self, path: str) -> str:
@@ -768,7 +802,8 @@ class KnowledgeBase:
         already persisted the on-disk state is equivalent, so the
         generation is retained; unpersisted changes fold in and bump it
         (the compact is then also a publish)."""
-        with self._single_writer("compact"):
+        with self._single_writer("compact"), \
+                obs_trace.span("compact"):
             return self._compact_locked(path)
 
     def _compact_locked(self, path: str) -> str:

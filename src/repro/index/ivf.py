@@ -50,6 +50,7 @@ capture (serving/snapshot.py).
 from __future__ import annotations
 
 import hashlib
+import time
 from dataclasses import dataclass, replace
 
 import jax
@@ -59,6 +60,7 @@ import numpy as np
 from repro.analysis import sanitizers
 from repro.core.engine import _bucket, score_batch_arrays
 from repro.index.kmeans import spherical_kmeans
+from repro.obs import trace as obs_trace
 
 # float64 safety margin on the spherical-cap bound: rounding can only
 # widen the probe set, never exclude a true top-k doc
@@ -350,6 +352,7 @@ class IVFIndex:
         n, kc = self.n_docs, self.n_clusters
         kk = min(k, n)
         sizes = np.array([m.size for m in self.members], np.int64)
+        _t = time.perf_counter() if obs_trace.enabled() else 0.0
 
         # -- probe plane (host, float64 for the exactness bound) ----------
         # analysis: allow[unpinned-reduction] -- f64 probe bound, clipped
@@ -386,6 +389,10 @@ class IVFIndex:
             csum = np.cumsum(sizes[order[i]])
             need = int(np.searchsorted(csum, kk)) + 1
             p[i] = min(max(p[i], need), kc)
+        if _t:
+            obs_trace.record("ivf_probe", _t, time.perf_counter() - _t,
+                             clusters=kc, queries=b,
+                             guarantee=guarantee)
 
         if guarantee == "exact":
             return self._search_exact(doc_vecs, doc_sigs, qv, qs, b=b,
@@ -402,6 +409,7 @@ class IVFIndex:
         cos = np.zeros((bp, kk), np.float32)
         ind = np.zeros((bp, kk), np.float32)
         tot_rows = tot_clusters = 0
+        _t = time.perf_counter() if obs_trace.enabled() else 0.0
         for i in range(b):
             probe_c = order[i, : p[i]]
             if p[i] >= kc:
@@ -423,6 +431,9 @@ class IVFIndex:
             vals[i], idx[i], cos[i], ind[i] = v[0], gi[0], cv[0], iv[0]
             tot_rows += n if cand is None else int(cand.size)
             tot_clusters += min(int(p[i]), kc)
+        if _t:
+            obs_trace.record("ivf_rerank", _t, time.perf_counter() - _t,
+                             mode="probe", rows=tot_rows, queries=b)
         stats = IVFSearchStats(
             n_docs=n,
             candidate_rows=tot_rows // max(b, 1),   # mean rows scanned
@@ -446,6 +457,7 @@ class IVFIndex:
         rounds = 0
         while True:
             rounds += 1
+            _tr = time.perf_counter() if obs_trace.enabled() else 0.0
             probed = np.unique(np.concatenate(
                 [order[i, : p[i]] for i in range(b)]
             )) if b else np.arange(kc)
@@ -468,6 +480,12 @@ class IVFIndex:
                     scoring_path=scoring_path, k=kk,
                     alpha=alpha, beta=beta,
                 )
+            if _tr:
+                obs_trace.record(
+                    "ivf_widen_round", _tr, time.perf_counter() - _tr,
+                    round=rounds,
+                    rows=n if cand is None else int(cand.size),
+                    clusters=kc if cand is None else int(probed.size))
             if cand is None:
                 break
             # stop test: the k-th best exact score must strictly beat

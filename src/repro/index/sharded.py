@@ -79,6 +79,7 @@ import numpy as np
 
 from repro.core import hsf
 from repro.core.engine import _bucket
+from repro.obs import trace as obs_trace
 from repro.index.ivf import (
     IVFIndex,
     IVFSearchStats,
@@ -482,6 +483,7 @@ class ShardedIVFIndex:
         n, kc, S = base.n_docs, base.n_clusters, self.n_shards
         kk = min(k, n)
         sizes = np.array([m.size for m in base.members], np.int64)
+        _t = time.perf_counter() if obs_trace.enabled() else 0.0
 
         # -- global probe plane (host, float64 bound) ---------------------
         # analysis: allow[unpinned-reduction] -- f64 probe bound, clipped
@@ -534,12 +536,17 @@ class ShardedIVFIndex:
                 need = int(np.searchsorted(csum, need_docs)) + 1
                 p[s, i] = min(max(min(max(nprobe, 1), kc_s), need), kc_s)
 
+        if _t:
+            obs_trace.record("shard_probe", _t, time.perf_counter() - _t,
+                             clusters=kc, shards=S, queries=b,
+                             guarantee=guarantee)
         shard_cluster_ids = [np.nonzero(soc == s)[0] for s in range(S)]
         qv_j, qs_j = jnp.asarray(qv), jnp.asarray(qs)
         rounds = 0
         merge_seconds = 0.0
         while True:
             rounds += 1
+            _tr = time.perf_counter() if obs_trace.enabled() else 0.0
             cand_local: list[np.ndarray] = []
             probed_global: list[np.ndarray] = []
             for s in range(S):
@@ -581,7 +588,14 @@ class ShardedIVFIndex:
             vals, idx, cos, ind = _merge_shard_topk(
                 svals, sgids, scos, sind, kk
             )
-            merge_seconds += time.perf_counter() - t0
+            t1 = time.perf_counter()
+            merge_seconds += t1 - t0
+            if _tr:
+                obs_trace.record("shard_merge", t0, t1 - t0,
+                                 shards=S, round=rounds)
+                obs_trace.record("shard_round", _tr, t1 - _tr,
+                                 round=rounds,
+                                 candidates=int(n_cand.sum()))
 
             if ub is None:
                 break
@@ -621,20 +635,35 @@ class ShardedIVFIndex:
         leaves the device.  Fallback: the identical jitted local scorer
         looped over logical shards on the default device."""
         if self.mesh is not None:
-            fn = _mesh_topk_fn(self.mesh, kk_loc, float(alpha), float(beta))
-            v, g, c, d = fn(self.dv_stack, self.ds_stack, self.gid_stack,
-                            jnp.asarray(cand_pad), jnp.asarray(n_cand),
-                            qv_j, qs_j)
+            # one collective dispatch: per-shard attribution is not
+            # observable from the host, so a single span covers it
+            with obs_trace.span("shard_local_topk",
+                                shards=self.n_shards, mode="mesh"):
+                fn = _mesh_topk_fn(self.mesh, kk_loc,
+                                   float(alpha), float(beta))
+                v, g, c, d = fn(self.dv_stack, self.ds_stack,
+                                self.gid_stack,
+                                jnp.asarray(cand_pad),
+                                jnp.asarray(n_cand),
+                                qv_j, qs_j)
+                if obs_trace.enabled():
+                    jax.block_until_ready(v)  # analysis: allow[host-sync] -- tracing-only audited boundary attributing mesh dispatch time to its span; no-op when tracing is off
         else:
-            outs = [
-                _shard_topk_jit(
-                    self.dv_stack[s], self.ds_stack[s], self.gid_stack[s],
-                    jnp.asarray(cand_pad[s]), jnp.int32(int(n_cand[s])),
-                    qv_j, qs_j,
-                    kk=kk_loc, alpha=float(alpha), beta=float(beta),
-                )
-                for s in range(self.n_shards)
-            ]
+            outs = []
+            for s in range(self.n_shards):
+                with obs_trace.span("shard_local_topk", shard=s,
+                                    rows=int(n_cand[s])):
+                    o = _shard_topk_jit(
+                        self.dv_stack[s], self.ds_stack[s],
+                        self.gid_stack[s],
+                        jnp.asarray(cand_pad[s]),
+                        jnp.int32(int(n_cand[s])),
+                        qv_j, qs_j,
+                        kk=kk_loc, alpha=float(alpha), beta=float(beta),
+                    )
+                    if obs_trace.enabled():
+                        jax.block_until_ready(o)  # analysis: allow[host-sync] -- tracing-only audited boundary: per-shard local-top-k attribution in the logical-shard loop; no-op when tracing is off
+                outs.append(o)
             v = jnp.stack([o[0] for o in outs])
             g = jnp.stack([o[1] for o in outs])
             c = jnp.stack([o[2] for o in outs])

@@ -25,6 +25,7 @@ from repro.configs import get as get_arch
 from repro.core.ingest import KnowledgeBase
 from repro.core.rag import RAGPipeline
 from repro.models import transformer as T
+from repro.obs import format_breakdown, trace as obs_trace, write_chrome_trace
 from repro.serving import RequestRejected, ServingRuntime
 
 
@@ -64,7 +65,19 @@ def main(argv=None):
                     help="cluster shards for index=ivf-sharded (default: "
                     "the jax device count; falls back to a logical "
                     "per-shard loop when devices are fewer)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="print the Prometheus exposition (serving "
+                    "registry + global obs registry) and the engine's "
+                    "index_stats() after the run")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="enable request tracing and write a Chrome "
+                    "trace-event JSON (load in Perfetto / "
+                    "chrome://tracing; inspect with "
+                    "`python -m repro.obs FILE`)")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs_trace.enable()
 
     if args.container:
         kb = KnowledgeBase.load(args.container)
@@ -126,6 +139,16 @@ def main(argv=None):
         dt = time.perf_counter() - t0
     print(f"\n{len(futures)} requests in {dt * 1e3:.1f} ms")
     print(f"serving metrics: {runtime.metrics.format()}")
+    if args.metrics:
+        stats = runtime.index_stats()
+        print("index stats: " + ", ".join(
+            f"{k}={v}" for k, v in stats.items()))
+        print(runtime.render_metrics(), end="")
+    if args.trace:
+        spans = obs_trace.get().drain()
+        n = write_chrome_trace(args.trace, spans)
+        print(f"trace: {n} events → {args.trace}")
+        print(format_breakdown(spans))
     return 0
 
 

@@ -1,0 +1,58 @@
+"""Observability plane: span tracer + metrics registry + exporters.
+
+Zero-dependency (pure stdlib — importable from ``core/container.py``
+upward without cycles), in the same spirit as the analysis plane:
+
+- ``obs.trace`` — monotonic-clock spans with trace/parent ids in a
+  bounded ring buffer; off by default, near-zero cost when off,
+  sampled when on.  The serving request lifecycle (queue wait → flush
+  wait → pack → snapshot pin → device dispatch → IVF probe/rerank →
+  merge) and the write path (sync, extract, delta save, journal
+  fsync, compact, publish) all record here.
+- ``obs.metrics`` — labeled counters/gauges/log-bucket histograms in a
+  ``MetricsRegistry``; ``global_registry()`` carries engine/index/
+  ingest-level signals (IVF search stats, sanitizer trips, journal
+  bytes, publish lag), per-runtime registries live in
+  ``serving.metrics.ServingMetrics``.
+- ``obs.export`` — Chrome trace-event JSON (Perfetto-loadable) and
+  Prometheus text exposition; ``python -m repro.obs trace.json``
+  renders a per-stage p50/p99 breakdown.
+
+See docs/ARCHITECTURE.md §12 for the span model and overhead contract.
+"""
+from repro.obs import trace
+from repro.obs.export import (
+    chrome_trace,
+    format_breakdown,
+    load_chrome_trace,
+    render_prometheus,
+    request_decomposition,
+    stage_breakdown,
+    write_chrome_trace,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    LogHistogram,
+    MetricsRegistry,
+    global_registry,
+)
+from repro.obs.trace import SpanRecord, Tracer
+
+__all__ = [
+    "trace",
+    "Tracer",
+    "SpanRecord",
+    "MetricsRegistry",
+    "LogHistogram",
+    "Counter",
+    "Gauge",
+    "global_registry",
+    "chrome_trace",
+    "write_chrome_trace",
+    "load_chrome_trace",
+    "stage_breakdown",
+    "request_decomposition",
+    "format_breakdown",
+    "render_prometheus",
+]

@@ -1,0 +1,55 @@
+"""CLI: render a per-stage breakdown from a Chrome trace file.
+
+    PYTHONPATH=src python -m repro.obs trace.json [--json]
+
+Loads a trace written by ``obs.export.write_chrome_trace`` (e.g. from
+``benchmarks/bench_serving.py --trace`` or ``launch/serve.py
+--trace``) and prints per-span-name count / total / p50 / p99 / max,
+plus the request-decomposition coverage line (how much of end-to-end
+request time the stage spans account for).  Exit 0 on success, 2 on a
+missing/unreadable file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.export import (
+    format_breakdown,
+    load_chrome_trace,
+    request_decomposition,
+    stage_breakdown,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Per-stage latency breakdown from a Chrome trace file")
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable breakdown instead of the table")
+    args = ap.parse_args(argv)
+    try:
+        spans = load_chrome_trace(args.trace)
+    except (OSError, ValueError, KeyError) as exc:
+        print(f"error: cannot read trace {args.trace!r}: {exc}",
+              file=sys.stderr)
+        return 2
+    try:
+        if args.json:
+            print(json.dumps({
+                "stages": stage_breakdown(spans),
+                "requests": request_decomposition(spans),
+            }, indent=2, sort_keys=True))
+        else:
+            print(f"{len(spans)} spans from {args.trace}")
+            print(format_breakdown(spans))
+    except BrokenPipeError:  # output piped into head/less that closed
+        sys.stderr.close()   # suppress the interpreter's epipe warning
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

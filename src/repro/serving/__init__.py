@@ -24,6 +24,14 @@ Index-plane knobs thread straight through the engine kwargs:
 the generation's *frozen* IVF index (snapshots pin the immutable
 ``IVFIndex`` reference exactly like the doc arrays — readers never see
 a half-retrained index; docs/ARCHITECTURE.md §9).
+
+Observability (docs/ARCHITECTURE.md §12): ``ServingMetrics`` is backed
+by a labeled ``repro.obs`` metrics registry, and the scheduler emits
+per-stage request spans (queue wait → flush wait → score → merge) into
+the process tracer when ``repro.obs.trace.enable()`` (or
+``RAGDB_TRACE=1``) is on.  ``render_metrics()`` returns one Prometheus
+text exposition covering both the runtime's registry and the global
+one (IVF search stats, journal bytes, publish lag, sanitizer trips).
 """
 from __future__ import annotations
 
@@ -32,6 +40,8 @@ from concurrent.futures import Future
 from repro.analysis import sanitizers
 from repro.core.engine import QueryEngine, RetrievalResult  # noqa: F401
 from repro.core.ingest import KnowledgeBase
+from repro.obs import render_prometheus
+from repro.obs.metrics import global_registry
 
 from repro.serving.cache import ResultCache
 from repro.serving.metrics import LatencyHistogram, ServingMetrics  # noqa: F401
@@ -171,6 +181,20 @@ class ServingRuntime:
         self.retrace_guard.arm()
 
     # ---- introspection ---------------------------------------------------
+
+    def render_metrics(self) -> str:
+        """One Prometheus text exposition for the whole runtime: the
+        per-runtime serving registry (requests, latency histogram,
+        batch occupancy, cache hits) plus the process-global obs
+        registry (IVF probe stats, journal bytes, publish lag,
+        sanitizer trips)."""
+        return render_prometheus(self.metrics.registry, global_registry())
+
+    def index_stats(self) -> dict:
+        """The engine's clustered-index health counters (probed
+        fraction, widening rounds, retrains); probe fields are None
+        on a flat index or before the first ivf dispatch."""
+        return self.engine.index_stats()
 
     @property
     def engine(self) -> QueryEngine:

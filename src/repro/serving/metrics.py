@@ -1,10 +1,14 @@
-"""Serving metrics plane: counters + latency histograms.
+"""Serving metrics plane, backed by the obs metrics registry.
 
-Zero-dependency observability for the serving runtime: a fixed-bucket
-log-spaced latency histogram (no unbounded sample lists — a serving
-process must not grow memory with request count) and a small set of
-counters, all behind one lock, exported as a plain dict via
-``snapshot()`` so drivers can print or ship them anywhere.
+``ServingMetrics`` keeps its recording-hook API (the scheduler calls
+``on_submit``/``on_complete``/…) and its ``snapshot()`` dict contract,
+but the storage is now a per-runtime ``obs.MetricsRegistry`` — the
+same counters/gauges/histograms the rest of the pipeline records into
+— so one Prometheus exposition (``render()``) covers the serving tier
+alongside the engine/index/ingest signals in
+``obs.global_registry()``.  ``LatencyHistogram`` is the obs
+``LogHistogram`` (fixed log-spaced buckets, O(1) memory forever);
+re-exported here for compatibility.
 
 Recorded by the scheduler (serving/scheduler.py):
 - ``requests`` / ``completed`` / ``rejected`` / ``failed``
@@ -17,160 +21,130 @@ Recorded by the scheduler (serving/scheduler.py):
 """
 from __future__ import annotations
 
-import threading
 import time
-from bisect import bisect_left
 
+from repro.obs.export import render_prometheus
+from repro.obs.metrics import LogHistogram, MetricsRegistry
 
-class LatencyHistogram:
-    """Fixed log-spaced buckets, 10 µs … ~79 s (×1.25 per bucket).
-
-    ``percentile`` returns the geometric midpoint of the bucket holding
-    the requested rank — a ≤ ~12 % quantization error, plenty for
-    p50/p99 serving dashboards, with O(1) memory forever.
-    """
-
-    N_BUCKETS = 72
-    BASE = 10e-6
-    GROWTH = 1.25
-
-    def __init__(self):
-        self.bounds = [
-            self.BASE * self.GROWTH ** i for i in range(self.N_BUCKETS)
-        ]
-        self.counts = [0] * (self.N_BUCKETS + 1)  # +1 overflow bucket
-        self.n = 0
-        self.total = 0.0
-        self.max = 0.0
-
-    def record(self, seconds: float) -> None:
-        self.counts[bisect_left(self.bounds, seconds)] += 1
-        self.n += 1
-        self.total += seconds
-        if seconds > self.max:
-            self.max = seconds
-
-    def percentile(self, q: float) -> float:
-        """q in [0, 100] → seconds (0.0 when empty)."""
-        if self.n == 0:
-            return 0.0
-        rank = q / 100.0 * (self.n - 1)
-        cum = 0
-        for i, c in enumerate(self.counts):
-            cum += c
-            if cum > rank:
-                if i == 0:
-                    return min(self.bounds[0] / self.GROWTH ** 0.5, self.max)
-                if i >= self.N_BUCKETS:
-                    return self.max
-                # geometric bucket midpoint, clamped to the observed max
-                return min(self.bounds[i - 1] * self.GROWTH ** 0.5, self.max)
-        return self.max
-
-    @property
-    def mean(self) -> float:
-        return self.total / self.n if self.n else 0.0
+# compatibility alias: the serving latency histogram is the obs
+# log-bucket histogram (tests and drivers import it under this name)
+LatencyHistogram = LogHistogram
 
 
 class ServingMetrics:
     """Thread-safe counters + histograms for one serving runtime."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self.registry = MetricsRegistry()
         self.reset()
 
     def reset(self) -> None:
         """Zero everything and restart the throughput clock (used by
         load generators to scope measurements to a timed window)."""
-        with self._lock:
-            self._t0 = time.perf_counter()
-            self.requests = 0
-            self.completed = 0
-            self.rejected = 0
-            self.failed = 0
-            self.cache_hits = 0
-            self.cache_misses = 0
-            self.batches = 0
-            self.occupancy_sum = 0
-            self.occupancy_max = 0
-            self.scored = 0
-            self.latency = LatencyHistogram()
+        self.registry.reset()
+        reg = self.registry
+        self._t0 = time.perf_counter()
+        self._requests = reg.counter(
+            "ragdb_serving_requests_total", "requests submitted")
+        self._completed = reg.counter(
+            "ragdb_serving_completed_total", "futures resolved ok")
+        self._rejected = reg.counter(
+            "ragdb_serving_rejected_total", "admission-queue rejections")
+        self._failed = reg.counter(
+            "ragdb_serving_failed_total", "futures resolved with an error")
+        self._cache_hits = reg.counter(
+            "ragdb_serving_cache_hits_total", "result-cache hits at submit")
+        self._cache_misses = reg.counter(
+            "ragdb_serving_cache_misses_total", "result-cache misses")
+        self._batches = reg.counter(
+            "ragdb_serving_batches_total", "scheduler flushes")
+        self._occupancy_sum = reg.counter(
+            "ragdb_serving_batch_occupancy_sum", "requests across flushes")
+        self._occupancy_max = reg.gauge(
+            "ragdb_serving_batch_occupancy_max", "largest flush seen")
+        self._scored = reg.counter(
+            "ragdb_serving_scored_total",
+            "unique queries dispatched (occupancy minus coalesced dups)")
+        self._latency = reg.histogram(
+            "ragdb_serving_latency_seconds",
+            "end-to-end request latency (submit -> future resolved)")
 
     # ---- recording hooks (scheduler) -----------------------------------
 
     def on_submit(self) -> None:
-        with self._lock:
-            self.requests += 1
+        self._requests.inc()
 
     def on_cache_hit(self, latency_s: float = 0.0) -> None:
         """A submit-time cache hit completes immediately; its (near-zero)
         latency is recorded so the histogram covers the same request
         population as ``completed``/``qps``."""
-        with self._lock:
-            self.cache_hits += 1
-            self.completed += 1
-            self.latency.record(latency_s)
+        self._cache_hits.inc()
+        self._completed.inc()
+        self._latency.record(latency_s)
 
     def on_cache_miss(self) -> None:
-        with self._lock:
-            self.cache_misses += 1
+        self._cache_misses.inc()
 
     def on_reject(self) -> None:
-        with self._lock:
-            self.rejected += 1
+        self._rejected.inc()
 
     def on_batch(self, occupancy: int, scored: int) -> None:
-        with self._lock:
-            self.batches += 1
-            self.occupancy_sum += occupancy
-            self.scored += scored
-            if occupancy > self.occupancy_max:
-                self.occupancy_max = occupancy
+        self._batches.inc()
+        self._occupancy_sum.inc(occupancy)
+        self._scored.inc(scored)
+        if occupancy > self._occupancy_max.value:
+            self._occupancy_max.set(occupancy)
 
     def on_complete(self, latency_s: float) -> None:
-        with self._lock:
-            self.completed += 1
-            self.latency.record(latency_s)
+        self._completed.inc()
+        self._latency.record(latency_s)
 
     def on_fail(self) -> None:
-        with self._lock:
-            self.failed += 1
+        self._failed.inc()
 
     # ---- export ---------------------------------------------------------
 
+    @property
+    def latency(self) -> LogHistogram:
+        return self._latency
+
     def snapshot(self) -> dict:
         """One coherent dict of everything (the drivers print this)."""
-        with self._lock:
-            elapsed = max(time.perf_counter() - self._t0, 1e-9)
-            lookups = self.cache_hits + self.cache_misses
-            return {
-                "requests": self.requests,
-                "completed": self.completed,
-                "rejected": self.rejected,
-                "failed": self.failed,
-                "qps": self.completed / elapsed,
-                "elapsed_s": elapsed,
-                "latency_p50_ms": self.latency.percentile(50) * 1e3,
-                "latency_p99_ms": self.latency.percentile(99) * 1e3,
-                "latency_mean_ms": self.latency.mean * 1e3,
-                "latency_max_ms": self.latency.max * 1e3,
-                "batches": self.batches,
-                "batch_occupancy_mean": (
-                    self.occupancy_sum / self.batches if self.batches else 0.0
-                ),
-                "batch_occupancy_max": self.occupancy_max,
-                "scored_queries": self.scored,
-                "cache_hits": self.cache_hits,
-                "cache_misses": self.cache_misses,
-                "cache_hit_rate": self.cache_hits / lookups if lookups else 0.0,
-            }
+        elapsed = max(time.perf_counter() - self._t0, 1e-9)
+        completed = self._completed.value
+        hits = self._cache_hits.value
+        lookups = hits + self._cache_misses.value
+        batches = self._batches.value
+        lat = self._latency
+        return {
+            "requests": self._requests.value,
+            "completed": completed,
+            "rejected": self._rejected.value,
+            "failed": self._failed.value,
+            "qps": completed / elapsed,
+            "elapsed_s": elapsed,
+            "latency_p50_ms": lat.percentile(50) * 1e3,
+            "latency_p99_ms": lat.percentile(99) * 1e3,
+            "latency_mean_ms": lat.mean * 1e3,
+            "latency_max_ms": lat.max * 1e3,
+            "batches": batches,
+            "batch_occupancy_mean": (
+                self._occupancy_sum.value / batches if batches else 0.0
+            ),
+            "batch_occupancy_max": self._occupancy_max.value,
+            "scored_queries": self._scored.value,
+            "cache_hits": hits,
+            "cache_misses": self._cache_misses.value,
+            "cache_hit_rate": hits / lookups if lookups else 0.0,
+        }
 
     def format(self) -> str:
         """Compact one-paragraph rendering for CLI drivers."""
         s = self.snapshot()
         return (
             f"served {s['completed']}/{s['requests']} requests "
-            f"({s['rejected']} rejected) at {s['qps']:.0f} qps | "
+            f"({s['rejected']} rejected, {s['failed']} failed) "
+            f"at {s['qps']:.0f} qps | "
             f"latency p50 {s['latency_p50_ms']:.2f} ms "
             f"p99 {s['latency_p99_ms']:.2f} ms | "
             f"{s['batches']} flushes, mean occupancy "
@@ -179,3 +153,7 @@ class ServingMetrics:
             f"result cache {s['cache_hits']}/{s['cache_hits'] + s['cache_misses']}"
             f" hits"
         )
+
+    def render(self) -> str:
+        """Prometheus text exposition of this runtime's registry."""
+        return render_prometheus(self.registry)

@@ -44,6 +44,7 @@ from dataclasses import dataclass, field
 
 from repro.core.engine import RetrievalResult
 from repro.core.tokenizer import normalize
+from repro.obs import trace
 
 from repro.serving.cache import ResultCache
 from repro.serving.metrics import ServingMetrics
@@ -68,6 +69,12 @@ class _Pending:
     k: int
     future: Future = field(default_factory=Future)
     t_submit: float = field(default_factory=time.perf_counter)
+    # observability: nonzero when this request was sampled for tracing
+    # (id allocated on the submitting thread, stage spans recorded
+    # against it by the flusher); t_dequeue splits queue wait from
+    # flush wait
+    trace_id: int = 0
+    t_dequeue: float = 0.0
 
 
 _STOP = object()
@@ -154,6 +161,7 @@ class MicroBatchScheduler:
         """
         t_submit = time.perf_counter()
         self.metrics.on_submit()
+        tid = trace.begin_trace()  # 0 when tracing is off or unsampled
         if self._stopping.is_set():
             self.metrics.on_reject()
             raise RequestRejected("scheduler stopped")
@@ -161,14 +169,19 @@ class MicroBatchScheduler:
             snap = self.source.current
             hit = self.cache.get(text, k, snap.generation)
             if hit is not None:
-                self.metrics.on_cache_hit(time.perf_counter() - t_submit)
+                now = time.perf_counter()
+                self.metrics.on_cache_hit(now - t_submit)
+                if tid:
+                    trace.record("request", t_submit, now - t_submit,
+                                 trace=tid, k=k, cached=True,
+                                 generation=snap.generation)
                 fut: Future = Future()
                 fut.set_result(
                     ServedResult(hit, snap.generation, cached=True)
                 )
                 return fut
             self.metrics.on_cache_miss()
-        req = _Pending(text=text, k=k)
+        req = _Pending(text=text, k=k, t_submit=t_submit, trace_id=tid)
         try:
             self._queue.put_nowait(req)
         except queue.Full:
@@ -197,8 +210,9 @@ class MicroBatchScheduler:
                 continue
             if first is _STOP:
                 return
+            first.t_dequeue = time.perf_counter()
             batch = [first]
-            deadline = time.perf_counter() + self.flush_deadline
+            deadline = first.t_dequeue + self.flush_deadline
             while len(batch) < self.max_batch:
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
@@ -210,47 +224,98 @@ class MicroBatchScheduler:
                 if item is _STOP:
                     self._flush(batch)
                     return
+                item.t_dequeue = time.perf_counter()
                 batch.append(item)
             self._flush(batch)
 
     def _flush(self, batch: list[_Pending]) -> None:
-        snap = self.source.current  # pinned once for the whole flush
+        # the flush-level span (and the engine/index spans nesting under
+        # it on this thread) rides the trace of the request that OPENED
+        # the flush window — so flush instrumentation is emitted for a
+        # `sample` fraction of flushes, not whenever any request in the
+        # batch happens to be sampled.  Per-request stage records are
+        # independent of this: every sampled request gets its
+        # decomposition even when its flush is not traced.
+        flush_trace = batch[0].trace_id
         scored = 0
-        try:
-            by_k: dict[int, list[_Pending]] = {}
-            for req in batch:
-                by_k.setdefault(req.k, []).append(req)
-            for k, group in by_k.items():
-                # duplicate coalescing: one scored column per canonical
-                # query text, fanned out to every requesting future
-                order: dict[str, int] = {}
-                texts: list[str] = []
-                for req in group:
-                    key = normalize(req.text)
-                    if key not in order:
-                        order[key] = len(texts)
-                        texts.append(req.text)
-                results = snap.query_batch(texts, k)
-                scored += len(texts)
-                if self.retrace_guard is not None:
-                    # raises SanitizerError on steady-state jit cache
-                    # growth — checked before fan-out so the failure
-                    # lands on the futures of the batch that caused it
-                    self.retrace_guard.check("scheduler._flush")
-                for req in group:
-                    res = results[order[normalize(req.text)]]
-                    if self.cache is not None:
-                        self.cache.put(req.text, k, snap.generation, res)
-                    self.metrics.on_complete(
-                        time.perf_counter() - req.t_submit
-                    )
-                    req.future.set_result(
-                        ServedResult(res, snap.generation)
-                    )
-        except Exception as exc:  # noqa: BLE001 — fail the batch, not the loop
-            for req in batch:
-                if not req.future.done():
-                    self.metrics.on_fail()
-                    req.future.set_exception(exc)
-        finally:
-            self.metrics.on_batch(len(batch), scored)
+        # deferred span emission: stage timestamps are captured in the
+        # fan-out loop, but SpanRecords are built only after every
+        # future of the batch has resolved — tracing work overlaps the
+        # next batch's accumulation window instead of delaying wakeups
+        deferred: list[tuple] = []
+        with trace.span("flush", trace=flush_trace,
+                        batch=len(batch)) as fsp:
+            try:
+                with trace.span("snapshot_pin") as psp:
+                    snap = self.source.current  # pinned once per flush
+                    psp.set(generation=snap.generation)
+                by_k: dict[int, list[_Pending]] = {}
+                for req in batch:
+                    by_k.setdefault(req.k, []).append(req)
+                for k, group in by_k.items():
+                    # duplicate coalescing: one scored column per
+                    # canonical query text, fanned out to every
+                    # requesting future
+                    with trace.span("pack", k=k) as ksp:
+                        order: dict[str, int] = {}
+                        texts: list[str] = []
+                        for req in group:
+                            key = normalize(req.text)
+                            if key not in order:
+                                order[key] = len(texts)
+                                texts.append(req.text)
+                        ksp.set(unique=len(texts), requests=len(group))
+                    t_score0 = time.perf_counter()
+                    results = snap.query_batch(texts, k)
+                    t_score1 = time.perf_counter()
+                    scored += len(texts)
+                    if self.retrace_guard is not None:
+                        # raises SanitizerError on steady-state jit
+                        # cache growth — checked before fan-out so the
+                        # failure lands on the futures of the batch
+                        # that caused it
+                        self.retrace_guard.check("scheduler._flush")
+                    for req in group:
+                        res = results[order[normalize(req.text)]]
+                        if self.cache is not None:
+                            self.cache.put(
+                                req.text, k, snap.generation, res)
+                        t_done = time.perf_counter()
+                        self.metrics.on_complete(t_done - req.t_submit)
+                        req.future.set_result(
+                            ServedResult(res, snap.generation)
+                        )
+                        if req.trace_id:
+                            deferred.append(
+                                (req, k, snap.generation,
+                                 t_score0, t_score1, t_done, len(texts)))
+            except Exception as exc:  # noqa: BLE001 — fail the batch, not the loop
+                fsp.set(error=type(exc).__name__)
+                for req in batch:
+                    if not req.future.done():
+                        self.metrics.on_fail()
+                        req.future.set_exception(exc)
+            finally:
+                self.metrics.on_batch(len(batch), scored)
+        for args in deferred:
+            self._trace_request(*args)
+
+    @staticmethod
+    def _trace_request(req: _Pending, k: int, generation: int,
+                       t_score0: float, t_score1: float, t_done: float,
+                       batch_size: int) -> None:
+        """Record the per-request stage decomposition.  The four stages
+        tile [t_submit, t_done] exactly, so they sum to the end-to-end
+        latency the histogram records (the acceptance invariant)."""
+        rid = trace.alloc_id()  # the request root span's id
+        trace.record_batch(req.trace_id, (
+            ("queue_wait", req.t_submit,
+             req.t_dequeue - req.t_submit, 0, rid, None),
+            ("flush_wait", req.t_dequeue,
+             t_score0 - req.t_dequeue, 0, rid, None),
+            ("score", t_score0, t_score1 - t_score0, 0, rid,
+             {"batch": batch_size}),
+            ("merge", t_score1, t_done - t_score1, 0, rid, None),
+            ("request", req.t_submit, t_done - req.t_submit, rid, 0,
+             {"k": k, "generation": generation, "cached": False}),
+        ))

@@ -44,6 +44,8 @@ from repro.core.engine import (
 )
 from repro.core.ingest import KnowledgeBase
 from repro.core.vectorizer import HashedTfIdf
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import global_registry
 
 
 @dataclass(frozen=True)
@@ -123,14 +125,16 @@ class EngineSnapshot:
         return out
 
     def _chunk(self, texts: list[str], k: int):
-        pairs = [
-            (
-                self.vectorizer.query_vector(t),
-                sigmod.query_signature(t, width_words=self.sig_words),
-            )
-            for t in texts
-        ]
-        qv, qs = pack_query_arrays(pairs, self.vectorizer.dim, self.sig_words)
+        with obs_trace.span("query_embed", queries=len(texts)):
+            pairs = [
+                (
+                    self.vectorizer.query_vector(t),
+                    sigmod.query_signature(t, width_words=self.sig_words),
+                )
+                for t in texts
+            ]
+            qv, qs = pack_query_arrays(
+                pairs, self.vectorizer.dim, self.sig_words)
         n = len(self.doc_ids)
         if self.index_kind != "flat" and self.ivf is not None:
             vals, idx, cos, ind, _ = self.ivf.search(
@@ -205,14 +209,28 @@ class SnapshotManager:
             raise ValueError(
                 "durable publish needs SnapshotManager(container_path=...)"
             )
-        with self._publish_lock:
-            self.engine.refresh()
+        with self._publish_lock, \
+                obs_trace.span("publish", durable=durable) as sp:
+            with obs_trace.span("refresh"):
+                self.engine.refresh()
             if durable:
-                self.engine.kb.save_delta(self.container_path,
-                                          compact_ratio=self.compact_ratio)
+                with obs_trace.span("delta_save"):
+                    self.engine.kb.save_delta(
+                        self.container_path,
+                        compact_ratio=self.compact_ratio)
             if self.engine.synced_version != self._current.generation:
-                snap = EngineSnapshot.capture(self.engine)
+                with obs_trace.span("snapshot_capture"):
+                    snap = EngineSnapshot.capture(self.engine)
                 self._current = snap  # atomic reference swap — the publish
+                # publish lag: wall time from the oldest KB mutation
+                # this generation absorbs to the moment readers see it
+                lag = self.engine.kb.take_publish_lag()
+                if lag is not None:
+                    global_registry().gauge(
+                        "ragdb_publish_lag_seconds",
+                        "oldest unpublished mutation -> snapshot swap",
+                    ).set(lag)
+                    sp.set(generation=snap.generation, lag_s=round(lag, 6))
             return self._current
 
 

@@ -1,0 +1,402 @@
+"""Observability plane contracts (obs/): the span tracer's
+enable/disable/sampling semantics and O(1) ring buffer, the Chrome
+trace-event round trip (write -> load lossless to ~1 ns), the
+stage-breakdown CLI, the metrics registry (get-or-create, labels,
+kind safety, exports), and the LogHistogram edge cases the serving
+latency plane depends on (overflow bucket, percentile monotonicity,
+single-sample clamp, concurrent record-vs-snapshot)."""
+import json
+import threading
+
+import pytest
+
+from repro.obs import (
+    MetricsRegistry,
+    SpanRecord,
+    Tracer,
+    chrome_trace,
+    global_registry,
+    load_chrome_trace,
+    render_prometheus,
+    request_decomposition,
+    stage_breakdown,
+    write_chrome_trace,
+)
+from repro.obs.__main__ import main as obs_main
+from repro.obs.metrics import LogHistogram
+from repro.serving import ServingMetrics
+
+
+# ---- tracer ---------------------------------------------------------------
+
+
+class TestTracer:
+    def test_disabled_is_noop(self):
+        tr = Tracer()
+        assert not tr.enabled
+        with tr.span("outer", k=1) as s:
+            assert s.trace_id == 0
+            with tr.span("inner"):
+                pass
+        assert tr.alloc_id() == 0
+        assert tr.begin_trace() == 0
+        assert tr.record("x", 0.0, 1.0) == 0
+        tr.record_batch(7, [("x", 0.0, 1.0, 0, 0, None)])
+        assert len(tr) == 0
+
+    def test_span_nesting_and_parenting(self):
+        tr = Tracer().enable()
+        with tr.span("outer") as outer:
+            with tr.span("inner") as inner:
+                assert inner.trace_id == outer.trace_id
+                assert inner.parent_id == outer.span_id
+        spans = tr.drain()
+        assert [s.name for s in spans] == ["inner", "outer"]  # exit order
+        assert spans[0].parent_id == spans[1].span_id
+        assert all(s.dur_ns >= 0 for s in spans)
+        assert all(s.t0_ns > 0 for s in spans)
+
+    def test_explicit_cross_thread_trace(self):
+        tr = Tracer().enable()
+        tid = tr.begin_trace()
+        assert tid > 0
+        out = []
+
+        def worker():
+            with tr.span("stage", trace=tid, parent=0):
+                pass
+            out.append(tr.record("manual", 1.0, 0.5, trace=tid))
+
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+        spans = tr.drain()
+        assert {s.trace_id for s in spans} == {tid}
+        assert out[0] > 0
+        manual = next(s for s in spans if s.name == "manual")
+        assert manual.t0_ns == 1_000_000_000
+        assert manual.dur_ns == 500_000_000
+
+    def test_suppressed_trace_suppresses_descendants(self):
+        # trace=0 means "unsampled request": nested spans must not
+        # start fresh orphan traces
+        tr = Tracer().enable()
+        with tr.span("request", trace=0):
+            with tr.span("child"):
+                with tr.span("grandchild"):
+                    pass
+        assert tr.drain() == []
+
+    def test_sampling_period(self):
+        tr = Tracer(sample=0.25).enable()
+        ids = [tr.begin_trace() for _ in range(100)]
+        assert sum(1 for i in ids if i) == 25
+        # 1-in-4: every 4th decision samples, starting with the first
+        assert ids[0] > 0 and ids[1] == 0
+
+        with pytest.raises(ValueError):
+            tr.configure(sample=0.0)
+        with pytest.raises(ValueError):
+            tr.configure(sample=1.5)
+
+    def test_ring_buffer_bounded(self):
+        tr = Tracer(capacity=16).enable()
+        for i in range(100):
+            with tr.span("s", i=i):
+                pass
+        assert len(tr) == 16
+        spans = tr.spans()   # non-destructive
+        assert len(tr) == 16
+        assert [s.args["i"] for s in spans] == list(range(84, 100))
+        assert len(tr.drain()) == 16
+        assert len(tr) == 0
+
+    def test_record_batch(self):
+        tr = Tracer().enable()
+        tid = tr.begin_trace()
+        rid = tr.alloc_id()
+        tr.record_batch(tid, [
+            ("queue_wait", 0.0, 0.1, 0, rid, None),
+            ("score", 0.1, 0.2, 0, rid, {"batch": 4}),
+            ("request", 0.0, 0.3, rid, 0, {"cached": False}),
+        ])
+        spans = tr.drain()
+        assert [s.name for s in spans] == ["queue_wait", "score", "request"]
+        assert all(s.trace_id == tid for s in spans)
+        # zero span_id allocates; explicit span_id is preserved
+        assert spans[2].span_id == rid
+        assert spans[0].span_id not in (0, rid)
+        assert spans[0].parent_id == rid
+        assert spans[1].args == {"batch": 4}
+        assert spans[0].args == {}
+        # unsampled trace: nothing emitted
+        tr.record_batch(0, [("x", 0.0, 1.0, 0, 0, None)])
+        assert tr.drain() == []
+
+    def test_negative_duration_clamped(self):
+        tr = Tracer().enable()
+        tid = tr.begin_trace()
+        tr.record("clock_skew", 5.0, -0.001, trace=tid)
+        (s,) = tr.drain()
+        assert s.dur_ns == 0
+
+
+# ---- exporters ------------------------------------------------------------
+
+
+def _sample_spans():
+    tr = Tracer().enable()
+    tid = tr.begin_trace()
+    rid = tr.alloc_id()
+    tr.record_batch(tid, [
+        ("queue_wait", 1.0, 0.010, 0, rid, None),
+        ("flush_wait", 1.010, 0.002, 0, rid, None),
+        ("score", 1.012, 0.030, 0, rid, {"batch": 8}),
+        ("merge", 1.042, 0.001, 0, rid, None),
+        ("request", 1.0, 0.043, rid, 0,
+         {"k": 5, "generation": 3, "cached": False}),
+    ])
+    return tr.drain()
+
+
+class TestChromeTrace:
+    def test_round_trip_lossless(self, tmp_path):
+        spans = _sample_spans()
+        path = str(tmp_path / "trace.json")
+        assert write_chrome_trace(path, spans) == len(spans)
+        loaded = load_chrome_trace(path)
+        assert len(loaded) == len(spans)
+        for a, b in zip(spans, loaded):
+            assert isinstance(b, SpanRecord)
+            assert b.name == a.name
+            assert b.trace_id == a.trace_id
+            assert b.span_id == a.span_id
+            assert b.parent_id == a.parent_id
+            assert b.args == a.args
+            # ts/dur ride as microsecond floats: ~1 ns quantization
+            assert abs(b.t0_ns - a.t0_ns) <= 1
+            assert abs(b.dur_ns - a.dur_ns) <= 1
+
+    def test_perfetto_schema(self):
+        doc = chrome_trace(_sample_spans())
+        assert set(doc) == {"traceEvents", "displayTimeUnit"}
+        for ev in doc["traceEvents"]:
+            assert ev["ph"] == "X"
+            assert ev["cat"] == "ragdb"
+            assert {"name", "ts", "dur", "pid", "tid", "args"} <= set(ev)
+        json.dumps(doc)  # must be serializable as-is
+
+    def test_foreign_events_skipped(self, tmp_path):
+        path = str(tmp_path / "mixed.json")
+        with open(path, "w") as f:
+            json.dump({"traceEvents": [
+                {"name": "other", "ph": "M", "ts": 0},
+                {"name": "noids", "ph": "X", "ts": 0, "dur": 1, "args": {}},
+            ]}, f)
+        assert load_chrome_trace(path) == []
+
+
+class TestBreakdown:
+    def test_stage_breakdown_stats(self):
+        br = stage_breakdown(_sample_spans())
+        assert set(br) == {"queue_wait", "flush_wait", "score",
+                           "merge", "request"}
+        s = br["score"]
+        assert s["count"] == 1
+        assert s["p50_s"] == s["p99_s"] == s["max_s"] == pytest.approx(0.030)
+
+    def test_request_decomposition_tiles(self):
+        reqs = request_decomposition(_sample_spans())
+        assert len(reqs) == 1
+        r = reqs[0]
+        assert r["stage_sum_s"] == pytest.approx(r["request_s"], abs=1e-9)
+        assert set(r["stages_s"]) == {"queue_wait", "flush_wait",
+                                      "score", "merge"}
+
+    def test_cached_requests_excluded(self):
+        tr = Tracer().enable()
+        tid = tr.begin_trace()
+        tr.record("request", 0.0, 0.001, trace=tid, cached=True)
+        assert request_decomposition(tr.drain()) == []
+
+    def test_cli(self, tmp_path, capsys):
+        path = str(tmp_path / "trace.json")
+        write_chrome_trace(path, _sample_spans())
+        assert obs_main([path]) == 0
+        out = capsys.readouterr().out
+        assert "queue_wait" in out and "p50_ms" in out
+        assert "100.0% of end-to-end" in out
+
+        assert obs_main([path, "--json"]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        assert "stages" in doc and "requests" in doc
+
+        assert obs_main([str(tmp_path / "missing.json")]) == 2
+
+
+# ---- metrics registry -----------------------------------------------------
+
+
+class TestMetricsRegistry:
+    def test_get_or_create_identity(self):
+        reg = MetricsRegistry()
+        a = reg.counter("reqs_total", "help text", outcome="ok")
+        b = reg.counter("reqs_total", outcome="ok")
+        assert a is b
+        c = reg.counter("reqs_total", outcome="err")
+        assert c is not a
+        a.inc()
+        a.inc(2)
+        c.inc()
+        snap = reg.snapshot()
+        assert snap["reqs_total{outcome=ok}"] == 3
+        assert snap["reqs_total{outcome=err}"] == 1
+
+    def test_kind_mismatch_rejected(self):
+        reg = MetricsRegistry()
+        reg.counter("x_total")
+        with pytest.raises(ValueError, match="counter"):
+            reg.gauge("x_total")
+
+    def test_gauge_and_histogram_snapshot_keys(self):
+        reg = MetricsRegistry()
+        reg.gauge("lag_seconds").set(1.5)
+        reg.histogram("lat_seconds").record(0.01)
+        snap = reg.snapshot()
+        assert snap["lag_seconds"] == 1.5
+        assert snap["lat_seconds_count"] == 1
+        assert snap["lat_seconds_sum"] == pytest.approx(0.01)
+        assert {"lat_seconds_p50", "lat_seconds_p99",
+                "lat_seconds_max", "lat_seconds_mean"} <= set(snap)
+
+    def test_prometheus_rendering(self):
+        reg = MetricsRegistry()
+        reg.counter("ragdb_x_total", "things", kind="a").inc(4)
+        reg.gauge("ragdb_lag_seconds").set(0.25)
+        h = reg.histogram("ragdb_lat_seconds")
+        h.record(0.02)
+        text = render_prometheus(reg)
+        assert "# HELP ragdb_x_total things" in text
+        assert "# TYPE ragdb_x_total counter" in text
+        assert 'ragdb_x_total{kind="a"} 4' in text
+        assert "ragdb_lag_seconds 0.25" in text
+        # histograms render summary-style
+        assert "# TYPE ragdb_lat_seconds summary" in text
+        assert 'ragdb_lat_seconds{quantile="0.5"}' in text
+        assert 'ragdb_lat_seconds{quantile="0.99"}' in text
+        assert "ragdb_lat_seconds_count 1" in text
+        assert "ragdb_lat_seconds_sum 0.02" in text
+        assert text.endswith("\n")
+
+    def test_multi_registry_rendering(self):
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.counter("a_total").inc()
+        b.counter("b_total").inc()
+        text = render_prometheus(a, b)
+        assert "a_total 1" in text and "b_total 1" in text
+
+    def test_global_registry_is_singleton(self):
+        assert global_registry() is global_registry()
+
+
+# ---- LogHistogram edge cases ---------------------------------------------
+
+
+class TestLogHistogram:
+    def test_overflow_bucket(self):
+        # beyond the last bound (~79 s) lands in the overflow bucket;
+        # percentiles there report the observed max, not a midpoint
+        h = LogHistogram()
+        assert 100.0 > h.bounds[-1]
+        h.record(100.0)
+        h.record(250.0)
+        assert h.n == 2
+        assert h.counts[h.N_BUCKETS] == 2
+        assert h.percentile(50) == 250.0
+        assert h.percentile(99) == 250.0
+
+    def test_percentile_monotonic_in_q(self):
+        h = LogHistogram()
+        for i in range(1, 1001):
+            h.record(i * 1e-4)  # 0.1 ms .. 100 ms
+        prev = 0.0
+        for q in range(0, 101, 5):
+            p = h.percentile(q)
+            assert p >= prev
+            prev = p
+        assert h.percentile(0) >= h.min
+        assert h.percentile(100) <= h.max
+
+    def test_single_sample_clamp(self):
+        h = LogHistogram()
+        h.record(0.0123)
+        assert h.percentile(50) == 0.0123
+        assert h.percentile(99) == 0.0123
+        assert h.percentile(99) == h.max
+        assert h.mean == 0.0123
+
+    def test_empty(self):
+        h = LogHistogram()
+        assert h.percentile(50) == 0.0
+        assert h.mean == 0.0
+        assert h.snapshot()["count"] == 0
+
+    def test_concurrent_record_vs_snapshot(self):
+        # record() and snapshot() share one lock: a snapshot taken
+        # mid-stream must always be internally coherent (count == sum
+        # of bucket counts implied by sum/mean relationship holds)
+        h = LogHistogram()
+        stop = threading.Event()
+        errors = []
+
+        def writer():
+            i = 0
+            while not stop.is_set():
+                h.record(0.001 * (1 + i % 50))
+                i += 1
+
+        def reader():
+            try:
+                for _ in range(200):
+                    s = h.snapshot()
+                    assert s["count"] >= 0
+                    if s["count"]:
+                        assert s["mean"] == pytest.approx(
+                            s["sum"] / s["count"])
+                        assert 0 < s["p50"] <= s["max"]
+                        assert s["p50"] <= s["p99"] <= s["max"]
+            except Exception as exc:  # surfaced to the main thread
+                errors.append(exc)
+
+        threads = [threading.Thread(target=writer) for _ in range(2)]
+        threads += [threading.Thread(target=reader) for _ in range(2)]
+        for t in threads:
+            t.start()
+        for t in threads[2:]:
+            t.join()
+        stop.set()
+        for t in threads[:2]:
+            t.join()
+        assert errors == []
+
+
+# ---- ServingMetrics regression -------------------------------------------
+
+
+class TestServingMetricsFormat:
+    def test_format_includes_failed(self):
+        m = ServingMetrics()
+        m.on_submit()
+        m.on_fail()
+        text = m.format()
+        assert "1 failed" in text
+        assert m.snapshot()["failed"] == 1
+
+    def test_render_prometheus_exposition(self):
+        m = ServingMetrics()
+        m.on_submit()
+        m.on_complete(0.005)
+        text = m.render()
+        assert "ragdb_serving_requests_total 1" in text
+        assert "ragdb_serving_completed_total 1" in text
+        assert "ragdb_serving_latency_seconds_count 1" in text
