@@ -289,7 +289,210 @@ def bench_serving_traced(smoke: bool = False, trace_path: str | None = None,
     ]
 
 
-ALL = [bench_serving_closed, bench_serving_open, bench_serving_traced]
+# --------------------------------------------------------------------------
+# multi-tenant sweep (tenancy plane, docs/ARCHITECTURE.md §13)
+# --------------------------------------------------------------------------
+
+# (tenant counts, resident budget, docs per tenant, requests per leg)
+MT_FULL = ((1, 8, 64), 8, 200, 384)
+MT_SMOKE = ((1, 4, 16), 4, 40, 128)
+MT_ZIPF_SKEW = 1.1
+
+
+def _zipf_picks(rng, n_tenants: int, n: int) -> list[int]:
+    """Zipf-skewed tenant choices: rank r drawn ∝ 1/(r+1)^skew — a few
+    hot tenants plus a long cold tail, the shape that actually stresses
+    an LRU resident set."""
+    weights = [1.0 / (r + 1) ** MT_ZIPF_SKEW for r in range(n_tenants)]
+    return rng.choices(range(n_tenants), weights=weights, k=n)
+
+
+def _tenant_name(i: int) -> str:
+    return f"t{i:03d}"
+
+
+def _seed_tenant_fleet(root: str, n_tenants: int, n_docs: int, dim: int):
+    """Write one durable container per tenant (equal corpus sizes, so
+    every tenant traces the same jit bucket set — remounts are
+    recompile-free by construction); returns the query texts."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.tenancy import ContainerPool
+
+    docs, entities = make_corpus(n_docs=n_docs, n_entities=8, seed=0)
+    queries = [f"lookup {code} status report" for code in entities]
+    pool = ContainerPool(root, kb_kwargs={"dim": dim},
+                         registry=MetricsRegistry(),
+                         max_resident=n_tenants + 1, scoring_path="gemm")
+    for t in range(n_tenants):
+        name = _tenant_name(t)
+        with pool.pinned(name) as mt:
+            for i, d in enumerate(docs):
+                mt.kb.add_text(f"doc_{i:05d}.txt", f"{d} tenant {name}")
+            mt.snapshots.publish(durable=True)
+    pool.drain()
+    return queries
+
+
+def _mt_runtime(root: str, dim: int, budget: int, deadline_s: float):
+    """A fresh pool (isolated metrics registry per leg) + runtime."""
+    from repro.obs.metrics import MetricsRegistry
+    from repro.tenancy import ContainerPool
+
+    reg = MetricsRegistry()
+    pool = ContainerPool(root, kb_kwargs={"dim": dim}, registry=reg,
+                         max_resident=budget, scoring_path="gemm")
+    rt = ServingRuntime(pool=pool, max_batch=16, flush_deadline=deadline_s,
+                        max_queue=4096, result_cache_size=0)
+    return rt, pool, reg
+
+
+def _mt_warm(rt, queries, tenant: str) -> None:
+    """Warm the shared bucket set through one tenant (all tenants have
+    equal corpus shapes) and arm the recompile guard when sanitizers
+    are on — steady-state mounts/evictions must then stay trace-free."""
+    b = 1
+    while b <= rt.scheduler.max_batch:
+        rt.query_batch([queries[i % len(queries)] for i in range(b)],
+                       k=K, tenant=tenant)
+        b *= 2
+    if sanitizers.enabled():
+        rt.arm_sanitizers(k=K, tenants=[tenant])
+    rt.metrics.reset()
+
+
+def _mt_closed_loop(rt, queries, picks: list[int], n_workers: int) -> float:
+    """Closed loop with a pre-drawn zipf tenant schedule; returns
+    wall-clock seconds."""
+    counter = {"i": 0}
+    lock = threading.Lock()
+
+    def worker(wid: int):
+        while True:
+            with lock:
+                i = counter["i"]
+                if i >= len(picks):
+                    return
+                counter["i"] = i + 1
+            rt.submit(queries[(i * 7 + wid) % len(queries)], k=K,
+                      tenant=_tenant_name(picks[i])).result(timeout=120)
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(n_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def bench_serving_multitenant(smoke: bool = False):
+    """N tenants through one runtime: zipf-skewed traffic over a
+    bounded resident set.  Reports per-leg throughput, worst per-tenant
+    p99, mount (cold-start/remount) and evict latency percentiles, and
+    an isolation gate: a hot tenant hammering the scheduler must leave
+    an unrelated tenant's p99 within 2x of that tenant's solo run.
+    """
+    import random
+    import tempfile
+
+    tenant_counts, budget, n_docs, n_requests = MT_SMOKE if smoke else MT_FULL
+    _, dim, _, n_workers, _ = SMOKE if smoke else FULL
+    deadline_s = 0.002
+    rows = []
+    with tempfile.TemporaryDirectory(prefix="ragdb_mt_bench_") as root:
+        queries = _seed_tenant_fleet(root, max(tenant_counts), n_docs, dim)
+
+        for n_tenants in tenant_counts:
+            rt, pool, reg = _mt_runtime(root, dim, budget, deadline_s)
+            picks = _zipf_picks(random.Random(1234), n_tenants, n_requests)
+            with rt:
+                _mt_warm(rt, queries, _tenant_name(0))
+                dt = _mt_closed_loop(rt, queries, picks, n_workers)
+                per_tenant = rt.tenant_metrics()
+            pool.drain()
+            worst_p99 = max(s["latency_p99_ms"] for s in per_tenant.values())
+            # mount/evict latency straight off the pool's histograms
+            # (the leg's private registry, so legs never cross-talk);
+            # mount covers both cold starts and post-evict remounts
+            mount_h = reg.histogram("ragdb_tenant_mount_seconds")
+            evict_h = reg.histogram("ragdb_tenant_evict_seconds")
+            rows.append((
+                f"serving_mt_{n_tenants}t_budget{budget}_{n_docs}docs",
+                dt / n_requests * 1e6,
+                f"qps={n_requests / dt:.0f}"
+                f"_tenants_hit={len(per_tenant)}"
+                f"_worst_p99ms={worst_p99:.2f}"
+                f"_mounts={mount_h.n}"
+                f"_mount_p99ms={mount_h.percentile(99) * 1e3:.2f}"
+                f"_evictions={evict_h.n}"
+                f"_evict_p99ms={evict_h.percentile(99) * 1e3:.2f}",
+            ))
+
+        # isolation: solo baseline for the observed tenant, then the
+        # same paced load while a hot tenant saturates the scheduler
+        rate = 50.0
+        n_cold = max(n_requests // 2, 64)
+        cold, hot = _tenant_name(0), _tenant_name(1)
+
+        def paced_cold(rt) -> None:
+            period = 1.0 / rate
+            futures = []
+            t0 = time.perf_counter()
+            for i in range(n_cold):
+                delay = t0 + i * period - time.perf_counter()
+                if delay > 0:
+                    time.sleep(delay)
+                futures.append(rt.submit(queries[i % len(queries)], k=K,
+                                         tenant=cold))
+            for f in futures:
+                f.result(timeout=120)
+
+        rt, pool, _ = _mt_runtime(root, dim, budget, deadline_s)
+        with rt:
+            _mt_warm(rt, queries, cold)
+            paced_cold(rt)
+            solo_p99 = rt.tenant_metrics()[cold]["latency_p99_ms"]
+        pool.drain()
+
+        rt, pool, _ = _mt_runtime(root, dim, budget, deadline_s)
+        with rt:
+            _mt_warm(rt, queries, cold)
+            rt.query_batch(queries[:1], k=K, tenant=hot)  # mount hot
+            rt.metrics.reset()
+            hot_picks = [1] * (n_requests * 2)
+            hot_thread = threading.Thread(
+                target=_mt_closed_loop,
+                args=(rt, queries, hot_picks, n_workers))
+            hot_thread.start()
+            paced_cold(rt)
+            hot_thread.join()
+            m = rt.tenant_metrics()
+            cold_p99 = m[cold]["latency_p99_ms"]
+            hot_qps = m[hot]["qps"]
+        pool.drain()
+
+        # the gate: overload on one tenant must not starve another.
+        # Floor the baseline at 1 ms so a near-zero solo p99 (tiny
+        # smoke corpora) cannot turn measurement noise into a failure.
+        limit = 2.0 * max(solo_p99, 1.0)
+        assert cold_p99 <= limit, (
+            f"tenant isolation violated: cold-tenant p99 {cold_p99:.2f} ms "
+            f"under hot-tenant overload vs {solo_p99:.2f} ms solo "
+            f"(limit {limit:.2f} ms)"
+        )
+        rows.append((
+            "serving_mt_isolation",
+            0.0,
+            f"solo_p99ms={solo_p99:.2f}_overload_p99ms={cold_p99:.2f}"
+            f"_ratio={cold_p99 / max(solo_p99, 1e-9):.2f}"
+            f"_hot_qps={hot_qps:.0f}",
+        ))
+    return rows
+
+
+ALL = [bench_serving_closed, bench_serving_open, bench_serving_traced,
+       bench_serving_multitenant]
 
 
 def main(argv=None) -> int:
@@ -304,9 +507,16 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-sample", type=float, default=TRACE_SAMPLE,
                     help="request sampling rate for the traced arm "
                     f"(default {TRACE_SAMPLE:g})")
+    ap.add_argument("--only", default=None, metavar="SUFFIX",
+                    help="run just the bench_serving_<SUFFIX> bench "
+                    "(closed | open | traced | multitenant)")
     args = ap.parse_args(argv)
+    benches = ALL if args.only is None else [
+        fn for fn in ALL if fn.__name__ == f"bench_serving_{args.only}"]
+    if not benches:
+        ap.error(f"unknown bench suffix {args.only!r}")
     print("name,us_per_call,derived")
-    for fn in ALL:
+    for fn in benches:
         kwargs = {"smoke": args.smoke}
         if fn is bench_serving_traced:
             kwargs["trace_path"] = args.trace

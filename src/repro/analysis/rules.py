@@ -1,4 +1,4 @@
-"""The invariant rules (R1–R5).  See docs/ARCHITECTURE.md §11 for the
+"""The invariant rules (R1–R6).  See docs/ARCHITECTURE.md §11 for the
 rationale table; each rule's ``rationale`` string is the one-line form.
 
 Every rule is a conservative *syntactic* checker: it flags the pattern
@@ -510,10 +510,151 @@ class HostSyncRule(Rule):
         return out
 
 
+# --------------------------------------------------------------------------
+# R6 — tenant pool pin/lock discipline
+# --------------------------------------------------------------------------
+
+_POOL_CLASS = "ContainerPool"
+_POOL_STATE = "_resident"
+_POOL_GUARD = "_pool_guard"
+# OrderedDict mutators split by severity: removals tear a mount down
+# (must be pins-checked eviction paths), reorders/inserts merely need
+# the pool guard
+_POOL_REMOVALS = {"pop", "popitem", "clear"}
+_POOL_MUTATORS = _POOL_REMOVALS | {"update", "setdefault", "move_to_end"}
+
+
+def _resident_attr(node: ast.AST) -> bool:
+    return isinstance(node, ast.Attribute) and node.attr == _POOL_STATE
+
+
+def _resident_mutations(fn: ast.FunctionDef) -> tuple[bool, bool]:
+    """(mutates, removes) for direct ``<expr>._resident`` operations in
+    ``fn``: subscript/attribute stores, ``del``, and the dict-mutator
+    method calls."""
+    mutates = removes = False
+    for node in ast.walk(fn):
+        targets: list[ast.AST] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            targets = [node.target]
+        elif isinstance(node, ast.Delete):
+            targets = list(node.targets)
+            for t in targets:
+                probe = t.value if isinstance(t, ast.Subscript) else t
+                if _resident_attr(probe):
+                    mutates = removes = True
+            continue
+        for t in targets:
+            probe = t.value if isinstance(t, ast.Subscript) else t
+            if _resident_attr(probe):
+                mutates = True
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in _POOL_MUTATORS
+                and _resident_attr(node.func.value)):
+            mutates = True
+            if node.func.attr in _POOL_REMOVALS:
+                removes = True
+    return mutates, removes
+
+
+def _holds_pool_guard(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.With):
+            for item in node.items:
+                expr = item.context_expr
+                if (isinstance(expr, ast.Call)
+                        and isinstance(expr.func, ast.Attribute)
+                        and expr.func.attr == _POOL_GUARD
+                        and isinstance(expr.func.value, ast.Name)
+                        and expr.func.value.id == "self"):
+                    return True
+    return False
+
+
+def _has_pins_check(fn: ast.FunctionDef) -> bool:
+    """A refcount comparison against a ``pins`` attribute anywhere in
+    the function (``if mt.pins > 0: raise`` / ``assert mt.pins == 0`` /
+    the LRU scan's ``if mt.pins == 0``)."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Compare):
+            operands = [node.left, *node.comparators]
+            if any(isinstance(o, ast.Attribute) and o.attr == "pins"
+                   for o in operands):
+                return True
+    return False
+
+
+class TenantPinRule(Rule):
+    """R6: pool residency transitions hold the guard; eviction paths
+    carry the refcount check."""
+
+    id = "tenant-pin"
+    title = "Tenant pool pin/evict discipline"
+    rationale = (
+        "A tenant mount serving an in-flight flush holds a refcount "
+        "pin; evicting it anyway tears the snapshot stack under the "
+        "flush, and mutating the pool's resident map outside its guard "
+        "races pin/evict transitions.  `ContainerPool._resident` may "
+        "be mutated only inside the pool, under `with "
+        "self._pool_guard(...)` (or in `*_locked` helpers called under "
+        "it), and every method that removes a mount must contain an "
+        "explicit `pins == 0` refcount comparison before teardown."
+    )
+    scope = ("*",)
+
+    def check(self, tree: ast.Module, relpath: str) -> list[Finding]:
+        out: list[Finding] = []
+        pool_fns: set[int] = set()
+        for cls in ast.walk(tree):
+            if not isinstance(cls, ast.ClassDef) or cls.name != _POOL_CLASS:
+                continue
+            for fn in cls.body:
+                if not isinstance(fn, ast.FunctionDef):
+                    continue
+                pool_fns.add(id(fn))
+                mutates, removes = _resident_mutations(fn)
+                if fn.name == "__init__":
+                    continue  # construction: the map is not shared yet
+                if mutates and not (fn.name.endswith("_locked")
+                                    or _holds_pool_guard(fn)):
+                    out.append(self.finding(
+                        relpath, fn,
+                        f"`{_POOL_CLASS}.{fn.name}` mutates "
+                        f"`{_POOL_STATE}` without `with "
+                        f"self.{_POOL_GUARD}(...)` (and is not a "
+                        "`*_locked` helper called under it)",
+                    ))
+                if removes and not _has_pins_check(fn):
+                    out.append(self.finding(
+                        relpath, fn,
+                        f"`{_POOL_CLASS}.{fn.name}` removes a mount "
+                        f"from `{_POOL_STATE}` without a `pins == 0` "
+                        "refcount check — eviction may never tear a "
+                        "pinned snapshot stack",
+                    ))
+        # outside the pool class, _resident is read-only everywhere
+        for fn in walk_functions(tree):
+            if id(fn) in pool_fns:
+                continue
+            mutates, _ = _resident_mutations(fn)
+            if mutates:
+                out.append(self.finding(
+                    relpath, fn,
+                    f"direct `{_POOL_STATE}` mutation outside "
+                    f"`{_POOL_CLASS}` — all residency transitions go "
+                    "through the pool's pin/unpin/evict API",
+                ))
+        return out
+
+
 RULES: tuple[Rule, ...] = (
     PinnedReductionRule(),
     WriterLockRule(),
     DurabilityRule(),
     SnapshotMutationRule(),
     HostSyncRule(),
+    TenantPinRule(),
 )

@@ -250,7 +250,18 @@ def score_batch_arrays(
     callers pass n_docs == rows, a bit-exact no-op).  ``kernel_operands``
     is the optional pre-padded (block-aligned) doc operand pair for the
     kernel path.
+
+    ``n_docs == 0`` (a freshly-mounted empty tenant container, or a
+    corpus whose every doc was removed) short-circuits to empty [B, 0]
+    result arrays on every path: the padded-bucket dispatch would
+    otherwise ask top_k for k of 0 candidate columns and trip inside
+    the jitted function.
     """
+    if n_docs <= 0:
+        b = int(np.asarray(qv).shape[0])
+        empty_f = np.zeros((b, 0), dtype=np.float32)
+        empty_i = np.zeros((b, 0), dtype=np.int32)
+        return empty_f, empty_i, empty_f.copy(), empty_f.copy()
     with obs_trace.span("device_dispatch", path=scoring_path,
                         rows=int(n_docs), k=k):
         if scoring_path == "kernel":

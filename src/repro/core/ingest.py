@@ -518,6 +518,20 @@ class KnowledgeBase:
     def n_docs(self) -> int:
         return len(self.records)
 
+    @property
+    def unpersisted_changes(self) -> bool:
+        """True when this KB holds state the persistence chain does not:
+        mutations since the last save/save_delta, index-state movement,
+        or any content on a KB that has never been persisted at all.
+        The tenancy pool consults this before an eviction so unmounting
+        a never-touched tenant does not write an empty container.
+        Writer-thread accuracy only (single-writer contract above)."""
+        if self._persisted_path is None:
+            return self._version > 0 or bool(self.records)
+        return (self._version != self._persisted_version
+                or self._persisted_ids != set(self.records)
+                or self._index_rev > self._index_persisted_rev)
+
     # ---- clustered-index state (written by core/engine.py) --------------
 
     def set_index_state(self, state: dict) -> None:

@@ -65,6 +65,22 @@ def main(argv=None):
                     help="cluster shards for index=ivf-sharded (default: "
                     "the jax device count; falls back to a logical "
                     "per-shard loop when devices are fewer)")
+    ap.add_argument("--tenant-root", default=None, metavar="DIR",
+                    help="serve multi-tenant: one container pool rooted "
+                    "here (<DIR>/<tenant>.ragdb per tenant), lazy mounts "
+                    "+ LRU eviction under --resident-budget "
+                    "(docs/ARCHITECTURE.md §13); queries round-robin "
+                    "over --tenants tenant ids")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="tenant count to drive in --tenant-root mode")
+    ap.add_argument("--resident-budget", type=int, default=8,
+                    help="max tenants mounted at once (LRU beyond this)")
+    ap.add_argument("--quota-rate", type=float, default=None,
+                    help="per-tenant admission quota: sustained "
+                    "requests/s (token bucket; rejections surface as "
+                    "RequestRejected)")
+    ap.add_argument("--quota-burst", type=int, default=None,
+                    help="per-tenant quota burst size (default: rate)")
     ap.add_argument("--metrics", action="store_true",
                     help="print the Prometheus exposition (serving "
                     "registry + global obs registry) and the engine's "
@@ -78,6 +94,9 @@ def main(argv=None):
 
     if args.trace:
         obs_trace.enable()
+
+    if args.tenant_root:
+        return _serve_multitenant(args)
 
     if args.container:
         kb = KnowledgeBase.load(args.container)
@@ -144,6 +163,83 @@ def main(argv=None):
         print("index stats: " + ", ".join(
             f"{k}={v}" for k, v in stats.items()))
         print(runtime.render_metrics(), end="")
+    if args.trace:
+        spans = obs_trace.get().drain()
+        n = write_chrome_trace(args.trace, spans)
+        print(f"trace: {n} events → {args.trace}")
+        print(format_breakdown(spans))
+    return 0
+
+
+def _serve_multitenant(args) -> int:
+    """N tenants through one runtime: pool-mounted containers, queries
+    round-robined over the tenant ids (retrieval plane only — per-tenant
+    LM generation composes the same way the single-tenant path does)."""
+    from repro.tenancy import ContainerPool, TenantQuotas
+
+    pool = ContainerPool(
+        args.tenant_root,
+        kb_kwargs={"dim": args.dim},
+        max_resident=max(1, args.resident_budget),
+        scoring_path="kernel" if args.use_kernel else args.scoring_path,
+        index=args.index,
+        nprobe=args.nprobe,
+        guarantee=args.guarantee,
+        **({"n_shards": args.shards}
+           if args.index == "ivf-sharded" and args.shards else {}),
+    )
+    quotas = None
+    if args.quota_rate:
+        quotas = TenantQuotas(default_rate=args.quota_rate,
+                              default_burst=args.quota_burst)
+    runtime = ServingRuntime(
+        pool=pool, quotas=quotas,
+        max_batch=max(1, args.max_batch),
+        flush_deadline=args.flush_deadline_ms / 1e3,
+    )
+    names = [f"tenant{i:02d}" for i in range(max(1, args.tenants))]
+    with runtime:
+        if args.corpus:
+            for name in names:
+                with runtime.tenant_writer(name) as kb:
+                    stats = kb.sync(args.corpus)
+                runtime.publish(tenant=name, durable=True)
+                print(f"[{name}] sync: +{stats.added} ~{stats.updated} "
+                      f"-{stats.removed} → durable publish")
+        print(f"serving {len(names)} tenants "
+              f"(resident budget {pool.max_resident}, "
+              f"flush ≤ {args.flush_deadline_ms:.1f} ms, "
+              f"batch ≤ {args.max_batch})")
+        t0 = time.perf_counter()
+        futures = []
+        for i, q in enumerate(args.queries):
+            name = names[i % len(names)]
+            try:
+                futures.append(
+                    (name, q, runtime.submit(q, k=args.top_k, tenant=name)))
+            except RequestRejected as exc:
+                print(f"REJECTED [{exc.tenant}] {q!r}: {exc}")
+        for name, q, fut in futures:
+            served = fut.result()
+            print(f"\n[{name}] Q: {q}  [generation {served.generation}"
+                  f"{', cached' if served.cached else ''}]")
+            for r in served.results:
+                mark = "*" if r.boosted else " "
+                print(f"  {mark} {r.doc_id:30s} score={r.score:.4f}")
+        dt = time.perf_counter() - t0
+        print(f"\n{len(futures)} requests in {dt * 1e3:.1f} ms")
+        print(f"serving metrics: {runtime.metrics.format()}")
+        for name, m in sorted(runtime.tenant_metrics().items()):
+            print(f"  [{name}] qps={m['qps']:.0f} "
+                  f"p50={m['latency_p50_ms']:.2f}ms "
+                  f"p99={m['latency_p99_ms']:.2f}ms "
+                  f"rejected={m['rejected']}")
+        ps = runtime.pool_stats()
+        print(f"pool: {ps['resident']}/{ps['max_resident']} resident, "
+              f"{ps['resident_bytes']} bytes, pinned={ps['pinned']}")
+        if args.metrics:
+            print(runtime.render_metrics(), end="")
+    pool.drain()  # durably publish + unmount everything on the way out
     if args.trace:
         spans = obs_trace.get().drain()
         n = write_chrome_trace(args.trace, spans)

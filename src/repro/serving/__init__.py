@@ -32,10 +32,22 @@ the process tracer when ``repro.obs.trace.enable()`` (or
 ``RAGDB_TRACE=1``) is on.  ``render_metrics()`` returns one Prometheus
 text exposition covering both the runtime's registry and the global
 one (IVF search stats, journal bytes, publish lag, sanitizer trips).
+
+Tenancy (docs/ARCHITECTURE.md §13): construct over a
+``tenancy.ContainerPool`` instead of a KB —
+``ServingRuntime(pool=ContainerPool(root), quotas=...)`` — and the
+same runtime multiplexes N tenants: ``submit(text, k, tenant=...)``
+routes through the ``TenantRouter`` (token-bucket admission, lazy
+mount, refcount-pinned flushes), ``publish(tenant=...)`` drives that
+tenant's writer plane, the result cache is keyspace-isolated per
+tenant, and pool evictions drop the evicted tenant's cache keyspace.
+The two construction modes are exclusive; the single-tenant mode is
+bit-identical to the pre-tenancy runtime (parity-tested).
 """
 from __future__ import annotations
 
 from concurrent.futures import Future
+from contextlib import contextmanager
 
 from repro.analysis import sanitizers
 from repro.core.engine import QueryEngine, RetrievalResult  # noqa: F401
@@ -80,6 +92,8 @@ class ServingRuntime:
         kb: KnowledgeBase | None = None,
         *,
         engine: QueryEngine | None = None,
+        pool=None,
+        quotas=None,
         max_batch: int = 16,
         flush_deadline: float = 0.002,
         max_queue: int = 1024,
@@ -89,16 +103,44 @@ class ServingRuntime:
         **engine_kwargs,
     ):
         self.metrics = ServingMetrics()
-        self.snapshots = SnapshotManager(
-            kb, engine=engine, container_path=container_path,
-            compact_ratio=compact_ratio, **engine_kwargs,
-        )
         self.cache = (
             ResultCache(result_cache_size) if result_cache_size else None
         )
         # always constructed (one dict + a lock); inert until armed, and
         # check() additionally no-ops unless RAGDB_SANITIZERS is on
         self.retrace_guard = sanitizers.RetraceGuard()
+        if pool is not None:
+            # multi-tenant mode: the pool owns every KB/engine stack
+            if kb is not None or engine is not None or container_path:
+                raise ValueError(
+                    "pool= is exclusive with kb=/engine=/container_path= "
+                    "— per-tenant stacks are mounted by the ContainerPool")
+            # deferred import: tenancy builds on serving.snapshot, so a
+            # module-level import here would cycle through the package
+            from repro.tenancy.router import TenantRouter
+            self.pool = pool
+            self.router = TenantRouter(pool, quotas=quotas)
+            self.snapshots = None
+            # unmount hygiene: an evicted tenant's cached results leave
+            # memory with its stack (keyspace-scoped, satellite of §13)
+            if self.cache is not None:
+                pool.on_evict = self.cache.drop_keyspace
+            self.scheduler = MicroBatchScheduler(
+                router=self.router,
+                max_batch=max_batch,
+                flush_deadline=flush_deadline,
+                max_queue=max_queue,
+                cache=self.cache,
+                metrics=self.metrics,
+                retrace_guard=self.retrace_guard,
+            )
+            return
+        self.pool = None
+        self.router = None
+        self.snapshots = SnapshotManager(
+            kb, engine=engine, container_path=container_path,
+            compact_ratio=compact_ratio, **engine_kwargs,
+        )
         self.scheduler = MicroBatchScheduler(
             self.snapshots,
             max_batch=max_batch,
@@ -126,59 +168,102 @@ class ServingRuntime:
 
     # ---- request plane (any thread) -------------------------------------
 
-    def submit(self, text: str, k: int = 5) -> Future:
-        """Future[ServedResult]; raises RequestRejected on backpressure."""
-        return self.scheduler.submit(text, k)
+    def submit(self, text: str, k: int = 5,
+               tenant: str | None = None) -> Future:
+        """Future[ServedResult]; raises RequestRejected on backpressure
+        (queue full, or — multi-tenant mode — tenant over quota)."""
+        return self.scheduler.submit(text, k, tenant=tenant)
 
     def query_batch(
-        self, texts: list[str], k: int = 5
+        self, texts: list[str], k: int = 5, tenant: str | None = None
     ) -> list[list[RetrievalResult]]:
         """Blocking convenience: submit all, wait for all.  Same
         signature/result shape as ``QueryEngine.query_batch`` so drivers
         can switch entry points without restructuring."""
-        futures = [self.submit(t, k) for t in texts]
+        futures = [self.submit(t, k, tenant=tenant) for t in texts]
         return [f.result().results for f in futures]
 
     # ---- ingest plane (the single writer thread) ------------------------
 
-    def publish(self, durable: bool = False) -> int:
+    def publish(self, durable: bool = False,
+                tenant: str | None = None) -> int:
         """Refresh the engine from the KB's dirty log and atomically
         publish the next generation; returns the published generation.
-        Call from the same thread that mutates the KB.
+        Call from the same thread that mutates the KB (per tenant, in
+        multi-tenant mode — pass the tenant whose KB you mutated).
 
-        ``durable=True`` (requires ``container_path``) also appends the
-        O(U) delta record to the container's journal, so a crash never
-        loses a published generation — restart with
+        ``durable=True`` (requires ``container_path``; always available
+        in multi-tenant mode, where every mount has its container) also
+        appends the O(U) delta record to the container's journal, so a
+        crash never loses a published generation — restart with
         ``KnowledgeBase.load(container_path)`` to resume exactly there."""
-        gen = self.snapshots.publish(durable=durable).generation
+        if self.router is not None:
+            from repro.tenancy.router import DEFAULT_TENANT
+            gen = self.router.publish(
+                DEFAULT_TENANT if tenant is None else tenant,
+                durable=durable)
+        else:
+            if tenant is not None:
+                raise ValueError(
+                    "tenant= requires multi-tenant mode "
+                    "(ServingRuntime(pool=...))")
+            gen = self.snapshots.publish(durable=durable).generation
         # a new generation may legitimately trace new padded shapes
         # (corpus growth crosses a doc-rows bucket) — disarm the retrace
         # guard; callers re-arm via arm_sanitizers() once re-warmed
         self.retrace_guard.reset()
         return gen
 
+    # ---- tenancy plane ---------------------------------------------------
+
+    @contextmanager
+    def tenant_writer(self, tenant: str):
+        """``with runtime.tenant_writer(t) as kb:`` — pin tenant ``t``
+        (mounting it if cold) and yield its KnowledgeBase for a writer
+        session; follow with ``publish(tenant=t)``.  The pin makes pool
+        eviction of the tenant structurally impossible mid-session.
+        Multi-tenant mode only."""
+        if self.router is None:
+            raise RuntimeError(
+                "tenant_writer requires multi-tenant mode "
+                "(ServingRuntime(pool=...))")
+        with self.router.writer(tenant) as mount:
+            yield mount.kb
+
     # ---- runtime sanitizers ----------------------------------------------
 
-    def arm_sanitizers(self, k: int = 5) -> None:
+    def arm_sanitizers(self, k: int = 5,
+                       tenants: list[str] | None = None) -> None:
         """Warm every query-batch jit bucket the serving loop can emit,
         then baseline the jit caches — after this, any recompile on the
         flush path raises ``sanitizers.SanitizerError`` on the batch
         that caused it (when ``RAGDB_SANITIZERS`` is on).
 
         Warming covers the power-of-two buckets {1, 2, 4, ..,
-        max_batch} at the given ``k`` against the *current* snapshot;
-        this is also the bucket-set pin that keeps steady-state serving
-        recompile-free.  Re-call after every ``publish()`` (which
-        disarms the guard).
+        max_batch} at the given ``k`` against the *current* snapshot —
+        in multi-tenant mode, against every tenant in ``tenants``
+        (default: the resident set), since each tenant's doc-array
+        shapes trace their own jit entries; this is the per-tenant
+        bucket-set pin that keeps steady-state serving recompile-free.
+        Re-call after every ``publish()`` (which disarms the guard).
         """
-        snap = self.snapshots.current
+        if self.router is not None:
+            names = tenants if tenants is not None \
+                else self.pool.resident_tenants()
+            for name in names:
+                with self.pool.pinned(name) as mount:
+                    self._warm_buckets(mount.snapshots.current, k)
+        else:
+            self._warm_buckets(self.snapshots.current, k)
+        self.retrace_guard.arm()
+
+    def _warm_buckets(self, snap, k: int) -> None:
         b = 1
         while True:
             snap.query_batch(["warmup bucket probe"] * b, k)
             if b >= self.scheduler.max_batch:
                 break
             b *= 2
-        self.retrace_guard.arm()
 
     # ---- introspection ---------------------------------------------------
 
@@ -196,10 +281,30 @@ class ServingRuntime:
         on a flat index or before the first ivf dispatch."""
         return self.engine.index_stats()
 
+    def tenant_metrics(self) -> dict:
+        """Per-tenant QPS/p50/p99/rejections (multi-tenant mode;
+        empty dict on the single-tenant path)."""
+        return self.metrics.tenant_snapshot()
+
+    def pool_stats(self) -> dict:
+        """The container pool's resident/pinned/byte accounting
+        (multi-tenant mode only)."""
+        if self.pool is None:
+            raise RuntimeError("pool_stats requires multi-tenant mode")
+        return self.pool.stats()
+
     @property
     def engine(self) -> QueryEngine:
+        if self.snapshots is None:
+            raise RuntimeError(
+                "no single engine in multi-tenant mode — pin a tenant "
+                "via tenant_writer()/pool.pinned() for its stack")
         return self.snapshots.engine
 
     @property
     def generation(self) -> int:
+        if self.snapshots is None:
+            raise RuntimeError(
+                "no single generation in multi-tenant mode — use "
+                "pool.peek_generation(tenant)")
         return self.snapshots.generation

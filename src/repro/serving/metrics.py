@@ -44,6 +44,10 @@ class ServingMetrics:
         self.registry.reset()
         reg = self.registry
         self._t0 = time.perf_counter()
+        # per-tenant labeled series, memoized (one dict probe per hook
+        # call instead of a registry lock round-trip); populated only
+        # when the scheduler runs in router (multi-tenant) mode
+        self._tenant_series: dict[str, dict] = {}
         self._requests = reg.counter(
             "ragdb_serving_requests_total", "requests submitted")
         self._completed = reg.counter(
@@ -69,24 +73,62 @@ class ServingMetrics:
             "ragdb_serving_latency_seconds",
             "end-to-end request latency (submit -> future resolved)")
 
+    # ---- per-tenant labeled series (router mode) ------------------------
+
+    def _tenant(self, tenant: str) -> dict:
+        s = self._tenant_series.get(tenant)
+        if s is None:
+            reg = self.registry
+            s = {
+                "requests": reg.counter(
+                    "ragdb_tenant_requests_total",
+                    "requests submitted per tenant", tenant=tenant),
+                "completed": reg.counter(
+                    "ragdb_tenant_completed_total",
+                    "futures resolved ok per tenant", tenant=tenant),
+                "rejected": reg.counter(
+                    "ragdb_tenant_rejected_total",
+                    "quota/queue rejections per tenant", tenant=tenant),
+                "latency": reg.histogram(
+                    "ragdb_tenant_latency_seconds",
+                    "end-to-end request latency per tenant",
+                    tenant=tenant),
+            }
+            self._tenant_series[tenant] = s
+        return s
+
     # ---- recording hooks (scheduler) -----------------------------------
+    #
+    # ``tenant=None`` (the single-tenant scheduler) records exactly the
+    # pre-tenancy series — no labeled duplicates, bit-identical
+    # exposition.  Router mode passes the tenant id and every hook
+    # additionally records the per-tenant labeled series.
 
-    def on_submit(self) -> None:
+    def on_submit(self, tenant: str | None = None) -> None:
         self._requests.inc()
+        if tenant is not None:
+            self._tenant(tenant)["requests"].inc()
 
-    def on_cache_hit(self, latency_s: float = 0.0) -> None:
+    def on_cache_hit(self, latency_s: float = 0.0,
+                     tenant: str | None = None) -> None:
         """A submit-time cache hit completes immediately; its (near-zero)
         latency is recorded so the histogram covers the same request
         population as ``completed``/``qps``."""
         self._cache_hits.inc()
         self._completed.inc()
         self._latency.record(latency_s)
+        if tenant is not None:
+            s = self._tenant(tenant)
+            s["completed"].inc()
+            s["latency"].record(latency_s)
 
     def on_cache_miss(self) -> None:
         self._cache_misses.inc()
 
-    def on_reject(self) -> None:
+    def on_reject(self, tenant: str | None = None) -> None:
         self._rejected.inc()
+        if tenant is not None:
+            self._tenant(tenant)["rejected"].inc()
 
     def on_batch(self, occupancy: int, scored: int) -> None:
         self._batches.inc()
@@ -95,9 +137,14 @@ class ServingMetrics:
         if occupancy > self._occupancy_max.value:
             self._occupancy_max.set(occupancy)
 
-    def on_complete(self, latency_s: float) -> None:
+    def on_complete(self, latency_s: float,
+                    tenant: str | None = None) -> None:
         self._completed.inc()
         self._latency.record(latency_s)
+        if tenant is not None:
+            s = self._tenant(tenant)
+            s["completed"].inc()
+            s["latency"].record(latency_s)
 
     def on_fail(self) -> None:
         self._failed.inc()
@@ -137,6 +184,24 @@ class ServingMetrics:
             "cache_misses": self._cache_misses.value,
             "cache_hit_rate": hits / lookups if lookups else 0.0,
         }
+
+    def tenant_snapshot(self) -> dict[str, dict]:
+        """Per-tenant view: {tenant: {completed, rejected, qps,
+        latency_p50_ms, latency_p99_ms}} — the per-tenant QPS/p99 the
+        tenancy plane reports (empty on the single-tenant path)."""
+        elapsed = max(time.perf_counter() - self._t0, 1e-9)
+        out: dict[str, dict] = {}
+        for tenant, s in self._tenant_series.items():
+            lat = s["latency"]
+            out[tenant] = {
+                "requests": s["requests"].value,
+                "completed": s["completed"].value,
+                "rejected": s["rejected"].value,
+                "qps": s["completed"].value / elapsed,
+                "latency_p50_ms": lat.percentile(50) * 1e3,
+                "latency_p99_ms": lat.percentile(99) * 1e3,
+            }
+        return out
 
     def format(self) -> str:
         """Compact one-paragraph rendering for CLI drivers."""

@@ -17,18 +17,33 @@ Design points:
   instead of growing without bound.  Callers see backpressure as an
   exception at the door, never as silent unbounded latency.
 - **Generation-consistent flushes.**  Each flush pins the *current*
-  snapshot once and serves every request in the flush from it, so one
-  batch never straddles a container publication (torn reads are
-  structurally impossible — see serving/snapshot.py).
+  snapshot once per tenant group and serves every request of that
+  group from it, so one batch never straddles a container publication
+  (torn reads are structurally impossible — see serving/snapshot.py).
 - **Duplicate coalescing.**  Requests in one flush that normalize to
-  the same (query, k) are scored once and fanned out to all futures.
+  the same (tenant, query, k) are scored once and fanned out to all
+  futures.
 - **Result-cache compose.**  On submit, a hit in the serving-tier
-  result cache (keyed with the current generation) resolves the future
-  immediately — the request never enters the queue.  Flush results are
-  inserted back under the generation that served them.
+  result cache (keyed with the current generation, in the tenant's
+  keyspace) resolves the future immediately — the request never enters
+  the queue.  Flush results are inserted back under the generation
+  that served them.
 - **One scoring thread.**  Scoring stays single-threaded (the flusher),
   so the jit dispatch path needs no locking; concurrency lives at the
   queue, and readers scale by batching, not by fighting for the device.
+
+Tenancy (docs/ARCHITECTURE.md §13): constructed with a
+``TenantRouter``, the scheduler becomes multi-tenant — ``submit``
+takes a tenant id, admission additionally spends the tenant's
+token-bucket quota (over-quota → ``RequestRejected`` carrying the
+tenant, *before* the request can touch the shared queue or thrash the
+container pool), and a flush groups requests by tenant, resolving each
+group against that tenant's *pinned* mount (the pin is the
+teardown barrier against pool eviction; it is held only for the
+group's scoring, never across the whole batch).  A scoring failure in
+one tenant's group fails only that group's futures.  Without a router
+the scheduler is exactly the classic single-tenant front door — one
+tenant group per flush, one snapshot pin, bit-identical results.
 
 The future resolves to a ``ServedResult`` carrying the results *and*
 the generation that served them, so callers (and the stress tests) can
@@ -46,12 +61,22 @@ from repro.core.engine import RetrievalResult
 from repro.core.tokenizer import normalize
 from repro.obs import trace
 
-from repro.serving.cache import ResultCache
+from repro.serving.cache import DEFAULT_KEYSPACE, ResultCache
 from repro.serving.metrics import ServingMetrics
+
+# the tenant the classic single-tenant path maps onto (== the result
+# cache's default keyspace and tenancy.DEFAULT_TENANT)
+DEFAULT_TENANT = DEFAULT_KEYSPACE
 
 
 class RequestRejected(RuntimeError):
-    """Admission queue full — explicit backpressure to the caller."""
+    """Admission refused — queue full, scheduler stopped, or tenant
+    over quota — explicit backpressure to the caller.  ``tenant`` names
+    the rejected tenant (None on the single-tenant path)."""
+
+    def __init__(self, msg: str, tenant: str | None = None):
+        super().__init__(msg)
+        self.tenant = tenant
 
 
 @dataclass
@@ -67,6 +92,7 @@ class ServedResult:
 class _Pending:
     text: str
     k: int
+    tenant: str = DEFAULT_TENANT
     future: Future = field(default_factory=Future)
     t_submit: float = field(default_factory=time.perf_counter)
     # observability: nonzero when this request was sampled for tracing
@@ -84,12 +110,15 @@ class MicroBatchScheduler:
     """See module docstring.  ``source`` is anything with a ``current``
     attribute yielding a snapshot that has ``generation`` and
     ``query_batch(texts, k)`` — in practice a
-    ``serving.snapshot.SnapshotManager``."""
+    ``serving.snapshot.SnapshotManager``.  Alternatively pass
+    ``router`` (a ``tenancy.TenantRouter``) for multi-tenant mode;
+    exactly one of the two must be set."""
 
     def __init__(
         self,
-        source,
+        source=None,
         *,
+        router=None,
         max_batch: int = 16,
         flush_deadline: float = 0.002,
         max_queue: int = 1024,
@@ -99,7 +128,12 @@ class MicroBatchScheduler:
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if (source is None) == (router is None):
+            raise ValueError(
+                "pass exactly one of source= (single-tenant) or "
+                "router= (multi-tenant)")
         self.source = source
+        self.router = router
         self.max_batch = max_batch
         self.flush_deadline = flush_deadline
         self.cache = cache
@@ -141,9 +175,16 @@ class MicroBatchScheduler:
                 return
             if item is not _STOP and not item.future.done():
                 item.future.set_exception(
-                    RequestRejected("scheduler stopped")
+                    RequestRejected("scheduler stopped",
+                                    tenant=self._mt_tenant(item.tenant))
                 )
-                self.metrics.on_reject()
+                self.metrics.on_reject(self._mt_tenant(item.tenant))
+
+    def _mt_tenant(self, tenant: str) -> str | None:
+        """The tenant id for error/metrics attribution — None on the
+        single-tenant path so its series/exceptions stay unlabeled
+        (bit-identical to the pre-tenancy plane)."""
+        return tenant if self.router is not None else None
 
     def __enter__(self) -> "MicroBatchScheduler":
         return self.start()
@@ -153,41 +194,57 @@ class MicroBatchScheduler:
 
     # ---- submission -----------------------------------------------------
 
-    def submit(self, text: str, k: int = 5) -> Future:
+    def submit(self, text: str, k: int = 5,
+               tenant: str | None = None) -> Future:
         """Enqueue one request; returns a Future[ServedResult].
 
-        Raises ``RequestRejected`` when the admission queue is full or
-        the scheduler is stopped (bounded memory, explicit backpressure).
+        Raises ``RequestRejected`` when the admission queue is full,
+        the scheduler is stopped, or (multi-tenant mode) the tenant is
+        over its token-bucket quota (bounded memory, explicit
+        backpressure).
         """
         t_submit = time.perf_counter()
-        self.metrics.on_submit()
+        tenant = DEFAULT_TENANT if tenant is None else tenant
+        mt_tenant = self._mt_tenant(tenant)
+        if self.router is not None:
+            self.router.validate(tenant)
+        self.metrics.on_submit(mt_tenant)
         tid = trace.begin_trace()  # 0 when tracing is off or unsampled
         if self._stopping.is_set():
-            self.metrics.on_reject()
-            raise RequestRejected("scheduler stopped")
+            self.metrics.on_reject(mt_tenant)
+            raise RequestRejected("scheduler stopped", tenant=mt_tenant)
+        if self.router is not None and not self.router.admit(tenant):
+            # quota gate before the shared queue AND before any cache
+            # or pool touch: rejected traffic cannot thrash the LRU
+            self.metrics.on_reject(mt_tenant)
+            raise RequestRejected(
+                f"tenant {tenant!r} over admission quota", tenant=mt_tenant)
         if self.cache is not None:
-            snap = self.source.current
-            hit = self.cache.get(text, k, snap.generation)
-            if hit is not None:
-                now = time.perf_counter()
-                self.metrics.on_cache_hit(now - t_submit)
-                if tid:
-                    trace.record("request", t_submit, now - t_submit,
-                                 trace=tid, k=k, cached=True,
-                                 generation=snap.generation)
-                fut: Future = Future()
-                fut.set_result(
-                    ServedResult(hit, snap.generation, cached=True)
-                )
-                return fut
-            self.metrics.on_cache_miss()
-        req = _Pending(text=text, k=k, t_submit=t_submit, trace_id=tid)
+            generation = self._probe_generation(tenant)
+            if generation is not None:
+                hit = self.cache.get(text, k, generation, keyspace=tenant)
+                if hit is not None:
+                    now = time.perf_counter()
+                    self.metrics.on_cache_hit(now - t_submit, mt_tenant)
+                    if tid:
+                        trace.record("request", t_submit, now - t_submit,
+                                     trace=tid, k=k, cached=True,
+                                     generation=generation)
+                    fut: Future = Future()
+                    fut.set_result(
+                        ServedResult(hit, generation, cached=True)
+                    )
+                    return fut
+                self.metrics.on_cache_miss()
+        req = _Pending(text=text, k=k, tenant=tenant,
+                       t_submit=t_submit, trace_id=tid)
         try:
             self._queue.put_nowait(req)
         except queue.Full:
-            self.metrics.on_reject()
+            self.metrics.on_reject(mt_tenant)
             raise RequestRejected(
-                f"admission queue full ({self._queue.maxsize} pending)"
+                f"admission queue full ({self._queue.maxsize} pending)",
+                tenant=mt_tenant,
             ) from None
         if self._stopping.is_set():
             # raced with stop(): its drain may already have run, leaving
@@ -195,8 +252,19 @@ class MicroBatchScheduler:
             # is rejected, never silently stranded
             self._drain_reject()
             if req.future.done() and req.future.exception() is not None:
-                raise RequestRejected("scheduler stopped") from None
+                raise RequestRejected("scheduler stopped",
+                                      tenant=mt_tenant) from None
         return req.future
+
+    def _probe_generation(self, tenant: str) -> int | None:
+        """The generation a cache probe should key on: the pinned
+        snapshot's (single-tenant) or the resident mount's (router
+        mode; None when the tenant is cold — a cold tenant has no live
+        generation to probe against, so the request goes to the flush,
+        which mounts it)."""
+        if self.router is None:
+            return self.source.current.generation
+        return self.router.peek_generation(tenant)
 
     # ---- the flusher ----------------------------------------------------
 
@@ -246,49 +314,14 @@ class MicroBatchScheduler:
         with trace.span("flush", trace=flush_trace,
                         batch=len(batch)) as fsp:
             try:
-                with trace.span("snapshot_pin") as psp:
-                    snap = self.source.current  # pinned once per flush
-                    psp.set(generation=snap.generation)
-                by_k: dict[int, list[_Pending]] = {}
+                # per-tenant groups: one snapshot pin (and one pool pin,
+                # in router mode) per group; the single-tenant path is
+                # always exactly one group
+                by_tenant: dict[str, list[_Pending]] = {}
                 for req in batch:
-                    by_k.setdefault(req.k, []).append(req)
-                for k, group in by_k.items():
-                    # duplicate coalescing: one scored column per
-                    # canonical query text, fanned out to every
-                    # requesting future
-                    with trace.span("pack", k=k) as ksp:
-                        order: dict[str, int] = {}
-                        texts: list[str] = []
-                        for req in group:
-                            key = normalize(req.text)
-                            if key not in order:
-                                order[key] = len(texts)
-                                texts.append(req.text)
-                        ksp.set(unique=len(texts), requests=len(group))
-                    t_score0 = time.perf_counter()
-                    results = snap.query_batch(texts, k)
-                    t_score1 = time.perf_counter()
-                    scored += len(texts)
-                    if self.retrace_guard is not None:
-                        # raises SanitizerError on steady-state jit
-                        # cache growth — checked before fan-out so the
-                        # failure lands on the futures of the batch
-                        # that caused it
-                        self.retrace_guard.check("scheduler._flush")
-                    for req in group:
-                        res = results[order[normalize(req.text)]]
-                        if self.cache is not None:
-                            self.cache.put(
-                                req.text, k, snap.generation, res)
-                        t_done = time.perf_counter()
-                        self.metrics.on_complete(t_done - req.t_submit)
-                        req.future.set_result(
-                            ServedResult(res, snap.generation)
-                        )
-                        if req.trace_id:
-                            deferred.append(
-                                (req, k, snap.generation,
-                                 t_score0, t_score1, t_done, len(texts)))
+                    by_tenant.setdefault(req.tenant, []).append(req)
+                for tenant, group in by_tenant.items():
+                    scored += self._flush_tenant(tenant, group, deferred)
             except Exception as exc:  # noqa: BLE001 — fail the batch, not the loop
                 fsp.set(error=type(exc).__name__)
                 for req in batch:
@@ -300,14 +333,89 @@ class MicroBatchScheduler:
         for args in deferred:
             self._trace_request(*args)
 
+    def _flush_tenant(self, tenant: str, group: list[_Pending],
+                      deferred: list[tuple]) -> int:
+        """Serve one tenant's group of the flush from one pinned
+        snapshot; failures land on this group's futures only."""
+        scored = 0
+        mt_tenant = self._mt_tenant(tenant)
+        pinned = False
+        try:
+            with trace.span("snapshot_pin") as psp:
+                if self.router is not None:
+                    # the pool pin: mounts the tenant if cold (the
+                    # cold-start cost lands on this group's latency, by
+                    # design) and bars eviction until the group is done
+                    mount = self.router.pin(tenant)
+                    pinned = True
+                    snap = mount.snapshots.current
+                    psp.set(generation=snap.generation, tenant=tenant)
+                else:
+                    snap = self.source.current  # pinned once per flush
+                    psp.set(generation=snap.generation)
+            by_k: dict[int, list[_Pending]] = {}
+            for req in group:
+                by_k.setdefault(req.k, []).append(req)
+            for k, kgroup in by_k.items():
+                # duplicate coalescing: one scored column per
+                # canonical query text, fanned out to every
+                # requesting future
+                with trace.span("pack", k=k) as ksp:
+                    order: dict[str, int] = {}
+                    texts: list[str] = []
+                    for req in kgroup:
+                        key = normalize(req.text)
+                        if key not in order:
+                            order[key] = len(texts)
+                            texts.append(req.text)
+                    ksp.set(unique=len(texts), requests=len(kgroup))
+                t_score0 = time.perf_counter()
+                results = snap.query_batch(texts, k)
+                t_score1 = time.perf_counter()
+                scored += len(texts)
+                if self.retrace_guard is not None:
+                    # raises SanitizerError on steady-state jit
+                    # cache growth — checked before fan-out so the
+                    # failure lands on the futures of the batch
+                    # that caused it
+                    self.retrace_guard.check("scheduler._flush")
+                for req in kgroup:
+                    res = results[order[normalize(req.text)]]
+                    if self.cache is not None:
+                        self.cache.put(req.text, k, snap.generation,
+                                       res, keyspace=tenant)
+                    t_done = time.perf_counter()
+                    self.metrics.on_complete(t_done - req.t_submit,
+                                             mt_tenant)
+                    req.future.set_result(
+                        ServedResult(res, snap.generation)
+                    )
+                    if req.trace_id:
+                        deferred.append(
+                            (req, k, snap.generation,
+                             t_score0, t_score1, t_done, len(texts),
+                             mt_tenant))
+        except Exception as exc:  # noqa: BLE001 — fail this tenant's group only
+            for req in group:
+                if not req.future.done():
+                    self.metrics.on_fail()
+                    req.future.set_exception(exc)
+        finally:
+            if pinned:
+                self.router.unpin(tenant)
+        return scored
+
     @staticmethod
     def _trace_request(req: _Pending, k: int, generation: int,
                        t_score0: float, t_score1: float, t_done: float,
-                       batch_size: int) -> None:
+                       batch_size: int, tenant: str | None = None) -> None:
         """Record the per-request stage decomposition.  The four stages
         tile [t_submit, t_done] exactly, so they sum to the end-to-end
         latency the histogram records (the acceptance invariant)."""
         rid = trace.alloc_id()  # the request root span's id
+        request_args = {"k": k, "generation": generation, "cached": False}
+        if tenant is not None:
+            request_args["tenant"] = tenant
         trace.record_batch(req.trace_id, (
             ("queue_wait", req.t_submit,
              req.t_dequeue - req.t_submit, 0, rid, None),
@@ -317,5 +425,5 @@ class MicroBatchScheduler:
              {"batch": batch_size}),
             ("merge", t_score1, t_done - t_score1, 0, rid, None),
             ("request", req.t_submit, t_done - req.t_submit, rid, 0,
-             {"k": k, "generation": generation, "cached": False}),
+             request_args),
         ))

@@ -166,6 +166,7 @@ class SnapshotManager:
                  container_path: str | None = None,
                  compact_ratio: float | None =
                  KnowledgeBase.DEFAULT_COMPACT_RATIO,
+                 tenant: str | None = None,
                  **engine_kwargs):
         if engine is None:
             if kb is None:
@@ -177,6 +178,10 @@ class SnapshotManager:
         # as KnowledgeBase.save_delta — passed through verbatim).
         self.container_path = container_path
         self.compact_ratio = compact_ratio
+        # tenancy label: set by ContainerPool mounts so publish spans
+        # and the publish-lag gauge carry the tenant end to end; None
+        # on the classic single-tenant path (unchanged series names)
+        self.tenant = tenant
         self._publish_lock = threading.Lock()
         with self._publish_lock:
             engine.refresh()
@@ -209,8 +214,9 @@ class SnapshotManager:
             raise ValueError(
                 "durable publish needs SnapshotManager(container_path=...)"
             )
+        span_kw = {} if self.tenant is None else {"tenant": self.tenant}
         with self._publish_lock, \
-                obs_trace.span("publish", durable=durable) as sp:
+                obs_trace.span("publish", durable=durable, **span_kw) as sp:
             with obs_trace.span("refresh"):
                 self.engine.refresh()
             if durable:
@@ -226,9 +232,12 @@ class SnapshotManager:
                 # this generation absorbs to the moment readers see it
                 lag = self.engine.kb.take_publish_lag()
                 if lag is not None:
+                    lag_labels = ({} if self.tenant is None
+                                  else {"tenant": self.tenant})
                     global_registry().gauge(
                         "ragdb_publish_lag_seconds",
                         "oldest unpublished mutation -> snapshot swap",
+                        **lag_labels,
                     ).set(lag)
                     sp.set(generation=snap.generation, lag_s=round(lag, 6))
             return self._current

@@ -270,6 +270,63 @@ def test_r5_pragma_suppressed(tmp_path):
 
 
 # --------------------------------------------------------------------------
+# R6 tenant-pin
+# --------------------------------------------------------------------------
+
+def test_r6_flags_unguarded_mutation_and_missing_pins_check(tmp_path):
+    found = _findings(tmp_path, {"tenancy/pool.py": """
+        class ContainerPool:
+            def __init__(self):
+                self._resident = {}   # construction: exempt
+
+            def sneak_mount(self, t, mt):
+                self._resident[t] = mt  # no guard, not *_locked
+
+            def evict(self, t):
+                with self._pool_guard("evict"):
+                    self._resident.pop(t)  # guarded but no pins check
+    """}, rule="tenant-pin")
+    msgs = [f.message for f in found]
+    assert len(found) == 2, msgs
+    assert any("without `with self._pool_guard" in m for m in msgs)
+    assert any("pins == 0" in m for m in msgs)
+
+
+def test_r6_clean_pool_passes_and_outside_mutation_flagged(tmp_path):
+    clean = _findings(tmp_path, {"tenancy/pool.py": """
+        class ContainerPool:
+            def __init__(self):
+                self._resident = {}
+
+            def pin(self, t):
+                with self._pool_guard("pin"):
+                    mt = self._resident.get(t)
+                    if mt is None:
+                        mt = self._mount_locked(t)
+                    mt.pins += 1
+                    self._resident.move_to_end(t)
+                    return mt
+
+            def _mount_locked(self, t):
+                self._resident[t] = object()
+
+            def _evict_locked(self, mt):
+                assert mt.pins == 0
+                self._resident.pop(mt.tenant)
+    """}, rule="tenant-pin")
+    assert clean == []
+    outside = _findings(tmp_path, {"serving/hack.py": """
+        def tear_down(pool, t):
+            pool._resident.pop(t)
+
+        def overwrite(pool, t, mt):
+            pool._resident[t] = mt
+    """}, rule="tenant-pin")
+    assert len(outside) == 2
+    assert all("outside" in f.message for f in outside)
+
+
+# --------------------------------------------------------------------------
 # pragma hygiene
 # --------------------------------------------------------------------------
 

@@ -336,6 +336,72 @@ def test_empty_kb_and_empty_batch():
     assert engine.query_batch([], k=3) == []
 
 
+@pytest.mark.parametrize("make_engine", [
+    lambda kb: QueryEngine(kb, scoring_path="map"),
+    lambda kb: QueryEngine(kb, scoring_path="gemm"),
+    lambda kb: QueryEngine(kb, use_kernel=True),
+    lambda kb: QueryEngine(kb, scoring_path="auto"),
+    lambda kb: QueryEngine(kb, scoring_path="map", index="ivf"),
+    lambda kb: QueryEngine(kb, scoring_path="map", index="ivf-sharded",
+                           n_shards=2),
+    lambda kb: QueryEngine(kb, scoring_path="auto", index="ivf-sharded",
+                           n_shards=2),
+])
+def test_empty_container_on_every_path_and_index(make_engine):
+    """Regression: an n=0 container (fresh tenant mount, or every doc
+    removed) must return empty result lists on every scoring path and
+    index kind — the padded-bucket dispatch used to ask top_k for k of
+    0 candidate columns and trip inside the jitted function."""
+    kb = KnowledgeBase(dim=512)
+    engine = make_engine(kb)
+    assert engine.query_batch(["anything", "else"], k=3) == [[], []]
+    assert engine.query_batch([], k=3) == []
+
+
+def test_all_docs_removed_returns_to_empty_path(tmp_path):
+    """A corpus whose every document was removed (sync against an
+    emptied source dir) must serve [] too, not trip padded top-k."""
+    src = tmp_path / "docs"
+    src.mkdir()
+    (src / "only.txt").write_text("transient invoice forecast")
+    kb = KnowledgeBase(dim=512)
+    kb.sync(str(src))
+    engine = QueryEngine(kb)
+    assert len(engine.query_batch(["invoice"], k=3)[0]) == 1
+    (src / "only.txt").unlink()
+    kb.sync(str(src))
+    assert kb.n_docs == 0
+    assert engine.query_batch(["invoice"], k=3) == [[]]
+
+
+def test_score_batch_arrays_zero_docs_short_circuits():
+    """Direct contract at the dispatch layer: n_docs=0 yields [B, 0]
+    arrays on every scoring path, not a top-k shape error."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import score_batch_arrays
+
+    qv = np.zeros((2, 512), dtype=np.float32)
+    qs = np.zeros((2, 4), dtype=np.uint32)
+    docs = jnp.zeros((0, 512), dtype=jnp.float32)
+    sigs = jnp.zeros((0, 4), dtype=jnp.uint32)
+    for path in ("map", "gemm"):
+        vals, idx, cos, ind = score_batch_arrays(
+            docs, sigs, qv, qs, scoring_path=path, k=3,
+            alpha=0.2, beta=0.3, n_docs=0)
+        assert vals.shape == (2, 0) and idx.shape == (2, 0)
+        assert cos.shape == (2, 0) and ind.shape == (2, 0)
+
+
+def test_empty_container_save_load_roundtrip(tmp_path):
+    """An empty KB persists and reloads to a queryable empty engine."""
+    path = str(tmp_path / "empty.ragdb")
+    KnowledgeBase(dim=512).save(path)
+    kb = KnowledgeBase.load(path)
+    assert kb.n_docs == 0
+    assert QueryEngine(kb).query_batch(["anything"], k=5) == [[]]
+
+
 def test_k_larger_than_corpus():
     kb, _ = _kb(n_docs=4, n_entities=2)
     engine = QueryEngine(kb)

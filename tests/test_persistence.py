@@ -481,3 +481,108 @@ def test_serving_runtime_durable_passthrough(tmp_path):
         assert rt.query_batch(["INV-31337"], k=1)[0][0].doc_id == "late.txt"
     out = KnowledgeBase.load(p)
     assert "late.txt" in out.records
+
+
+# --------------------------------------------------------------------------
+# crash matrix: durable publish triggered by tenant eviction
+# --------------------------------------------------------------------------
+#
+# The tenancy pool's eviction contract (docs/ARCHITECTURE.md §13) is
+# durability-before-teardown: evicting a tenant with unpersisted state
+# runs a durable publish *first*.  A crash anywhere inside that publish
+# must leave the container replayable to an exact prior generation —
+# the matrix below kills the process (simulated: exception + the pool
+# object discarded) at each window of the append protocol.
+
+def _pool_with_pending(tmp_path):
+    """A mounted tenant with one durable generation on disk plus
+    pending (unpersisted) mutations; returns (pool, container_path,
+    durable_fingerprint, pending_doc_id)."""
+    from repro.tenancy import ContainerPool
+
+    from repro.obs.metrics import MetricsRegistry
+
+    pool = ContainerPool(str(tmp_path / "tenants"), kb_kwargs={"dim": DIM},
+                         registry=MetricsRegistry(), scoring_path="map")
+    with pool.pinned("t") as mt:
+        for i in range(8):
+            mt.kb.add_text(f"base{i}.txt", f"durable doc {i} CODE-{i}")
+        mt.snapshots.publish(durable=True)
+    p = pool.container_path("t")
+    fp_durable = _fingerprint(KnowledgeBase.load(p))
+    with pool.pinned("t") as mt:
+        mt.kb.add_text("pending.txt", "unpersisted tail INV-9999")
+        mt.snapshots.publish(durable=False)  # in-memory only
+    return pool, p, fp_durable, "pending.txt"
+
+
+def test_evict_crash_before_journal_append_loses_only_pending(
+        tmp_path, monkeypatch):
+    """Window (a): die before any journal byte is written.  The
+    container replays to exactly the last durable generation."""
+    import repro.core.ingest as ingest_mod
+
+    pool, p, fp_durable, pending = _pool_with_pending(tmp_path)
+
+    def die(*a, **kw):
+        raise OSError("simulated crash before append")
+    monkeypatch.setattr(ingest_mod, "append_journal_record", die)
+    with pytest.raises(OSError, match="before append"):
+        pool.evict("t")
+    monkeypatch.undo()
+    # "reboot": a fresh mount sees the durable generation, not the tail
+    out = KnowledgeBase.load(p)
+    _assert_identical(_fingerprint(out), fp_durable)
+    assert pending not in out.records
+
+
+def test_evict_crash_between_append_and_manifest_rename(
+        tmp_path, monkeypatch):
+    """Window (b): die after the journal frames hit disk but before the
+    manifest rename commits them.  The uncommitted tail is invisible on
+    replay and reclaimed by the next successful append."""
+    import repro.core.container as container_mod
+
+    pool, p, fp_durable, pending = _pool_with_pending(tmp_path)
+    # the first durable publish full-saved: no journal on disk yet, so
+    # the evict-triggered delta is the journal's very first record
+    size_before = C.journal_size(p)
+
+    def die(base_path, man):
+        raise OSError("simulated crash before manifest rename")
+    monkeypatch.setattr(container_mod, "_publish_journal_manifest", die)
+    with pytest.raises(OSError, match="manifest rename"):
+        pool.evict("t")
+    monkeypatch.undo()
+    # frames were appended but never committed
+    assert os.path.getsize(C.journal_path(p)) > size_before
+    man = C.read_journal_manifest(p)
+    assert man is None or man["committed_bytes"] <= size_before
+    out = KnowledgeBase.load(p)
+    _assert_identical(_fingerprint(out), fp_durable)
+    assert pending not in out.records
+    # recovery: the next durable save truncates the orphan bytes and
+    # commits the pending generation cleanly
+    out.add_text("pending.txt", "unpersisted tail INV-9999")
+    out.save_delta(p, compact_ratio=None)
+    man = C.read_journal_manifest(p)
+    assert man["committed_bytes"] == os.path.getsize(C.journal_path(p))
+    assert "pending.txt" in KnowledgeBase.load(p).records
+
+
+def test_evict_crash_after_commit_is_equivalent_to_clean_evict(tmp_path):
+    """Window (c): die after the manifest commit but before the pool
+    drops its resident entry.  Disk already owns the generation — a
+    remount serves the pending docs; nothing is lost or doubled."""
+    pool, p, fp_durable, pending = _pool_with_pending(tmp_path)
+
+    def die(tenant):
+        raise OSError("simulated crash after commit")
+    pool.on_evict = die
+    with pytest.raises(OSError, match="after commit"):
+        pool.evict("t")
+    out = KnowledgeBase.load(p)
+    assert pending in out.records
+    assert out.n_docs == len(fp_durable["ids"]) + 1
+    # the journal chain stays single-headed: loading twice is stable
+    _assert_identical(_fingerprint(out), _fingerprint(KnowledgeBase.load(p)))

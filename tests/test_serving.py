@@ -239,6 +239,45 @@ def test_result_cache_capacity_eviction_is_lru_ordered():
     assert len(cache) == 3
 
 
+def test_result_cache_keyspaces_scope_generation_eviction():
+    """Regression: ``evict_generations_before`` used to be global —
+    one tenant's publish would sweep another tenant's entries pinned
+    to *its own* (unrelated) generation counter.  Scoped semantics:
+    only the named keyspace is swept, even with interleaved puts."""
+    cache = ResultCache(capacity=16)
+    # interleave two keyspaces across the same generation numbers
+    for gen in (1, 2, 3):
+        cache.put(f"qa{gen}", 5, gen, [f"a{gen}"], keyspace="alice")
+        cache.put(f"qb{gen}", 5, gen, [f"b{gen}"], keyspace="bob")
+    assert cache.evict_generations_before(3, keyspace="alice") == 2
+    # alice keeps only gen-3; bob is untouched at every generation
+    assert cache.get("qa3", 5, 3, keyspace="alice") == ["a3"]
+    assert cache.get("qa1", 5, 1, keyspace="alice") is None
+    for gen in (1, 2, 3):
+        assert cache.get(f"qb{gen}", 5, gen, keyspace="bob") == [f"b{gen}"]
+    # same (text, k, generation) key in two keyspaces: distinct entries
+    cache.put("shared", 5, 3, ["alice's"], keyspace="alice")
+    cache.put("shared", 5, 3, ["bob's"], keyspace="bob")
+    assert cache.get("shared", 5, 3, keyspace="alice") == ["alice's"]
+    assert cache.get("shared", 5, 3, keyspace="bob") == ["bob's"]
+    assert cache.stats()["keyspaces"] == 2
+
+
+def test_result_cache_capacity_is_per_keyspace():
+    """A hot keyspace filling its own LRU never evicts a cold
+    keyspace's entries (capacity accounting is scoped too)."""
+    cache = ResultCache(capacity=2)
+    cache.put("cold", 5, 1, ["kept"], keyspace="bob")
+    for i in range(10):  # alice churns way past capacity
+        cache.put(f"hot{i}", 5, 1, [i], keyspace="alice")
+    assert cache.get("cold", 5, 1, keyspace="bob") == ["kept"]
+    assert len(cache) == 3  # 2 alice + 1 bob
+    # drop_keyspace removes wholesale and reports the count
+    assert cache.drop_keyspace("alice") == 2
+    assert cache.drop_keyspace("alice") == 0
+    assert cache.get("cold", 5, 1, keyspace="bob") == ["kept"]
+
+
 def test_result_cache_counters_consistent_under_concurrent_access():
     """hits + misses must equal total get() calls even under concurrent
     get/put from many threads (the counters sit inside the lock)."""

@@ -1,0 +1,469 @@
+"""Tenancy-plane contracts (tenancy/ + the multi-tenant serving mode):
+lazy mounts, LRU eviction under budget with durability-before-teardown,
+refcount pins as the teardown barrier, token-bucket admission, tenant
+keyspace isolation in the result cache, per-tenant metrics — and the
+two parity anchors: per-tenant results bit-identical to a direct
+engine over that tenant's KB, and the single-tenant path bit-identical
+through the pool machinery.
+"""
+import threading
+
+import pytest
+
+from repro.analysis import sanitizers
+from repro.core.engine import QueryEngine
+from repro.core.ingest import KnowledgeBase
+from repro.data.corpus import make_corpus
+from repro.obs.metrics import MetricsRegistry
+from repro.serving import RequestRejected, ServingRuntime
+from repro.tenancy import (
+    ContainerPool,
+    DEFAULT_TENANT,
+    TenantQuotas,
+    TenantRouter,
+    TokenBucket,
+    validate_tenant,
+)
+
+DIM = 128  # hashed dims must stay lane-aligned (x128)
+
+
+def _docs(n=12, seed=0):
+    docs, entities = make_corpus(n_docs=n, n_entities=4, seed=seed)
+    return docs, list(entities)
+
+
+def _fill(kb: KnowledgeBase, docs, tag: str):
+    for i, d in enumerate(docs):
+        kb.add_text(f"{tag}_{i:03d}.txt", f"{d} tenant {tag}")
+
+
+def _pool(tmp_path, **kw):
+    kw.setdefault("kb_kwargs", {"dim": DIM})
+    kw.setdefault("registry", MetricsRegistry())
+    return ContainerPool(str(tmp_path / "tenants"), **kw)
+
+
+def _seed_tenant(pool, tenant, docs):
+    """Mount, ingest, durably publish, leave resident."""
+    with pool.pinned(tenant) as mt:
+        _fill(mt.kb, docs, tenant)
+        mt.snapshots.publish(durable=True)
+
+
+# --------------------------------------------------------------------------
+# pool: mount / pin / LRU evict
+# --------------------------------------------------------------------------
+
+def test_pool_lazy_mount_and_lru_eviction(tmp_path):
+    docs, _ = _docs()
+    pool = _pool(tmp_path, max_resident=2)
+    for t in ("a", "b", "c"):
+        _seed_tenant(pool, t, docs)
+    # budget 2: "a" (LRU-coldest) was evicted when "c" mounted
+    assert pool.resident_tenants() == ["b", "c"]
+    # touching "b" bumps recency, so mounting "d" evicts "c"
+    with pool.pinned("b"):
+        pass
+    _seed_tenant(pool, "d", docs)
+    assert pool.resident_tenants() == ["b", "d"]
+    # remount of an evicted tenant replays its durable container
+    with pool.pinned("a") as mt:
+        assert mt.kb.n_docs == len(docs)
+
+
+def test_pool_pinned_tenant_is_never_evicted(tmp_path):
+    docs, _ = _docs()
+    pool = _pool(tmp_path, max_resident=1)
+    mt_a = pool.pin("a")
+    _fill(mt_a.kb, docs, "a")
+    # mounting "b" while "a" is pinned exceeds the budget: "a" must
+    # survive (pinned), so the pool rides over budget temporarily
+    _seed_tenant(pool, "b", docs)
+    assert "a" in pool.resident_tenants()
+    with pytest.raises(RuntimeError, match="pins"):
+        pool.evict("a")
+    pool.unpin("a")
+    # unpinned now: explicit eviction durably publishes and unmounts
+    pool.evict("a")
+    assert "a" not in pool.resident_tenants()
+    with pool.pinned("a") as mt:
+        assert mt.kb.n_docs == len(docs)  # nothing lost
+
+
+def test_pool_eviction_durably_publishes_pending_generations(tmp_path):
+    docs, entities = _docs()
+    pool = _pool(tmp_path, max_resident=8)
+    with pool.pinned("a") as mt:
+        _fill(mt.kb, docs, "a")
+        # in-memory publish only: the snapshot generation advances but
+        # nothing reaches the container
+        mt.snapshots.publish(durable=False)
+        want = mt.snapshots.current.query_batch([entities[0]], k=3)
+    pool.evict("a")  # must flush the pending state durably first
+    with pool.pinned("a") as mt:
+        assert mt.kb.n_docs == len(docs)
+        got = mt.snapshots.current.query_batch([entities[0]], k=3)
+    from conftest import assert_bit_identical
+    assert_bit_identical(got, want, label="post-evict remount")
+
+
+def test_pool_eviction_skips_untouched_tenants(tmp_path):
+    import os
+    pool = _pool(tmp_path, max_resident=8)
+    with pool.pinned("ghost"):
+        pass  # mounted, never mutated
+    pool.evict("ghost")
+    # no container written for a tenant that never held state
+    assert not os.path.exists(pool.container_path("ghost"))
+
+
+def test_pool_byte_budget_evicts(tmp_path):
+    docs, _ = _docs()
+    pool = _pool(tmp_path, max_resident=100, max_resident_bytes=1)
+    _seed_tenant(pool, "a", docs)
+    # "a" alone exceeds one byte, but it was pinned during seeding; the
+    # next pin transition collects it
+    _seed_tenant(pool, "b", docs)
+    assert "a" not in pool.resident_tenants()
+
+
+def test_pool_unpin_without_pin_raises(tmp_path):
+    pool = _pool(tmp_path)
+    with pytest.raises(RuntimeError, match="unpin"):
+        pool.unpin("nope")
+
+
+def test_tenant_id_validation(tmp_path):
+    pool = _pool(tmp_path)
+    for bad in ("", "../escape", "a/b", ".hidden", "x" * 65, None, 7):
+        with pytest.raises((ValueError, TypeError)):
+            validate_tenant(bad)
+        with pytest.raises((ValueError, TypeError)):
+            pool.pin(bad)
+    assert validate_tenant("team-7.alpha_X") == "team-7.alpha_X"
+
+
+def test_pool_metrics_accounting(tmp_path):
+    docs, _ = _docs()
+    reg = MetricsRegistry()
+    pool = _pool(tmp_path, max_resident=1, registry=reg)
+    _seed_tenant(pool, "a", docs)
+    _seed_tenant(pool, "b", docs)  # evicts "a"
+    text = __import__("repro.obs.export", fromlist=["render_prometheus"])\
+        .render_prometheus(reg)
+    assert 'ragdb_tenant_mounts_total{tenant="a"} 1' in text
+    assert 'ragdb_tenant_mounts_total{tenant="b"} 1' in text
+    assert 'ragdb_tenant_evictions_total{tenant="a"} 1' in text
+    assert "ragdb_tenant_resident_bytes" in text
+    assert pool.stats()["resident"] == 1
+
+
+# --------------------------------------------------------------------------
+# quotas
+# --------------------------------------------------------------------------
+
+def test_token_bucket_deterministic_refill():
+    b = TokenBucket(rate=10.0, burst=2)
+    t0 = 100.0
+    assert b.try_acquire(t0) and b.try_acquire(t0)   # burst of 2
+    assert not b.try_acquire(t0)                     # empty
+    assert not b.try_acquire(t0 + 0.05)              # only 0.5 tokens back
+    assert b.try_acquire(t0 + 0.15)                  # 1.5 accrued
+    # refill never exceeds burst
+    assert b.try_acquire(t0 + 100.0) and b.try_acquire(t0 + 100.0)
+    assert not b.try_acquire(t0 + 100.0)
+
+
+def test_tenant_quotas_default_and_override():
+    q = TenantQuotas(default_rate=1.0, default_burst=1)
+    q.set("vip", rate=1000.0, burst=100)
+    t0 = 50.0
+    assert q.try_acquire("joe", t0)
+    assert not q.try_acquire("joe", t0)      # default burst spent
+    assert all(q.try_acquire("vip", t0) for _ in range(100))
+    # no default at all -> unlimited
+    assert all(TenantQuotas().try_acquire("any") for _ in range(10))
+
+
+def test_runtime_quota_rejection_carries_tenant(tmp_path):
+    docs, entities = _docs()
+    pool = _pool(tmp_path)
+    quotas = TenantQuotas()
+    quotas.set("greedy", rate=0.001, burst=1)
+    rt = ServingRuntime(pool=pool, quotas=quotas, max_batch=4,
+                        flush_deadline=0.0)
+    with rt:
+        with rt.tenant_writer("greedy") as kb:
+            _fill(kb, docs, "greedy")
+        rt.publish(tenant="greedy")
+        assert rt.submit(entities[0], k=2, tenant="greedy")\
+            .result(timeout=30)
+        with pytest.raises(RequestRejected) as exc:
+            rt.submit(entities[0], k=2, tenant="greedy")
+            rt.submit(entities[1], k=2, tenant="greedy")
+        assert exc.value.tenant == "greedy"
+        # an unthrottled tenant is unaffected
+        assert rt.submit("hello", k=2, tenant="calm")\
+            .result(timeout=30).results == []
+        assert rt.metrics.tenant_snapshot()["greedy"]["rejected"] >= 1
+
+
+# --------------------------------------------------------------------------
+# router
+# --------------------------------------------------------------------------
+
+def test_router_publish_and_peek(tmp_path):
+    docs, _ = _docs()
+    pool = _pool(tmp_path)
+    router = TenantRouter(pool)
+    assert router.peek_generation("a") is None  # cold: no mount
+    assert pool.resident_tenants() == []        # peek never mounts
+    with router.writer("a") as mt:
+        _fill(mt.kb, docs, "a")
+    gen = router.publish("a", durable=True)
+    assert gen == len(docs)
+    assert router.peek_generation("a") == gen
+
+
+# --------------------------------------------------------------------------
+# multi-tenant runtime: parity, isolation, eviction hygiene
+# --------------------------------------------------------------------------
+
+def test_multi_tenant_results_match_direct_engines(tmp_path):
+    from conftest import assert_bit_identical
+    docs_a, entities = _docs(seed=0)
+    docs_b, _ = _docs(seed=1)
+    pool = _pool(tmp_path)
+    rt = ServingRuntime(pool=pool, max_batch=8, flush_deadline=0.0,
+                        result_cache_size=0)
+    ref = {}
+    for t, docs in (("a", docs_a), ("b", docs_b)):
+        kb = KnowledgeBase(dim=DIM)
+        _fill(kb, docs, t)
+        ref[t] = QueryEngine(kb)
+    with rt:
+        for t, docs in (("a", docs_a), ("b", docs_b)):
+            with rt.tenant_writer(t) as kb:
+                _fill(kb, docs, t)
+            rt.publish(tenant=t)
+        queries = [*entities, "quarterly forecast", ""]
+        futs = [(t, q, rt.submit(q, k=3, tenant=t))
+                for t in ("a", "b") for q in queries]
+        for t, q, fut in futs:
+            served = fut.result(timeout=60)
+            want = ref[t].query_batch([q], k=3)[0]
+            assert_bit_identical([served.results], [want],
+                                 label=f"tenant={t} {q!r}")
+
+
+def test_result_cache_keyspaces_isolate_tenants(tmp_path):
+    """Two tenants at the SAME generation with the SAME query text must
+    not share cache entries — the keyspace is the isolation boundary."""
+    docs_a, entities = _docs(seed=0)
+    docs_b, _ = _docs(seed=1)
+    pool = _pool(tmp_path)
+    rt = ServingRuntime(pool=pool, max_batch=4, flush_deadline=0.0,
+                        result_cache_size=64)
+    q = entities[0]
+    with rt:
+        for t, docs in (("a", docs_a), ("b", docs_b)):
+            with rt.tenant_writer(t) as kb:
+                _fill(kb, docs, t)
+            rt.publish(tenant=t)
+        first_a = rt.submit(q, k=3, tenant="a").result(timeout=30)
+        first_b = rt.submit(q, k=3, tenant="b").result(timeout=30)
+        assert first_a.generation == first_b.generation  # same gen number!
+        hit_a = rt.submit(q, k=3, tenant="a").result(timeout=30)
+        hit_b = rt.submit(q, k=3, tenant="b").result(timeout=30)
+        assert hit_a.cached and hit_b.cached
+        assert [r.doc_id for r in hit_a.results] == \
+            [r.doc_id for r in first_a.results]
+        assert [r.doc_id for r in hit_b.results] == \
+            [r.doc_id for r in first_b.results]
+        # different corpora -> the hits must differ across tenants
+        assert [r.doc_id for r in hit_a.results] != \
+            [r.doc_id for r in hit_b.results]
+
+
+def test_eviction_drops_cache_keyspace(tmp_path):
+    docs, entities = _docs()
+    pool = _pool(tmp_path, max_resident=8)
+    rt = ServingRuntime(pool=pool, max_batch=4, flush_deadline=0.0,
+                        result_cache_size=64)
+    q = entities[0]
+    with rt:
+        with rt.tenant_writer("a") as kb:
+            _fill(kb, docs, "a")
+        rt.publish(tenant="a", durable=True)
+        rt.submit(q, k=3, tenant="a").result(timeout=30)
+        assert rt.submit(q, k=3, tenant="a").result(timeout=30).cached
+        assert len(rt.cache) > 0
+        pool.evict("a")
+        assert len(rt.cache) == 0  # keyspace dropped with the mount
+        # remount serves fresh (no stale hit), same results
+        res = rt.submit(q, k=3, tenant="a").result(timeout=30)
+        assert not res.cached and res.results
+
+
+def test_empty_tenant_serves_empty_results(tmp_path):
+    pool = _pool(tmp_path)
+    rt = ServingRuntime(pool=pool, max_batch=4, flush_deadline=0.0)
+    with rt:
+        res = rt.submit("anything at all", k=5, tenant="fresh")\
+            .result(timeout=30)
+        assert res.results == [] and res.generation == 0
+
+
+def test_flush_failure_isolated_to_one_tenant_group(tmp_path):
+    """A scoring failure in tenant A's group fails A's futures only;
+    tenant B's requests in the same flush still resolve."""
+    docs, entities = _docs()
+    pool = _pool(tmp_path)
+    rt = ServingRuntime(pool=pool, max_batch=8, flush_deadline=0.05,
+                        result_cache_size=0)
+    with rt:
+        for t in ("a", "b"):
+            with rt.tenant_writer(t) as kb:
+                _fill(kb, docs, t)
+            rt.publish(tenant=t)
+        # poison tenant a's mounted snapshot stack
+        mt_a = pool.pin("a")
+
+        def boom(texts, k):
+            raise RuntimeError("poisoned tenant")
+        mt_a.snapshots._current = _Poisoned(boom, mt_a.snapshots.current)
+        pool.unpin("a")
+        fa = rt.submit(entities[0], k=2, tenant="a")
+        fb = rt.submit(entities[0], k=2, tenant="b")
+        with pytest.raises(RuntimeError, match="poisoned"):
+            fa.result(timeout=30)
+        assert fb.result(timeout=30).results  # b unaffected
+
+
+class _Poisoned:
+    """Snapshot stand-in whose query_batch raises (failure-isolation
+    fixture)."""
+
+    def __init__(self, fn, real):
+        self._fn = fn
+        self.generation = real.generation
+
+    def query_batch(self, texts, k):
+        return self._fn(texts, k)
+
+
+# --------------------------------------------------------------------------
+# single-tenant parity: the pool path is bit-identical to the classic one
+# --------------------------------------------------------------------------
+
+def test_single_tenant_path_bit_identical_through_pool(tmp_path):
+    from conftest import assert_bit_identical
+    docs, entities = _docs(n=20)
+    queries = [*entities, "quarterly forecast", "unrelated text"]
+
+    kb_classic = KnowledgeBase(dim=DIM)
+    _fill(kb_classic, docs, "t")
+    classic = ServingRuntime(kb_classic, max_batch=8, flush_deadline=0.0,
+                             result_cache_size=0)
+
+    pool = _pool(tmp_path)
+    pooled = ServingRuntime(pool=pool, max_batch=8, flush_deadline=0.0,
+                            result_cache_size=0)
+
+    engine = QueryEngine(kb_classic)
+    with classic, pooled:
+        with pooled.tenant_writer(DEFAULT_TENANT) as kb:
+            _fill(kb, docs, "t")
+        pooled.publish()  # default tenant wraps today's behavior
+        for q in queries:
+            want = engine.query_batch([q], k=3)[0]
+            got_classic = classic.submit(q, k=3).result(timeout=60)
+            got_pooled = pooled.submit(q, k=3).result(timeout=60)
+            assert_bit_identical([got_classic.results], [want],
+                                 label=f"classic {q!r}")
+            assert_bit_identical([got_pooled.results], [want],
+                                 label=f"pooled {q!r}")
+            assert got_classic.generation == got_pooled.generation
+
+
+# --------------------------------------------------------------------------
+# sanitizers: steady state stays recompile-free per tenant bucket set
+# --------------------------------------------------------------------------
+
+@pytest.fixture
+def _sanitizers_on():
+    sanitizers.enable(True)
+    yield
+    sanitizers._enabled = None  # back to env-driven
+
+
+def test_multi_tenant_steady_state_zero_recompiles(tmp_path, _sanitizers_on):
+    """Equal-shaped tenants pin one shared jit bucket set: after
+    warming each resident tenant and arming the guard, serving (and
+    even an evict + remount at the same shapes) must not retrace."""
+    docs_a, entities = _docs(n=12, seed=0)
+    docs_b, _ = _docs(n=12, seed=1)  # same doc count -> same buckets
+    pool = _pool(tmp_path, max_resident=8)
+    rt = ServingRuntime(pool=pool, max_batch=4, flush_deadline=0.0,
+                        result_cache_size=0)
+    with rt:
+        for t, docs in (("a", docs_a), ("b", docs_b)):
+            with rt.tenant_writer(t) as kb:
+                _fill(kb, docs, t)
+            rt.publish(tenant=t, durable=True)
+        rt.arm_sanitizers(k=3)  # warms every resident tenant's buckets
+        for _ in range(3):
+            for t in ("a", "b"):
+                for q in entities[:2]:
+                    rt.submit(q, k=3, tenant=t).result(timeout=30)
+        # evict + lazy remount at identical shapes: still no retrace
+        pool.evict("a")
+        rt.submit(entities[0], k=3, tenant="a").result(timeout=30)
+
+
+# --------------------------------------------------------------------------
+# concurrency: hot serving against one tenant while another mounts/evicts
+# --------------------------------------------------------------------------
+
+def test_concurrent_serving_while_tenants_churn(tmp_path):
+    docs, entities = _docs(n=16)
+    pool = _pool(tmp_path, max_resident=2)
+    rt = ServingRuntime(pool=pool, max_batch=8, flush_deadline=0.001,
+                        result_cache_size=0)
+    errors = []
+    with rt:
+        with rt.tenant_writer("hot") as kb:
+            _fill(kb, docs, "hot")
+        rt.publish(tenant="hot", durable=True)
+
+        def serve_hot():
+            try:
+                for i in range(40):
+                    res = rt.submit(entities[i % len(entities)], k=2,
+                                    tenant="hot").result(timeout=60)
+                    assert res.results, "hot tenant lost its corpus"
+            except Exception as exc:  # pragma: no cover
+                errors.append(exc)
+
+        def churn():
+            try:
+                for i in range(6):
+                    t = f"cold{i}"
+                    with rt.tenant_writer(t) as kb:
+                        _fill(kb, docs[:4], t)
+                    rt.publish(tenant=t, durable=True)
+            except Exception as exc:  # pragma: no cover
+                errors.append(exc)
+
+        threads = [threading.Thread(target=serve_hot),
+                   threading.Thread(target=churn)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+        # even if churn LRU-evicted "hot" between its requests, durable
+        # publish + lazy remount means the next request still serves it
+        res = rt.submit(entities[0], k=2, tenant="hot").result(timeout=60)
+        assert res.results
