@@ -85,7 +85,8 @@ def _warm(runtime: ServingRuntime, queries: list[str]) -> None:
 
 
 def closed_loop(runtime: ServingRuntime, queries: list[str],
-                n_requests: int, n_workers: int) -> dict:
+                n_requests: int, n_workers: int,
+                explain: bool = False) -> dict:
     """N workers, each fires its next request on completion."""
     counter = {"i": 0}
     lock = threading.Lock()
@@ -98,7 +99,7 @@ def closed_loop(runtime: ServingRuntime, queries: list[str],
                     return
                 counter["i"] = i + 1
             q = queries[(i * 7 + wid) % len(queries)]
-            runtime.submit(q, k=K).result(timeout=120)
+            runtime.submit(q, k=K, explain=explain).result(timeout=120)
 
     with runtime:
         t0 = time.perf_counter()
@@ -205,12 +206,15 @@ TRACE_SAMPLE = 0.25  # the documented production sampling default
 
 
 def bench_serving_traced(smoke: bool = False, trace_path: str | None = None,
-                         sample: float = TRACE_SAMPLE):
+                         sample: float = TRACE_SAMPLE,
+                         explain_out: str | None = None,
+                         health_out: str | None = None):
     """The observability overhead + correctness contract, measured:
 
-    1. closed loop untraced vs traced (1-in-4 request sampling, the
-       production default) — the traced arm must keep ≥ 95% of
-       untraced throughput;
+    1. closed loop untraced vs traced+EXPLAIN (1-in-4 request span
+       sampling, the production default; every traced-arm request also
+       carries ``explain=True``, so the gate covers plan capture too) —
+       the traced arm must keep ≥ 95% of untraced throughput;
     2. every sampled request's stage spans (queue_wait + flush_wait +
        score + merge) must tile the request span exactly — the sum is
        asserted against the end-to-end duration per request;
@@ -235,8 +239,9 @@ def bench_serving_traced(smoke: bool = False, trace_path: str | None = None,
     rt = _runtime(kb, max_batch=max_batch, deadline_s=0.002)
     _warm(rt, queries)
 
-    def run_qps() -> float:
-        r = closed_loop(rt, queries, n_requests, 2 * max_batch)
+    def run_qps(explain: bool = False) -> float:
+        r = closed_loop(rt, queries, n_requests, 2 * max_batch,
+                        explain=explain)
         return r["throughput_qps"]
 
     tracer = obs_trace.get()
@@ -249,7 +254,7 @@ def bench_serving_traced(smoke: bool = False, trace_path: str | None = None,
                 tracer.disable()
                 off = run_qps()
                 tracer.enable(sample=sample)
-                on = run_qps()
+                on = run_qps(explain=True)
                 got = tracer.drain()
                 spans = got or spans
                 tracer.disable()
@@ -280,6 +285,26 @@ def bench_serving_traced(smoke: bool = False, trace_path: str | None = None,
         print(f"# trace: {n} events -> {trace_path}")
         print("\n".join("# " + ln
                         for ln in format_breakdown(spans).splitlines()))
+    if explain_out or health_out:
+        # one dedicated explain'd request for the sample-plan artifact,
+        # plus a health verdict over the run the gate just measured
+        import json
+
+        from repro.obs.explain import write_plans
+
+        with rt:
+            rt.health()  # first sample anchors the fast window
+            served = rt.submit(queries[0], k=K, explain=True).result(
+                timeout=120)
+            health = rt.health()
+        if explain_out and served.plan is not None:
+            write_plans(explain_out, [served.plan],
+                        extra={"rendered": served.plan.render()})
+            print(f"# explain plan -> {explain_out}")
+        if health_out:
+            with open(health_out, "w", encoding="utf-8") as f:
+                json.dump(health, f, indent=2, sort_keys=True, default=str)
+            print(f"# health ({health['status']}) -> {health_out}")
     return [
         (f"serving_traced_overhead_{n_docs}docs", 0.0,
          f"median_qps_ratio={median:.3f}_pairs={len(ratios)}"
@@ -507,6 +532,13 @@ def main(argv=None) -> int:
     ap.add_argument("--trace-sample", type=float, default=TRACE_SAMPLE,
                     help="request sampling rate for the traced arm "
                     f"(default {TRACE_SAMPLE:g})")
+    ap.add_argument("--explain-out", default=None, metavar="FILE",
+                    help="write a sample EXPLAIN plan (JSON, rendered "
+                    "tree included) from the traced leg here; inspect "
+                    "with `python -m repro.obs explain FILE`")
+    ap.add_argument("--health-out", default=None, metavar="FILE",
+                    help="write the traced leg's SLO health verdict "
+                    "(runtime.health() JSON) here")
     ap.add_argument("--only", default=None, metavar="SUFFIX",
                     help="run just the bench_serving_<SUFFIX> bench "
                     "(closed | open | traced | multitenant)")
@@ -521,6 +553,8 @@ def main(argv=None) -> int:
         if fn is bench_serving_traced:
             kwargs["trace_path"] = args.trace
             kwargs["sample"] = args.trace_sample
+            kwargs["explain_out"] = args.explain_out
+            kwargs["health_out"] = args.health_out
         for name, us, derived in fn(**kwargs):
             print(f"{name},{us:.1f},{derived}", flush=True)
     return 0

@@ -54,6 +54,7 @@ mesh-sharded path (retrieval.py) and the index plane.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -69,6 +70,9 @@ from repro.core.ingest import KnowledgeBase
 from repro.core.tokenizer import normalize
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import global_registry
+
+# shared reentrant no-op scope for the explain=False query path
+_NULL_CTX = contextlib.nullcontext()
 
 
 @dataclass
@@ -278,11 +282,12 @@ def score_batch_arrays(
                 jnp.int32(n_docs),
                 k=k, alpha=alpha, beta=beta, gemm=scoring_path == "gemm",
             )
-        if obs_trace.enabled():
-            # tracing-only audited sync: without it the async dispatch
-            # returns immediately and all device time would be charged
-            # to the host_transfer span below.  Never runs untraced.
-            jax.block_until_ready(vals)  # analysis: allow[host-sync] -- tracing-only audited boundary attributing device time to the dispatch span; no-op when tracing is off
+        if obs_trace.active():
+            # tracing/explain-only audited sync: without it the async
+            # dispatch returns immediately and all device time would be
+            # charged to the host_transfer span below.  Never runs when
+            # neither a trace nor an EXPLAIN collector is active.
+            jax.block_until_ready(vals)  # analysis: allow[host-sync] -- tracing/explain-only audited boundary attributing device time to the dispatch span; no-op when both are off
     with obs_trace.span("host_transfer", k=k):
         return (np.asarray(vals), np.asarray(idx),
                 np.asarray(cos), np.asarray(ind))
@@ -808,8 +813,8 @@ class QueryEngine:
     # ---- batched queries ------------------------------------------------
 
     def query_batch(
-        self, texts: list[str], k: int = 5
-    ) -> list[list[RetrievalResult]]:
+        self, texts: list[str], k: int = 5, *, explain: bool = False
+    ):
         """Retrieve top-k for every query; one device dispatch per chunk.
 
         ``k`` must be ≥ 1 (a clear ValueError, not a silent fall-through
@@ -819,47 +824,95 @@ class QueryEngine:
         ``"map"`` (what ``"auto"`` picks everywhere except real TPU
         backends, where it resolves to the non-bit-stable kernel; force
         ``scoring_path="map"`` to keep the bit-stability contract there).
+
+        ``explain=True`` returns ``(results, plans)`` where ``plans``
+        is one :class:`repro.obs.explain.QueryPlan` per query — the
+        index/probe decomposition, cache status, and per-stage timings
+        of the dispatch that served it (docs/ARCHITECTURE.md §14).
         """
         if k <= 0:
             raise ValueError(f"k must be a positive integer, got {k}")
         self.refresh()
         if not self.doc_ids or not texts:
-            return [[] for _ in texts]
+            empty = [[] for _ in texts]
+            if explain:
+                from repro.obs import explain as explain_mod
+                plans = explain_mod.plans_from_dispatch(
+                    texts, k, index=self.index,
+                    scoring_path=self.scoring_path, guarantee=self.guarantee,
+                    n_docs=0)
+                return empty, plans
+            return empty
         out: list[list[RetrievalResult]] = []
+        batches = []
         for start in range(0, len(texts), self.max_batch):
-            out.extend(self._query_chunk(texts[start: start + self.max_batch], k))
+            chunk = texts[start: start + self.max_batch]
+            if explain:
+                res, ps = self._query_chunk(chunk, k, explain=True)
+                out.extend(res)
+                batches.append(ps)
+            else:
+                out.extend(self._query_chunk(chunk, k))
+        if explain:
+            from repro.obs.explain import PlanBatch
+            return out, PlanBatch.concat(batches)
         return out
 
     def query(self, text: str, k: int = 5) -> list[RetrievalResult]:
         """Single-query convenience wrapper (batch of one)."""
         return self.query_batch([text], k)[0]
 
-    def _query_chunk(
-        self, texts: list[str], k: int
-    ) -> list[list[RetrievalResult]]:
+    def _query_chunk(self, texts: list[str], k: int, *,
+                     explain: bool = False):
         b = len(texts)
-        with obs_trace.span("query_embed", queries=b):
-            pairs = [self._query_arrays(t) for t in texts]
-            qv, qs = pack_query_arrays(pairs, self.kb.dim, self.kb.sig_words)
-        n = len(self.doc_ids)
-        if self.index != "flat" and self.ivf is not None:
-            vals, idx, cos, ind, self._last_index_stats = self.ivf.search(
-                self.doc_vecs, self.doc_sigs, qv, qs,
-                b=b, k=min(k, n), nprobe=self.nprobe,
-                guarantee=self.guarantee, scoring_path=self.scoring_path,
-                alpha=self.alpha, beta=self.beta,
-            )
-            _record_ivf_stats(self._last_index_stats)
+        if explain:
+            from repro.obs import explain as explain_mod
+            col = obs_trace.StageCollector()
+            scope = obs_trace.get().collect(col)
+            vec_hits = tuple(normalize(t) in self._qcache for t in texts)
+            t0 = time.perf_counter()
         else:
-            vals, idx, cos, ind = score_batch_arrays(
-                self.doc_vecs, self.doc_sigs, qv, qs,
-                scoring_path=self.scoring_path, k=min(k, n),
-                alpha=self.alpha, beta=self.beta, n_docs=n,
-                kernel_operands=(
-                    self._kernel_operands() if self.use_kernel else None
-                ),
-            )
-        return results_from_topk(self.doc_ids, b, vals, idx, cos, ind)
+            scope = _NULL_CTX
+        with scope:
+            with obs_trace.span("query_embed", queries=b):
+                pairs = [self._query_arrays(t) for t in texts]
+                qv, qs = pack_query_arrays(
+                    pairs, self.kb.dim, self.kb.sig_words)
+            n = len(self.doc_ids)
+            stats = None
+            if self.index != "flat" and self.ivf is not None:
+                vals, idx, cos, ind, stats = self.ivf.search(
+                    self.doc_vecs, self.doc_sigs, qv, qs,
+                    b=b, k=min(k, n), nprobe=self.nprobe,
+                    guarantee=self.guarantee,
+                    scoring_path=self.scoring_path,
+                    alpha=self.alpha, beta=self.beta, explain=explain,
+                )
+                self._last_index_stats = stats
+                _record_ivf_stats(stats)
+            else:
+                vals, idx, cos, ind = score_batch_arrays(
+                    self.doc_vecs, self.doc_sigs, qv, qs,
+                    scoring_path=self.scoring_path, k=min(k, n),
+                    alpha=self.alpha, beta=self.beta, n_docs=n,
+                    kernel_operands=(
+                        self._kernel_operands() if self.use_kernel else None
+                    ),
+                )
+            results = results_from_topk(self.doc_ids, b, vals, idx, cos, ind)
+        if not explain:
+            return results
+        # capture only: the QueryPlan dataclasses are built on first
+        # access (PlanBatch) — the hot path pays one closure + one
+        # tuple() of the collected stages, not 20-field inits per query
+        stages = tuple(col.stages)
+        total_s = time.perf_counter() - t0
+        index, path, guar = self.index, self.scoring_path, self.guarantee
+        return results, explain_mod.PlanBatch(
+            lambda: explain_mod.plans_from_dispatch(
+                texts, k, index=index, scoring_path=path, guarantee=guar,
+                n_docs=n, stats=stats, stages=stages,
+                vector_cache_hits=vec_hits, total_s=total_s))
 
     def _kernel_operands(self):
         """Block-aligned doc operands for the fused kernel, re-padded

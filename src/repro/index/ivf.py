@@ -120,13 +120,21 @@ def ids_digest(keys) -> str:
 
 @dataclass(frozen=True)
 class IVFSearchStats:
-    """What one ``search`` actually scanned."""
+    """What one ``search`` actually scanned.
+
+    The per-query EXPLAIN fields (``probe_order`` / ``kth_scores`` /
+    ``unprobed_bounds``) are populated only under ``explain=True`` —
+    empty tuples on the hot path, so steady-state search allocates
+    nothing extra."""
 
     n_docs: int
     candidate_rows: int     # doc rows gathered + exactly scored
     clusters_probed: int
     n_clusters: int
     rounds: int             # probe-widening rounds (1 unless exact mode)
+    probe_order: tuple = ()      # per-query tuples of probed cluster ids
+    kth_scores: tuple = ()       # per-query final kth candidate score
+    unprobed_bounds: tuple = ()  # per-query max unprobed bound (or None)
 
     @property
     def probed_fraction(self) -> float:
@@ -340,19 +348,21 @@ class IVFIndex:
 
     def search(self, doc_vecs, doc_sigs, qv: np.ndarray, qs: np.ndarray, *,
                b: int, k: int, nprobe: int, guarantee: str,
-               scoring_path: str, alpha: float, beta: float):
+               scoring_path: str, alpha: float, beta: float,
+               explain: bool = False):
         """Probe + exact rerank → (vals, idx, cos, ind, stats), shaped
         like ``score_batch_arrays`` (idx are *global* doc rows).
 
         ``qv``/``qs`` may be padded past ``b`` (the engine's
         power-of-two query bucket); only the first ``b`` queries drive
         probing, but all padded rows are scored (their output is
-        ignored by ``results_from_topk``).
+        ignored by ``results_from_topk``).  ``explain=True``
+        additionally materializes per-query probe tuples on the stats.
         """
         n, kc = self.n_docs, self.n_clusters
         kk = min(k, n)
         sizes = np.array([m.size for m in self.members], np.int64)
-        _t = time.perf_counter() if obs_trace.enabled() else 0.0
+        _t = time.perf_counter() if obs_trace.active() else 0.0
 
         # -- probe plane (host, float64 for the exactness bound) ----------
         # analysis: allow[unpinned-reduction] -- f64 probe bound, clipped
@@ -398,7 +408,8 @@ class IVFIndex:
             return self._search_exact(doc_vecs, doc_sigs, qv, qs, b=b,
                                       kk=kk, p=p, order=order, ub=ub,
                                       scoring_path=scoring_path,
-                                      alpha=alpha, beta=beta)
+                                      alpha=alpha, beta=beta,
+                                      explain=explain)
         # probe mode: each query scores ONLY its own top-p clusters'
         # rows (one small dispatch per query through the shared gather
         # helper) — a batch of topically diverse queries doesn't
@@ -409,7 +420,8 @@ class IVFIndex:
         cos = np.zeros((bp, kk), np.float32)
         ind = np.zeros((bp, kk), np.float32)
         tot_rows = tot_clusters = 0
-        _t = time.perf_counter() if obs_trace.enabled() else 0.0
+        probe_orders, kth = [], []
+        _t = time.perf_counter() if obs_trace.active() else 0.0
         for i in range(b):
             probe_c = order[i, : p[i]]
             if p[i] >= kc:
@@ -431,6 +443,10 @@ class IVFIndex:
             vals[i], idx[i], cos[i], ind[i] = v[0], gi[0], cv[0], iv[0]
             tot_rows += n if cand is None else int(cand.size)
             tot_clusters += min(int(p[i]), kc)
+            if explain:
+                probe_orders.append(
+                    tuple(int(c) for c in probe_c[: min(int(p[i]), kc)]))
+                kth.append(float(vals[i, kk - 1]))
         if _t:
             obs_trace.record("ivf_rerank", _t, time.perf_counter() - _t,
                              mode="probe", rows=tot_rows, queries=b)
@@ -440,11 +456,15 @@ class IVFIndex:
             clusters_probed=tot_clusters // max(b, 1),
             n_clusters=kc,
             rounds=1,
+            probe_order=tuple(probe_orders),
+            kth_scores=tuple(kth),
+            unprobed_bounds=(None,) * b if explain else (),
         )
         return vals, idx, cos, ind, stats
 
     def _search_exact(self, doc_vecs, doc_sigs, qv, qs, *, b, kk, p,
-                      order, ub, scoring_path, alpha, beta):
+                      order, ub, scoring_path, alpha, beta,
+                      explain=False):
         """Probe-widening rounds over the batch-union candidate set.
 
         The union gather uses the 2D subset formulation verified
@@ -457,7 +477,7 @@ class IVFIndex:
         rounds = 0
         while True:
             rounds += 1
-            _tr = time.perf_counter() if obs_trace.enabled() else 0.0
+            _tr = time.perf_counter() if obs_trace.active() else 0.0
             probed = np.unique(np.concatenate(
                 [order[i, : p[i]] for i in range(b)]
             )) if b else np.arange(kc)
@@ -501,12 +521,28 @@ class IVFIndex:
                     done = False
             if done:
                 break
+        probe_orders, kth, bounds = [], [], []
+        if explain:
+            if cand is None:
+                mask = np.ones((kc,), bool)   # flat-scan collapse
+            else:
+                mask = np.zeros((kc,), bool)
+                mask[probed] = True
+            for i in range(b):
+                own = order[i, : min(int(p[i]), kc)]
+                probe_orders.append(tuple(int(c) for c in own))
+                kth.append(float(vals[i, kk - 1]))
+                un = ub[i][~mask]
+                bounds.append(float(un.max()) if un.size else None)
         stats = IVFSearchStats(
             n_docs=n,
             candidate_rows=n if cand is None else int(cand.size),
             clusters_probed=kc if cand is None else int(probed.size),
             n_clusters=kc,
             rounds=rounds,
+            probe_order=tuple(probe_orders),
+            kth_scores=tuple(kth),
+            unprobed_bounds=tuple(bounds),
         )
         return vals, idx, cos, ind, stats
 

@@ -463,7 +463,8 @@ class ShardedIVFIndex:
 
     def search(self, doc_vecs, doc_sigs, qv: np.ndarray, qs: np.ndarray, *,
                b: int, k: int, nprobe: int, guarantee: str,
-               scoring_path: str, alpha: float, beta: float):
+               scoring_path: str, alpha: float, beta: float,
+               explain: bool = False):
         """Probe globally, rerank per shard, merge stably → the same
         (vals, idx, cos, ind, stats) contract as ``IVFIndex.search``
         (idx are global doc rows).
@@ -483,7 +484,7 @@ class ShardedIVFIndex:
         n, kc, S = base.n_docs, base.n_clusters, self.n_shards
         kk = min(k, n)
         sizes = np.array([m.size for m in base.members], np.int64)
-        _t = time.perf_counter() if obs_trace.enabled() else 0.0
+        _t = time.perf_counter() if obs_trace.active() else 0.0
 
         # -- global probe plane (host, float64 bound) ---------------------
         # analysis: allow[unpinned-reduction] -- f64 probe bound, clipped
@@ -546,7 +547,7 @@ class ShardedIVFIndex:
         merge_seconds = 0.0
         while True:
             rounds += 1
-            _tr = time.perf_counter() if obs_trace.enabled() else 0.0
+            _tr = time.perf_counter() if obs_trace.active() else 0.0
             cand_local: list[np.ndarray] = []
             probed_global: list[np.ndarray] = []
             for s in range(S):
@@ -617,12 +618,33 @@ class ShardedIVFIndex:
             if done:
                 break
 
+        probe_orders, kth, bounds = [], [], []
+        if explain:
+            mask = np.zeros((kc,), bool)
+            for pg in probed_global:
+                mask[pg] = True
+            for i in range(b):
+                own = np.concatenate([
+                    shard_orders[s][i, : min(int(p[s, i]),
+                                             shard_orders[s].shape[1])]
+                    for s in range(S)
+                ]) if S else np.zeros((0,), np.int64)
+                probe_orders.append(tuple(int(c) for c in own))
+                kth.append(float(vals[i, kk - 1]))
+                if ub is None:
+                    bounds.append(None)
+                else:
+                    un = ub[i][~mask]
+                    bounds.append(float(un.max()) if un.size else None)
         stats = ShardedIVFSearchStats(
             n_docs=n,
             candidate_rows=int(n_cand.sum()),
             clusters_probed=int(sum(pg.size for pg in probed_global)),
             n_clusters=kc,
             rounds=rounds,
+            probe_order=tuple(probe_orders),
+            kth_scores=tuple(kth),
+            unprobed_bounds=tuple(bounds),
             n_shards=S,
             merge_seconds=merge_seconds,
         )
@@ -646,8 +668,8 @@ class ShardedIVFIndex:
                                 jnp.asarray(cand_pad),
                                 jnp.asarray(n_cand),
                                 qv_j, qs_j)
-                if obs_trace.enabled():
-                    jax.block_until_ready(v)  # analysis: allow[host-sync] -- tracing-only audited boundary attributing mesh dispatch time to its span; no-op when tracing is off
+                if obs_trace.active():
+                    jax.block_until_ready(v)  # analysis: allow[host-sync] -- tracing/explain-only audited boundary attributing mesh dispatch time to its span; no-op when both are off
         else:
             outs = []
             for s in range(self.n_shards):
@@ -661,8 +683,8 @@ class ShardedIVFIndex:
                         qv_j, qs_j,
                         kk=kk_loc, alpha=float(alpha), beta=float(beta),
                     )
-                    if obs_trace.enabled():
-                        jax.block_until_ready(o)  # analysis: allow[host-sync] -- tracing-only audited boundary: per-shard local-top-k attribution in the logical-shard loop; no-op when tracing is off
+                    if obs_trace.active():
+                        jax.block_until_ready(o)  # analysis: allow[host-sync] -- tracing/explain-only audited boundary: per-shard local-top-k attribution in the logical-shard loop; no-op when both are off
                 outs.append(o)
             v = jnp.stack([o[0] for o in outs])
             g = jnp.stack([o[1] for o in outs])

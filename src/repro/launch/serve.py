@@ -25,8 +25,29 @@ from repro.configs import get as get_arch
 from repro.core.ingest import KnowledgeBase
 from repro.core.rag import RAGPipeline
 from repro.models import transformer as T
-from repro.obs import format_breakdown, trace as obs_trace, write_chrome_trace
+from repro.obs import (
+    SLOTargets,
+    format_breakdown,
+    trace as obs_trace,
+    write_chrome_trace,
+)
 from repro.serving import RequestRejected, ServingRuntime
+
+
+def _slo_from_args(args) -> SLOTargets | None:
+    if args.slo_p99_ms is not None:
+        return SLOTargets(p99_ms=args.slo_p99_ms)
+    return None
+
+
+def _print_health(runtime) -> None:
+    import json
+
+    h = runtime.health()
+    print(f"health: {h['status']}")
+    for reason in h["reasons"]:
+        print(f"  - {reason}")
+    print(json.dumps(h, indent=2, sort_keys=True, default=str))
 
 
 def main(argv=None):
@@ -90,6 +111,17 @@ def main(argv=None):
                     "trace-event JSON (load in Perfetto / "
                     "chrome://tracing; inspect with "
                     "`python -m repro.obs FILE`)")
+    ap.add_argument("--explain", action="store_true",
+                    help="submit every query with explain=True and print "
+                    "its EXPLAIN plan (probe set, widen rounds, bound "
+                    "evidence, cache disposition, stage durations)")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="p99 latency SLO target for --health (default "
+                    "SLOTargets otherwise)")
+    ap.add_argument("--health", action="store_true",
+                    help="print the SLO health verdict "
+                    "(runtime.health(): ok | degraded | critical with "
+                    "reasons) after the run")
     args = ap.parse_args(argv)
 
     if args.trace:
@@ -119,6 +151,7 @@ def main(argv=None):
         index=args.index,
         nprobe=args.nprobe,
         guarantee=args.guarantee,
+        slo=_slo_from_args(args),
         **({"n_shards": args.shards}
            if args.index == "ivf-sharded" and args.shards else {}),
     )
@@ -143,7 +176,8 @@ def main(argv=None):
         futures = []
         for q in args.queries:
             try:
-                futures.append((q, runtime.submit(q, k=args.top_k)))
+                futures.append((q, runtime.submit(
+                    q, k=args.top_k, explain=args.explain)))
             except RequestRejected as exc:
                 print(f"REJECTED {q!r}: {exc}")
         for q, fut in futures:
@@ -155,7 +189,11 @@ def main(argv=None):
                 mark = "*" if r.boosted else " "
                 print(f"  {mark} {r.doc_id:30s} score={r.score:.4f}")
             print(f"  generated token ids: {out.token_ids}")
+            if args.explain and served.plan is not None:
+                print(served.plan.render())
         dt = time.perf_counter() - t0
+        if args.health:
+            _print_health(runtime)
     print(f"\n{len(futures)} requests in {dt * 1e3:.1f} ms")
     print(f"serving metrics: {runtime.metrics.format()}")
     if args.metrics:
@@ -196,6 +234,7 @@ def _serve_multitenant(args) -> int:
         pool=pool, quotas=quotas,
         max_batch=max(1, args.max_batch),
         flush_deadline=args.flush_deadline_ms / 1e3,
+        slo=_slo_from_args(args),
     )
     names = [f"tenant{i:02d}" for i in range(max(1, args.tenants))]
     with runtime:
@@ -216,7 +255,8 @@ def _serve_multitenant(args) -> int:
             name = names[i % len(names)]
             try:
                 futures.append(
-                    (name, q, runtime.submit(q, k=args.top_k, tenant=name)))
+                    (name, q, runtime.submit(q, k=args.top_k, tenant=name,
+                                             explain=args.explain)))
             except RequestRejected as exc:
                 print(f"REJECTED [{exc.tenant}] {q!r}: {exc}")
         for name, q, fut in futures:
@@ -226,6 +266,8 @@ def _serve_multitenant(args) -> int:
             for r in served.results:
                 mark = "*" if r.boosted else " "
                 print(f"  {mark} {r.doc_id:30s} score={r.score:.4f}")
+            if args.explain and served.plan is not None:
+                print(served.plan.render())
         dt = time.perf_counter() - t0
         print(f"\n{len(futures)} requests in {dt * 1e3:.1f} ms")
         print(f"serving metrics: {runtime.metrics.format()}")
@@ -237,6 +279,12 @@ def _serve_multitenant(args) -> int:
         ps = runtime.pool_stats()
         print(f"pool: {ps['resident']}/{ps['max_resident']} resident, "
               f"{ps['resident_bytes']} bytes, pinned={ps['pinned']}")
+        res = runtime.resources()
+        print(f"ledger: {res['resident_bytes']} resident bytes "
+              f"({res['device_bytes']} device) across "
+              f"{len(res['tenants'])} tenants")
+        if args.health:
+            _print_health(runtime)
         if args.metrics:
             print(runtime.render_metrics(), end="")
     pool.drain()  # durably publish + unmount everything on the way out

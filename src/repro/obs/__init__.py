@@ -18,9 +18,22 @@ upward without cycles), in the same spirit as the analysis plane:
   Prometheus text exposition; ``python -m repro.obs trace.json``
   renders a per-stage p50/p99 breakdown.
 
-See docs/ARCHITECTURE.md §12 for the span model and overhead contract.
+- ``obs.explain`` — structured per-query EXPLAIN plans (``QueryPlan``):
+  index kind, probe set + exact-mode widen/bound evidence, candidate
+  counts, cache disposition, and per-stage durations collected via the
+  tracer's ``StageCollector``; ``python -m repro.obs explain plans.json``
+  renders the text tree.
+- ``obs.ledger`` — ``ResourceLedger``: resident bytes per (tenant,
+  generation, plane); the container pool's byte-budget eviction and
+  ``ServingRuntime.resources()`` both read from it.
+- ``obs.health`` — ``HealthMonitor``: rolling-window SLO burn-rate
+  alerting (``ok | degraded | critical``) over the serving metrics.
+
+See docs/ARCHITECTURE.md §12 for the span model and overhead contract,
+§14 for EXPLAIN / ledger / SLO semantics.
 """
 from repro.obs import trace
+from repro.obs.explain import QueryPlan, load_plans, write_plans
 from repro.obs.export import (
     chrome_trace,
     format_breakdown,
@@ -30,6 +43,8 @@ from repro.obs.export import (
     stage_breakdown,
     write_chrome_trace,
 )
+from repro.obs.health import HealthMonitor, SLOTargets
+from repro.obs.ledger import ResourceLedger
 from repro.obs.metrics import (
     Counter,
     Gauge,
@@ -37,17 +52,24 @@ from repro.obs.metrics import (
     MetricsRegistry,
     global_registry,
 )
-from repro.obs.trace import SpanRecord, Tracer
+from repro.obs.trace import SpanRecord, StageCollector, Tracer
 
 __all__ = [
     "trace",
     "Tracer",
     "SpanRecord",
+    "StageCollector",
     "MetricsRegistry",
     "LogHistogram",
     "Counter",
     "Gauge",
     "global_registry",
+    "QueryPlan",
+    "write_plans",
+    "load_plans",
+    "ResourceLedger",
+    "HealthMonitor",
+    "SLOTargets",
     "chrome_trace",
     "write_chrome_trace",
     "load_chrome_trace",

@@ -129,6 +129,39 @@ def request_decomposition(spans, stages=("queue_wait", "flush_wait",
     return out
 
 
+def filter_tenant_traces(spans, tenant: str) -> list[SpanRecord]:
+    """Keep only the traces whose ``request`` root span is labeled with
+    ``tenant`` (the ``--tenant`` CLI filter).  Whole traces are kept or
+    dropped — a request's child stages inherit the verdict via their
+    trace id, so the filtered view still decomposes cleanly."""
+    keep = {r.trace_id for r in spans
+            if r.name == "request" and r.args.get("tenant") == tenant}
+    return [r for r in spans if r.trace_id in keep]
+
+
+def tenant_breakdown(spans) -> dict:
+    """Per-tenant request stats from the ``request`` root spans:
+    ``{tenant: {count, p50_s, p99_s, total_s}}``.  Requests without a
+    tenant label (single-tenant serving) group under ``"-"``."""
+    by_tenant: dict[str, list[float]] = {}
+    for r in spans:
+        if r.name != "request":
+            continue
+        by_tenant.setdefault(
+            str(r.args.get("tenant", "-")), []).append(r.dur_ns / 1e9)
+    out = {}
+    for tenant, durs in by_tenant.items():
+        durs.sort()
+        n = len(durs)
+        out[tenant] = {
+            "count": n,
+            "total_s": sum(durs),
+            "p50_s": durs[int(0.50 * (n - 1))],
+            "p99_s": durs[int(0.99 * (n - 1))],
+        }
+    return out
+
+
 def format_breakdown(spans) -> str:
     """The ``python -m repro.obs`` table: per-stage count/p50/p99."""
     br = stage_breakdown(spans)
@@ -149,6 +182,16 @@ def format_breakdown(spans) -> str:
         lines.append(
             f"-- {len(reqs)} traced requests: mean {mean_req * 1e3:.2f} ms, "
             f"stage spans cover {cov * 100:.1f}% of end-to-end")
+    tb = tenant_breakdown(spans)
+    if tb and set(tb) != {"-"}:  # only when tenant-labeled requests exist
+        lines.append("")
+        lines.append(f"{'tenant':<24}{'requests':>8}{'total_ms':>12}"
+                     f"{'p50_ms':>10}{'p99_ms':>10}")
+        for tenant, s in sorted(tb.items(),
+                                key=lambda kv: -kv[1]["total_s"]):
+            lines.append(
+                f"{tenant:<24}{s['count']:>8}{s['total_s'] * 1e3:>12.2f}"
+                f"{s['p50_s'] * 1e3:>10.3f}{s['p99_s'] * 1e3:>10.3f}")
     return "\n".join(lines)
 
 

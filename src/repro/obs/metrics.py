@@ -80,6 +80,14 @@ class LogHistogram:
     def mean(self) -> float:
         return self.total / self.n if self.n else 0.0
 
+    def bucket_snapshot(self) -> tuple:
+        """One coherent ``(counts, n, sum, min, max)`` read — the SLO
+        health monitor diffs two of these to compute *windowed*
+        percentiles from a cumulative histogram."""
+        with self._lock:
+            return (list(self.counts), self.n, self.total,
+                    self.min, self.max)
+
     def snapshot(self) -> dict:
         """One coherent read (record() holds the same lock)."""
         with self._lock:
@@ -164,6 +172,40 @@ class MetricsRegistry:
 
     def histogram(self, name: str, help: str = "", **labels) -> LogHistogram:
         return self._get("histogram", name, help, labels)
+
+    # ---- series lifecycle -----------------------------------------------
+
+    def series(self, name: str) -> dict:
+        """Read-only {labels-tuple: metric} for one family ({} when the
+        family doesn't exist) — health detectors sum over this."""
+        with self._lock:
+            fam = self._families.get(name)
+            return dict(fam["series"]) if fam else {}
+
+    def prune(self, name: str | None = None, **labels) -> int:
+        """Drop every series whose labels include all of ``labels``
+        (optionally restricted to one family); empty families are
+        removed entirely.  This is the tenant-evict path: without it,
+        long-lived zipf traffic over many tenants grows label
+        cardinality without bound and evicted tenants' gauges
+        (publish-lag, resident-bytes) go stale instead of disappearing.
+        Returns the number of series removed.  A later get-or-create
+        with the same (name, labels) recreates the series fresh (and a
+        pruned family's *kind* is forgotten with it)."""
+        items = tuple(labels.items())
+        removed = 0
+        with self._lock:
+            for fam_name in list(self._families):
+                if name is not None and fam_name != name:
+                    continue
+                series = self._families[fam_name]["series"]
+                for key in [k for k in series
+                            if all(it in k for it in items)]:
+                    del series[key]
+                    removed += 1
+                if not series:
+                    del self._families[fam_name]
+        return removed
 
     # ---- export ---------------------------------------------------------
 

@@ -117,18 +117,25 @@ class _SuppressScope:
 
 
 class _Span:
-    """Context-manager span; emits a SpanRecord on exit."""
+    """Context-manager span; emits a SpanRecord on exit.
+
+    When a :class:`StageCollector` is active on this thread the span
+    additionally feeds ``(name, dur_s, args)`` into it on exit — with
+    ``trace_id=0`` that is the *only* output (EXPLAIN capture without
+    the tracer buffering anything)."""
 
     __slots__ = ("_tracer", "name", "trace_id", "span_id",
-                 "parent_id", "args", "_t0")
+                 "parent_id", "args", "_t0", "_col")
 
-    def __init__(self, tracer, name, trace_id, span_id, parent_id, args):
+    def __init__(self, tracer, name, trace_id, span_id, parent_id, args,
+                 col=None):
         self._tracer = tracer
         self.name = name
         self.trace_id = trace_id
         self.span_id = span_id
         self.parent_id = parent_id
         self.args = args
+        self._col = col
 
     def set(self, **args):
         """Attach args discovered mid-span (sizes, counts, outcomes)."""
@@ -143,11 +150,49 @@ class _Span:
     def __exit__(self, *exc):
         dur = time.perf_counter_ns() - self._t0
         self._tracer._pop()
-        # raw tuple in SpanRecord field order — materialized at drain
-        self._tracer._buf.append((
-            self.name, self.trace_id, self.span_id, self.parent_id,
-            self._t0, dur, threading.get_ident(), self.args,
-        ))
+        if self._col is not None:
+            self._col.add(self.name, dur / 1e9, self.args)
+        if self.trace_id:
+            # raw tuple in SpanRecord field order — materialized at drain
+            self._tracer._buf.append((
+                self.name, self.trace_id, self.span_id, self.parent_id,
+                self._t0, dur, threading.get_ident(), self.args,
+            ))
+        return False
+
+
+class StageCollector:
+    """Accumulates ``(name, dur_s, args)`` stage tuples from spans and
+    ``record()`` calls executed under :func:`collect` — the substrate
+    EXPLAIN plans source their per-stage durations from.  Thread-local
+    (one collector per query dispatch), so no lock."""
+
+    __slots__ = ("stages",)
+
+    def __init__(self):
+        self.stages: list = []
+
+    def add(self, name: str, dur_s: float, args) -> None:
+        self.stages.append((name, dur_s, dict(args) if args else {}))
+
+
+class _CollectScope:
+    """Context manager binding a StageCollector to this thread."""
+
+    __slots__ = ("_tracer", "_col", "_prev")
+
+    def __init__(self, tracer, col):
+        self._tracer = tracer
+        self._col = col
+
+    def __enter__(self):
+        tls = self._tracer._tls
+        self._prev = getattr(tls, "collector", None)
+        tls.collector = self._col
+        return self._col
+
+    def __exit__(self, *exc):
+        self._tracer._tls.collector = self._prev
         return False
 
 
@@ -197,6 +242,24 @@ class Tracer:
     def capacity(self) -> int:
         return self._buf.maxlen or 0
 
+    def collect(self, col: "StageCollector") -> "_CollectScope":
+        """Bind ``col`` to this thread for the scope: spans and
+        ``record()`` calls inside feed it even when tracing is off
+        (EXPLAIN capture).  Nests; restores the previous collector."""
+        return _CollectScope(self, col)
+
+    def collecting(self) -> bool:
+        return getattr(self._tls, "collector", None) is not None
+
+    def active(self) -> bool:
+        """True when instrumentation should run its timed path: the
+        tracer is enabled *or* a collector is bound to this thread.
+        Host-sync gates (``block_until_ready`` before reading the
+        clock) key off this so EXPLAIN gets honest device-time
+        attribution."""
+        return self._enabled or getattr(self._tls, "collector",
+                                        None) is not None
+
     # ---- ids / sampling -------------------------------------------------
 
     def alloc_id(self) -> int:
@@ -224,19 +287,27 @@ class Tracer:
         to attach to a request trace from another thread, or 0 to
         force a no-op.  ``parent`` defaults to the enclosing span.
         """
+        col = getattr(self._tls, "collector", None)
         if not self._enabled:
-            return _NULL
+            if col is None:
+                return _NULL
+            # collector-only span: timed, feeds the collector, buffers
+            # nothing (trace_id=0 also suppresses descendants' traces
+            # via the stack push, like _SuppressScope)
+            return _Span(self, name, 0, 0, 0, args, col)
         stack = getattr(self._tls, "stack", None)
         explicit = trace is not _INHERIT
         if not explicit:
             trace = stack[-1][0] if stack else self.begin_trace()
         if not trace:
+            if col is not None:
+                return _Span(self, name, 0, 0, 0, args, col)
             # explicit 0 = an unsampled request: suppress descendants
             # too (otherwise they would each start orphan traces)
             return _SuppressScope(self) if explicit else _NULL
         if parent is _INHERIT:
             parent = stack[-1][1] if stack else 0
-        return _Span(self, name, trace, self.alloc_id(), parent, args)
+        return _Span(self, name, trace, self.alloc_id(), parent, args, col)
 
     def record(self, name: str, t0_s: float, dur_s: float, *,
                trace=_INHERIT, parent=_INHERIT, span_id: int = 0,
@@ -246,6 +317,9 @@ class Tracer:
         threads (explicit ``trace``) or inside an enclosing span on
         this thread (inherited; dropped at top level rather than
         starting a trace).  Returns the span id (0 when dropped)."""
+        col = getattr(self._tls, "collector", None)
+        if col is not None:
+            col.add(name, dur_s, args)
         if not self._enabled:
             return 0
         stack = getattr(self._tls, "stack", None)
@@ -342,12 +416,19 @@ def enabled() -> bool:
     return _DEFAULT._enabled
 
 
+def active() -> bool:
+    """Tracing enabled or a collector bound to this thread (EXPLAIN)."""
+    return _DEFAULT.active()
+
+
 span = _DEFAULT.span
 record = _DEFAULT.record
 record_batch = _DEFAULT.record_batch
 begin_trace = _DEFAULT.begin_trace
 alloc_id = _DEFAULT.alloc_id
 drain = _DEFAULT.drain
+collect = _DEFAULT.collect
+collecting = _DEFAULT.collecting
 
 
 if os.environ.get("RAGDB_TRACE", "") not in ("", "0"):  # pragma: no cover

@@ -53,6 +53,7 @@ from repro.analysis import sanitizers
 from repro.core.engine import QueryEngine, RetrievalResult  # noqa: F401
 from repro.core.ingest import KnowledgeBase
 from repro.obs import render_prometheus
+from repro.obs.ledger import ResourceLedger
 from repro.obs.metrics import global_registry
 
 from repro.serving.cache import ResultCache
@@ -100,6 +101,7 @@ class ServingRuntime:
         result_cache_size: int = 2048,
         container_path: str | None = None,
         compact_ratio: float | None = KnowledgeBase.DEFAULT_COMPACT_RATIO,
+        slo=None,
         **engine_kwargs,
     ):
         self.metrics = ServingMetrics()
@@ -109,6 +111,10 @@ class ServingRuntime:
         # always constructed (one dict + a lock); inert until armed, and
         # check() additionally no-ops unless RAGDB_SANITIZERS is on
         self.retrace_guard = sanitizers.RetraceGuard()
+        # SLO health monitor (obs/health.py): lazily constructed on the
+        # first health() call so the window clock starts at first use
+        self._slo = slo
+        self._health_monitor = None
         if pool is not None:
             # multi-tenant mode: the pool owns every KB/engine stack
             if kb is not None or engine is not None or container_path:
@@ -121,10 +127,14 @@ class ServingRuntime:
             self.pool = pool
             self.router = TenantRouter(pool, quotas=quotas)
             self.snapshots = None
-            # unmount hygiene: an evicted tenant's cached results leave
-            # memory with its stack (keyspace-scoped, satellite of §13)
-            if self.cache is not None:
-                pool.on_evict = self.cache.drop_keyspace
+            # the pool's ledger is the runtime's resource accounting
+            self.ledger = pool.ledger
+            # unmount hygiene: an evicted tenant's cached results AND
+            # its labeled metric series leave memory with its stack —
+            # without the prune, zipf tenant churn grows label
+            # cardinality without bound and evicted tenants' gauges
+            # (publish lag, resident bytes) go stale forever
+            pool.on_evict = self._on_tenant_evict
             self.scheduler = MicroBatchScheduler(
                 router=self.router,
                 max_batch=max_batch,
@@ -137,9 +147,11 @@ class ServingRuntime:
             return
         self.pool = None
         self.router = None
+        self.ledger = ResourceLedger(registry=self.metrics.registry)
         self.snapshots = SnapshotManager(
             kb, engine=engine, container_path=container_path,
-            compact_ratio=compact_ratio, **engine_kwargs,
+            compact_ratio=compact_ratio, ledger=self.ledger,
+            **engine_kwargs,
         )
         self.scheduler = MicroBatchScheduler(
             self.snapshots,
@@ -150,6 +162,13 @@ class ServingRuntime:
             metrics=self.metrics,
             retrace_guard=self.retrace_guard,
         )
+
+    def _on_tenant_evict(self, tenant: str) -> None:
+        """Pool eviction hook: drop the tenant's cache keyspace and
+        prune its labeled series from the runtime registry."""
+        if self.cache is not None:
+            self.cache.drop_keyspace(tenant)
+        self.metrics.drop_tenant(tenant)
 
     # ---- lifecycle ------------------------------------------------------
 
@@ -169,10 +188,14 @@ class ServingRuntime:
     # ---- request plane (any thread) -------------------------------------
 
     def submit(self, text: str, k: int = 5,
-               tenant: str | None = None) -> Future:
+               tenant: str | None = None, *,
+               explain: bool = False) -> Future:
         """Future[ServedResult]; raises RequestRejected on backpressure
-        (queue full, or — multi-tenant mode — tenant over quota)."""
-        return self.scheduler.submit(text, k, tenant=tenant)
+        (queue full, or — multi-tenant mode — tenant over quota).
+        ``explain=True`` attaches the per-query EXPLAIN plan to the
+        resolved ``ServedResult.plan`` (docs/ARCHITECTURE.md §14)."""
+        return self.scheduler.submit(text, k, tenant=tenant,
+                                     explain=explain)
 
     def query_batch(
         self, texts: list[str], k: int = 5, tenant: str | None = None
@@ -280,6 +303,36 @@ class ServingRuntime:
         fraction, widening rounds, retrains); probe fields are None
         on a flat index or before the first ivf dispatch."""
         return self.engine.index_stats()
+
+    def resources(self) -> dict:
+        """Ledger snapshot of resident bytes per (tenant, plane) — the
+        same numbers pool eviction budgets against, so reported
+        occupancy and budget decisions can never diverge
+        (docs/ARCHITECTURE.md §14).  The result-cache plane is
+        refreshed from the live cache at call time."""
+        if self.cache is not None:
+            sizes = self.cache.keyspace_bytes()
+            if self.pool is None:
+                self.ledger.set_plane("default", "result_cache",
+                                      sum(sizes.values()))
+            else:
+                for keyspace, nbytes in sizes.items():
+                    self.ledger.set_plane(keyspace, "result_cache", nbytes)
+        return self.ledger.snapshot()
+
+    def health(self) -> dict:
+        """One SLO health verdict: ``{"status": "ok|degraded|critical",
+        "reasons": [...], "signals": {...}}`` (obs/health.py).  Each
+        call takes a sample, evaluates the rolling windows, and exports
+        ``ragdb_health_status`` + burn-rate gauges into the runtime
+        registry (so they ship in ``render_metrics()``).  Configure
+        targets via ``ServingRuntime(..., slo=SLOTargets(...))``."""
+        if self._health_monitor is None:
+            from repro.obs.health import HealthMonitor
+            self._health_monitor = HealthMonitor(
+                self.metrics, targets=self._slo,
+                export_registry=self.metrics.registry)
+        return self._health_monitor.check()
 
     def tenant_metrics(self) -> dict:
         """Per-tenant QPS/p50/p99/rejections (multi-tenant mode;

@@ -105,6 +105,21 @@ class ResultCache:
             space = self._spaces.pop(keyspace, None)
             return 0 if space is None else len(space)
 
+    def keyspace_bytes(self) -> dict:
+        """Estimated resident bytes per keyspace, for the resource
+        ledger's ``result_cache`` plane: per entry, the key text plus
+        ~96 B of tuple/dict overhead plus ~96 B per cached
+        RetrievalResult row (object header + 4 boxed fields) — a
+        documented estimate, not an exact object-graph walk."""
+        with self._lock:
+            return {
+                ks: sum(
+                    96 + len(key[0]) + 96 * len(results)
+                    for key, results in space.items()
+                )
+                for ks, space in self._spaces.items()
+            }
+
     def __len__(self) -> int:
         with self._lock:
             return sum(len(s) for s in self._spaces.values())

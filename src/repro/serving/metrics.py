@@ -149,7 +149,32 @@ class ServingMetrics:
     def on_fail(self) -> None:
         self._failed.inc()
 
+    # ---- tenant lifecycle ----------------------------------------------
+
+    def drop_tenant(self, tenant: str) -> int:
+        """Forget a tenant's labeled series (pool eviction path): the
+        memoized handle set and every ``tenant=``-labeled series in the
+        registry are pruned, so long-lived tenant churn cannot grow
+        label cardinality without bound.  A remount recreates the
+        series fresh from zero."""
+        self._tenant_series.pop(tenant, None)
+        return self.registry.prune(tenant=tenant)
+
     # ---- export ---------------------------------------------------------
+
+    def health_sample(self) -> dict:
+        """Raw cumulative values the SLO health monitor windows over
+        (obs/health.py): counters plus one coherent latency
+        bucket-snapshot."""
+        return {
+            "requests": self._requests.value,
+            "completed": self._completed.value,
+            "rejected": self._rejected.value,
+            "failed": self._failed.value,
+            "cache_hits": self._cache_hits.value,
+            "cache_misses": self._cache_misses.value,
+            "latency_buckets": self._latency.bucket_snapshot(),
+        }
 
     @property
     def latency(self) -> LogHistogram:

@@ -60,6 +60,7 @@ from dataclasses import dataclass, field
 from repro.core.engine import RetrievalResult
 from repro.core.tokenizer import normalize
 from repro.obs import trace
+from repro.obs.explain import QueryPlan, finalize_plan
 
 from repro.serving.cache import DEFAULT_KEYSPACE, ResultCache
 from repro.serving.metrics import ServingMetrics
@@ -81,11 +82,26 @@ class RequestRejected(RuntimeError):
 
 @dataclass
 class ServedResult:
-    """What a resolved future holds."""
+    """What a resolved future holds.  ``plan`` is the EXPLAIN record
+    (obs/explain.py), available only when the request was submitted
+    with ``explain=True`` — materialized lazily on first access
+    (``plan_source`` holds the bound thunk), so resolving a future
+    costs nothing on the traced-QPS budget when nobody reads the plan."""
 
     results: list[RetrievalResult]
     generation: int
     cached: bool = False
+    plan_source: object = None   # zero-arg () -> QueryPlan, or None
+    _plan: QueryPlan | None = field(default=None, repr=False,
+                                    compare=False)
+
+    @property
+    def plan(self) -> QueryPlan | None:
+        if self.plan_source is None:
+            return None
+        if self._plan is None:
+            self._plan = self.plan_source()
+        return self._plan
 
 
 @dataclass
@@ -101,9 +117,47 @@ class _Pending:
     # flush wait
     trace_id: int = 0
     t_dequeue: float = 0.0
+    explain: bool = False
 
 
 _STOP = object()
+
+
+def _hit_plan_thunk(text, k, generation, tenant, total_s):
+    """Bind a result-cache-hit EXPLAIN plan into a zero-arg thunk for
+    ``ServedResult.plan``'s lazy materialization."""
+    def build():
+        return QueryPlan(
+            query=text, k=k, result_cache="hit",
+            generation=generation, tenant=tenant, total_s=total_s,
+            request_stages=(("cache_lookup", total_s),))
+    return build
+
+
+def _plan_thunk(qplans, idx, tenant, generation, result_cache,
+                coalesced, t_submit, t_dequeue, t_score0, t_score1,
+                t_done):
+    """Bind one flushed request's EXPLAIN enrichment into a zero-arg
+    thunk — by value, since the flush loop reuses its locals — for
+    ``ServedResult.plan``'s lazy materialization.  The thunk pulls the
+    engine plan out of the (itself lazy) ``PlanBatch`` and finalizes
+    the per-request copy only when somebody reads the plan."""
+    def build():
+        return finalize_plan(
+            qplans[idx],
+            tenant=tenant,
+            generation=generation,
+            result_cache=result_cache,
+            coalesced=coalesced,
+            request_stages=(
+                ("queue_wait", t_dequeue - t_submit),
+                ("flush_wait", t_score0 - t_dequeue),
+                ("score", t_score1 - t_score0),
+                ("merge", t_done - t_score1),
+            ),
+            total_s=t_done - t_submit,
+        )
+    return build
 
 
 class MicroBatchScheduler:
@@ -195,13 +249,16 @@ class MicroBatchScheduler:
     # ---- submission -----------------------------------------------------
 
     def submit(self, text: str, k: int = 5,
-               tenant: str | None = None) -> Future:
+               tenant: str | None = None, *,
+               explain: bool = False) -> Future:
         """Enqueue one request; returns a Future[ServedResult].
 
         Raises ``RequestRejected`` when the admission queue is full,
         the scheduler is stopped, or (multi-tenant mode) the tenant is
         over its token-bucket quota (bounded memory, explicit
-        backpressure).
+        backpressure).  ``explain=True`` attaches the per-query
+        :class:`~repro.obs.explain.QueryPlan` to the resolved
+        ``ServedResult.plan``.
         """
         t_submit = time.perf_counter()
         tenant = DEFAULT_TENANT if tenant is None else tenant
@@ -230,14 +287,20 @@ class MicroBatchScheduler:
                         trace.record("request", t_submit, now - t_submit,
                                      trace=tid, k=k, cached=True,
                                      generation=generation)
+                    plan_source = None
+                    if explain:
+                        plan_source = _hit_plan_thunk(
+                            text, k, generation, mt_tenant,
+                            now - t_submit)
                     fut: Future = Future()
                     fut.set_result(
-                        ServedResult(hit, generation, cached=True)
+                        ServedResult(hit, generation, cached=True,
+                                     plan_source=plan_source)
                     )
                     return fut
                 self.metrics.on_cache_miss()
         req = _Pending(text=text, k=k, tenant=tenant,
-                       t_submit=t_submit, trace_id=tid)
+                       t_submit=t_submit, trace_id=tid, explain=explain)
         try:
             self._queue.put_nowait(req)
         except queue.Full:
@@ -369,8 +432,14 @@ class MicroBatchScheduler:
                             order[key] = len(texts)
                             texts.append(req.text)
                     ksp.set(unique=len(texts), requests=len(kgroup))
+                want_explain = any(r.explain for r in kgroup)
                 t_score0 = time.perf_counter()
-                results = snap.query_batch(texts, k)
+                if want_explain:
+                    results, qplans = snap.query_batch(
+                        texts, k, explain=True)
+                else:
+                    results = snap.query_batch(texts, k)
+                    qplans = None
                 t_score1 = time.perf_counter()
                 scored += len(texts)
                 if self.retrace_guard is not None:
@@ -379,16 +448,38 @@ class MicroBatchScheduler:
                     # failure lands on the futures of the batch
                     # that caused it
                     self.retrace_guard.check("scheduler._flush")
+                if want_explain:
+                    # coalesce fanout per scored column (how many
+                    # requests each unique query serves)
+                    fanout: dict[str, int] = {}
+                    for req in kgroup:
+                        key = normalize(req.text)
+                        fanout[key] = fanout.get(key, 0) + 1
                 for req in kgroup:
-                    res = results[order[normalize(req.text)]]
+                    key = normalize(req.text)
+                    res = results[order[key]]
                     if self.cache is not None:
                         self.cache.put(req.text, k, snap.generation,
                                        res, keyspace=tenant)
                     t_done = time.perf_counter()
                     self.metrics.on_complete(t_done - req.t_submit,
                                              mt_tenant)
+                    plan_source = None
+                    if req.explain and qplans is not None:
+                        # enrich the engine plan with the scheduler
+                        # view: the same timestamps _trace_request
+                        # records, so EXPLAIN stage durations tile the
+                        # span decomposition by construction
+                        plan_source = _plan_thunk(
+                            qplans, order[key], mt_tenant,
+                            snap.generation,
+                            ("miss" if self.cache is not None
+                             else "bypass"),
+                            fanout[key], req.t_submit, req.t_dequeue,
+                            t_score0, t_score1, t_done)
                     req.future.set_result(
-                        ServedResult(res, snap.generation)
+                        ServedResult(res, snap.generation,
+                                     plan_source=plan_source)
                     )
                     if req.trace_id:
                         deferred.append(

@@ -31,7 +31,9 @@ number of threads may read ``current`` / call snapshot queries.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
+import time
 from dataclasses import dataclass
 
 from repro.core import signature as sigmod
@@ -46,6 +48,9 @@ from repro.core.ingest import KnowledgeBase
 from repro.core.vectorizer import HashedTfIdf
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import global_registry
+
+# shared reentrant no-op scope for the explain=False query path
+_NULL_CTX = contextlib.nullcontext()
 
 
 @dataclass(frozen=True)
@@ -107,51 +112,96 @@ class EngineSnapshot:
         return len(self.doc_ids)
 
     def query_batch(
-        self, texts: list[str], k: int = 5
-    ) -> list[list[RetrievalResult]]:
+        self, texts: list[str], k: int = 5, *, explain: bool = False
+    ):
         """Score against this generation — pure, thread-safe, no refresh.
 
         Query vectors are built from the snapshot's own idf copy, so the
         result is bit-identical to ``QueryEngine.query_batch`` on a KB
         frozen at ``generation`` even while the live KB mutates.
+
+        ``explain=True`` returns ``(results, plans)`` — one
+        :class:`repro.obs.explain.QueryPlan` per query, pinned at this
+        snapshot's generation (docs/ARCHITECTURE.md §14).
         """
         if k <= 0:
             raise ValueError(f"k must be a positive integer, got {k}")
         if not self.doc_ids or not texts:
-            return [[] for _ in texts]
+            empty = [[] for _ in texts]
+            if explain:
+                from repro.obs import explain as explain_mod
+                plans = explain_mod.plans_from_dispatch(
+                    texts, k, index=self.index_kind,
+                    scoring_path=self.scoring_path,
+                    guarantee=self.guarantee, n_docs=0,
+                    generation=self.generation)
+                return empty, plans
+            return empty
         out: list[list[RetrievalResult]] = []
+        batches = []
         for start in range(0, len(texts), self.max_batch):
-            out.extend(self._chunk(texts[start: start + self.max_batch], k))
+            chunk = texts[start: start + self.max_batch]
+            if explain:
+                res, ps = self._chunk(chunk, k, explain=True)
+                out.extend(res)
+                batches.append(ps)
+            else:
+                out.extend(self._chunk(chunk, k))
+        if explain:
+            from repro.obs.explain import PlanBatch
+            return out, PlanBatch.concat(batches)
         return out
 
-    def _chunk(self, texts: list[str], k: int):
-        with obs_trace.span("query_embed", queries=len(texts)):
-            pairs = [
-                (
-                    self.vectorizer.query_vector(t),
-                    sigmod.query_signature(t, width_words=self.sig_words),
-                )
-                for t in texts
-            ]
-            qv, qs = pack_query_arrays(
-                pairs, self.vectorizer.dim, self.sig_words)
-        n = len(self.doc_ids)
-        if self.index_kind != "flat" and self.ivf is not None:
-            vals, idx, cos, ind, _ = self.ivf.search(
-                self.doc_vecs, self.doc_sigs, qv, qs,
-                b=len(texts), k=min(k, n), nprobe=self.nprobe,
-                guarantee=self.guarantee, scoring_path=self.scoring_path,
-                alpha=self.alpha, beta=self.beta,
-            )
+    def _chunk(self, texts: list[str], k: int, *, explain: bool = False):
+        if explain:
+            from repro.obs import explain as explain_mod
+            col = obs_trace.StageCollector()
+            scope = obs_trace.get().collect(col)
+            t0 = time.perf_counter()
         else:
-            vals, idx, cos, ind = score_batch_arrays(
-                self.doc_vecs, self.doc_sigs, qv, qs,
-                scoring_path=self.scoring_path, k=min(k, n),
-                alpha=self.alpha, beta=self.beta, n_docs=n,
-                kernel_operands=self.kernel_operands,
-            )
-        return results_from_topk(self.doc_ids, len(texts),
-                                 vals, idx, cos, ind)
+            scope = _NULL_CTX
+        with scope:
+            with obs_trace.span("query_embed", queries=len(texts)):
+                pairs = [
+                    (
+                        self.vectorizer.query_vector(t),
+                        sigmod.query_signature(t, width_words=self.sig_words),
+                    )
+                    for t in texts
+                ]
+                qv, qs = pack_query_arrays(
+                    pairs, self.vectorizer.dim, self.sig_words)
+            n = len(self.doc_ids)
+            stats = None
+            if self.index_kind != "flat" and self.ivf is not None:
+                vals, idx, cos, ind, stats = self.ivf.search(
+                    self.doc_vecs, self.doc_sigs, qv, qs,
+                    b=len(texts), k=min(k, n), nprobe=self.nprobe,
+                    guarantee=self.guarantee, scoring_path=self.scoring_path,
+                    alpha=self.alpha, beta=self.beta, explain=explain,
+                )
+            else:
+                vals, idx, cos, ind = score_batch_arrays(
+                    self.doc_vecs, self.doc_sigs, qv, qs,
+                    scoring_path=self.scoring_path, k=min(k, n),
+                    alpha=self.alpha, beta=self.beta, n_docs=n,
+                    kernel_operands=self.kernel_operands,
+                )
+            results = results_from_topk(self.doc_ids, len(texts),
+                                        vals, idx, cos, ind)
+        if not explain:
+            return results
+        # capture only — plan dataclasses materialize on first access
+        # (PlanBatch), keeping explain inside the traced-QPS budget
+        stages = tuple(col.stages)
+        total_s = time.perf_counter() - t0
+        kind, path, guar = self.index_kind, self.scoring_path, self.guarantee
+        gen = self.generation
+        return results, explain_mod.PlanBatch(
+            lambda: explain_mod.plans_from_dispatch(
+                texts, k, index=kind, scoring_path=path, guarantee=guar,
+                n_docs=n, stats=stats, stages=stages,
+                vector_cache_hits=None, generation=gen, total_s=total_s))
 
 
 class SnapshotManager:
@@ -167,6 +217,7 @@ class SnapshotManager:
                  compact_ratio: float | None =
                  KnowledgeBase.DEFAULT_COMPACT_RATIO,
                  tenant: str | None = None,
+                 ledger=None,
                  **engine_kwargs):
         if engine is None:
             if kb is None:
@@ -182,10 +233,15 @@ class SnapshotManager:
         # and the publish-lag gauge carry the tenant end to end; None
         # on the classic single-tenant path (unchanged series names)
         self.tenant = tenant
+        # resource ledger (obs/ledger.py): re-measured at every publish
+        # so resident-byte accounting always reflects the generation
+        # readers can actually see
+        self.ledger = ledger
         self._publish_lock = threading.Lock()
         with self._publish_lock:
             engine.refresh()
             self._current = EngineSnapshot.capture(engine)
+        self._ledger_update()
 
     @property
     def current(self) -> EngineSnapshot:
@@ -240,7 +296,21 @@ class SnapshotManager:
                         **lag_labels,
                     ).set(lag)
                     sp.set(generation=snap.generation, lag_s=round(lag, 6))
+            self._ledger_update()
             return self._current
+
+    def _ledger_update(self) -> None:
+        """Re-measure this engine's resident planes into the ledger
+        (mount + every publish — the points where they change)."""
+        if self.ledger is None:
+            return
+        from repro.obs import ledger as ledger_mod
+        planes = ledger_mod.measure_engine_planes(self.engine)
+        if self.container_path is not None:
+            planes["journal_tail"] = ledger_mod.measure_journal(
+                self.container_path)
+        self.ledger.update(self.tenant or "default", planes,
+                           generation=self._current.generation)
 
 
 def results_equal(a: list[RetrievalResult], b: list[RetrievalResult]) -> bool:

@@ -49,7 +49,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from repro.core.ingest import KnowledgeBase
-from repro.obs import trace as obs_trace
+from repro.obs import ledger as ledger_mod, trace as obs_trace
+from repro.obs.ledger import ResourceLedger
 from repro.obs.metrics import MetricsRegistry, global_registry
 
 from repro.serving.snapshot import SnapshotManager
@@ -78,6 +79,7 @@ class MountedTenant:
     pins: int = 0
     mounted_at: float = field(default_factory=time.perf_counter)
     last_used: float = field(default_factory=time.perf_counter)
+    ledger: ResourceLedger | None = None
 
     @property
     def generation(self) -> int:
@@ -85,8 +87,15 @@ class MountedTenant:
 
     @property
     def resident_bytes(self) -> int:
-        """Estimated device footprint: the engine's doc matrix +
-        signature matrix (the O(N·D) terms; metadata is noise)."""
+        """Device footprint per the resource ledger (doc matrix + IVF
+        state + kernel operands, re-measured at mount and every
+        publish) — the *same* accounting ``ServingRuntime.resources()``
+        reports, so budget decisions and reported occupancy can never
+        diverge.  Falls back to a raw array-nbytes estimate when no
+        ledger is attached (standalone SnapshotManager in tests)."""
+        if self.ledger is not None:
+            return self.ledger.tenant_bytes(
+                self.tenant, planes=ledger_mod.DEVICE_PLANES)
         eng = self.snapshots.engine
         total = 0
         for arr in (getattr(eng, "doc_vecs", None),
@@ -123,6 +132,10 @@ class ContainerPool:
         # result-cache keyspace when its stack leaves memory
         self.on_evict = None
         self._registry = registry if registry is not None else global_registry()
+        # the resource ledger (obs/ledger.py): every mount's
+        # SnapshotManager measures its planes into it at mount/publish,
+        # and budget eviction consumes its device-plane bytes
+        self.ledger = ResourceLedger(registry=self._registry)
         self._lock = threading.RLock()
         # LRU order: oldest-used first; values are MountedTenant
         self._resident: OrderedDict[str, MountedTenant] = OrderedDict()
@@ -198,9 +211,10 @@ class ContainerPool:
                 kb = KnowledgeBase(**self.kb_kwargs)
             snaps = SnapshotManager(
                 kb, container_path=path, compact_ratio=self.compact_ratio,
-                tenant=tenant, **self.engine_kwargs,
+                tenant=tenant, ledger=self.ledger, **self.engine_kwargs,
             )
-        mt = MountedTenant(tenant=tenant, path=path, kb=kb, snapshots=snaps)
+        mt = MountedTenant(tenant=tenant, path=path, kb=kb,
+                           snapshots=snaps, ledger=self.ledger)
         self._resident[tenant] = mt
         dt = time.perf_counter() - t0
         self._mount_hist.record(dt)
@@ -264,9 +278,20 @@ class ContainerPool:
             self._resident.pop(mt.tenant)
         dt = time.perf_counter() - t0
         self._evict_hist.record(dt)
+        # aggregate (unlabeled) eviction counter: a per-tenant labeled
+        # series would be pruned right below, and under zipf churn it
+        # would grow label cardinality without bound anyway
         self._registry.counter(
-            "ragdb_tenant_evictions_total", "container evictions",
-            tenant=mt.tenant).inc()
+            "ragdb_tenant_evictions_total", "container evictions").inc()
+        # series hygiene: the evicted tenant's accounting leaves memory
+        # with its stack — the ledger drops its resident-bytes series,
+        # and every other tenant-labeled series (mounts, publish lag)
+        # is pruned from both the pool registry and the global one so
+        # gauges can never go stale across an evict/remount cycle
+        self.ledger.drop_tenant(mt.tenant)
+        self._registry.prune(tenant=mt.tenant)
+        if self._registry is not global_registry():
+            global_registry().prune(tenant=mt.tenant)
         self._update_gauges_locked()
         if self.on_evict is not None:
             self.on_evict(mt.tenant)

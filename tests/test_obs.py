@@ -298,6 +298,73 @@ class TestMetricsRegistry:
     def test_global_registry_is_singleton(self):
         assert global_registry() is global_registry()
 
+    # ---- series lifecycle (tenant evict/remount churn) ------------------
+
+    def test_concurrent_get_or_create_many_tenants(self):
+        """Get-or-create under concurrent tenants: every thread racing
+        on the same (name, labels) must land on the same object, and
+        the family must end with exactly one series per tenant."""
+        reg = MetricsRegistry()
+        tenants = [f"t{i:02d}" for i in range(8)]
+        got: dict = {t: [] for t in tenants}
+        barrier = threading.Barrier(16)
+
+        def worker(wid: int):
+            barrier.wait()
+            for _ in range(50):
+                t = tenants[(wid + _) % len(tenants)]
+                c = reg.counter("ragdb_reqs_total", tenant=t)
+                c.inc()
+                got[t].append(c)
+
+        threads = [threading.Thread(target=worker, args=(w,))
+                   for w in range(16)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        series = reg.series("ragdb_reqs_total")
+        assert len(series) == len(tenants)
+        for t in tenants:
+            assert len({id(c) for c in got[t]}) == 1  # one object per tenant
+        total = sum(c.value for c in series.values())
+        assert total == 16 * 50
+
+    def test_prune_on_evict(self):
+        reg = MetricsRegistry()
+        reg.counter("ragdb_reqs_total", tenant="a").inc()
+        reg.counter("ragdb_reqs_total", tenant="b").inc()
+        reg.gauge("ragdb_publish_lag_seconds", tenant="a").set(1.0)
+        reg.gauge("ragdb_other").set(2.0)
+        removed = reg.prune(tenant="a")
+        assert removed == 2
+        assert "tenant=a" not in "".join(reg.snapshot())
+        # the other tenant and unlabeled series are untouched
+        snap = reg.snapshot()
+        assert snap["ragdb_reqs_total{tenant=b}"] == 1
+        assert snap["ragdb_other"] == 2.0
+        # name-restricted prune only touches that family
+        reg.counter("ragdb_reqs_total", tenant="c").inc()
+        reg.gauge("ragdb_publish_lag_seconds", tenant="c").set(3.0)
+        assert reg.prune("ragdb_reqs_total", tenant="c") == 1
+        assert "ragdb_publish_lag_seconds{tenant=c}" in reg.snapshot()
+
+    def test_prune_forgets_kind(self):
+        """A fully-pruned family's kind is forgotten with it: the same
+        name can be recreated as a different kind without the
+        kind-mismatch rejection (and the rejection still applies while
+        any series survives)."""
+        reg = MetricsRegistry()
+        reg.counter("ragdb_x", tenant="a")
+        reg.counter("ragdb_x", tenant="b")
+        reg.prune(tenant="a")
+        with pytest.raises(ValueError, match="counter"):
+            reg.gauge("ragdb_x", tenant="c")  # b's series keeps the kind
+        reg.prune(tenant="b")  # family now empty -> removed
+        g = reg.gauge("ragdb_x", tenant="c")  # recreate as a gauge
+        g.set(7)
+        assert reg.snapshot()["ragdb_x{tenant=c}"] == 7
+
 
 # ---- LogHistogram edge cases ---------------------------------------------
 

@@ -1,0 +1,389 @@
+"""Decision-plane observability contracts (obs/explain, obs/ledger,
+obs/health): EXPLAIN plans agree with ``index_stats()`` and tile the
+request span decomposition; the resource ledger's per-plane accounting
+matches what the container pool evicts on; and the SLO health monitor
+transitions ok → degraded → critical under injected faults."""
+import json
+import threading
+
+import pytest
+
+from repro.core.engine import QueryEngine
+from repro.core.ingest import KnowledgeBase
+from repro.obs import trace as obs_trace
+from repro.obs.explain import QueryPlan, load_plans, write_plans
+from repro.obs.health import HealthMonitor, SLOTargets
+from repro.obs.ledger import (
+    DEVICE_PLANES,
+    RESIDENT_PLANES,
+    ResourceLedger,
+    measure_engine_planes,
+)
+from repro.obs.metrics import LogHistogram, MetricsRegistry
+from repro.serving import ServingRuntime
+
+DIM = 256
+
+
+def _kb(n_docs: int = 40) -> KnowledgeBase:
+    kb = KnowledgeBase(dim=DIM)
+    for i in range(n_docs):
+        kb.add_text(f"doc_{i:03d}.txt",
+                    f"alpha beta entity INV-{i:04d} report gamma {i}")
+    return kb
+
+
+# ---- EXPLAIN --------------------------------------------------------------
+
+
+class TestExplain:
+    def test_plain_path_unchanged(self):
+        """explain=False returns the bare results (no tuple) and the
+        stats carry no per-query explain payload."""
+        eng = QueryEngine(_kb(), index="ivf", nprobe=2)
+        out = eng.query_batch(["alpha INV-0003"], k=3)
+        assert isinstance(out, list) and len(out[0]) == 3
+        assert eng._last_index_stats.probe_order == ()
+
+    def test_ivf_exact_plan_matches_index_stats(self):
+        """The acceptance criterion: an ivf exact-mode plan's
+        probed/widened/bound values are consistent with
+        ``index_stats()``, and the kth score dominates the unprobed
+        bound (the exactness certificate)."""
+        eng = QueryEngine(_kb(60), index="ivf", nprobe=2,
+                          guarantee="exact")
+        out, plans = eng.query_batch(
+            ["lookup INV-0007 status", "alpha gamma report"],
+            k=3, explain=True)
+        stats = eng.index_stats()
+        assert len(plans) == 2
+        for p, rows in zip(plans, out):
+            assert p.index == "ivf" and p.guarantee == "exact"
+            assert p.clusters_probed == stats["clusters_probed"]
+            assert p.n_clusters == stats["n_clusters"]
+            assert p.rounds == stats["rounds"]
+            assert p.rows_gathered == stats["candidate_rows"]
+            assert len(p.probe_order) >= 1
+            assert len(rows) == 3
+            if p.unprobed_bound is not None:
+                assert p.kth_score >= p.unprobed_bound
+            assert p.stages  # engine stage durations captured
+            assert "EXPLAIN" in p.render()
+
+    def test_probe_mode_plan(self):
+        eng = QueryEngine(_kb(60), index="ivf", nprobe=1)
+        _, plans = eng.query_batch(["alpha INV-0001"], k=2, explain=True)
+        p = plans[0]
+        assert p.guarantee == "probe"
+        assert p.clusters_probed <= p.n_clusters
+        assert p.kth_score is not None
+
+    def test_flat_plan_and_vector_cache(self):
+        eng = QueryEngine(_kb())
+        eng.query_batch(["alpha INV-0001"], k=2)  # warm the vector LRU
+        _, plans = eng.query_batch(
+            ["alpha INV-0001", "never seen before"], k=2, explain=True)
+        assert plans[0].vector_cache == "hit"
+        assert plans[1].vector_cache == "miss"
+        assert plans[0].index == "flat"
+        assert plans[0].n_docs == 40
+
+    def test_plan_roundtrip_and_cli(self, tmp_path, capsys):
+        eng = QueryEngine(_kb(), index="ivf", nprobe=2, guarantee="exact")
+        _, plans = eng.query_batch(["alpha INV-0002"], k=2, explain=True)
+        path = tmp_path / "plans.json"
+        write_plans(str(path), plans, extra={"rendered": plans[0].render()})
+        loaded = load_plans(str(path))
+        assert loaded[0].to_dict() == plans[0].to_dict()
+        from repro.obs.__main__ import main as obs_main
+        assert obs_main(["explain", str(path)]) == 0
+        out = capsys.readouterr().out
+        assert "EXPLAIN" in out and "probe:" in out
+        assert obs_main(["explain", str(path / "missing")]) == 2
+
+    def test_no_tracer_spans_leak_from_collector(self):
+        """EXPLAIN stage collection with the tracer disabled must not
+        buffer spans (plan capture is collector-only)."""
+        tracer = obs_trace.get()
+        tracer.disable()
+        tracer.drain()
+        eng = QueryEngine(_kb())
+        eng.query_batch(["alpha"], k=2, explain=True)
+        assert tracer.drain() == []
+
+
+class TestServingExplain:
+    def test_request_stages_tile_and_caches(self):
+        kb = _kb()
+        rt = ServingRuntime(kb, max_batch=4, flush_deadline=0.002)
+        with rt:
+            served = rt.submit("lookup INV-0007 status", k=3,
+                               explain=True).result(timeout=60)
+            p = served.plan
+            assert p is not None and p.result_cache == "miss"
+            assert p.generation == served.generation
+            names = [n for n, _ in p.request_stages]
+            assert names == ["queue_wait", "flush_wait", "score", "merge"]
+            residual = abs(sum(d for _, d in p.request_stages) - p.total_s)
+            # the stages share the exact timestamps the span plane
+            # records, so they tile end-to-end latency by construction
+            assert residual < 1e-9
+            # second submit: result-cache hit plan, no scoring dispatch
+            served2 = rt.submit("lookup INV-0007 status", k=3,
+                                explain=True).result(timeout=60)
+            assert served2.cached
+            assert served2.plan.result_cache == "hit"
+            assert served2.plan.stages == ()
+            assert "HIT" in served2.plan.render()
+
+    def test_coalesced_fanout(self):
+        """Two identical in-flight requests coalesce into one scoring
+        dispatch; both plans report the fanout."""
+        rt = ServingRuntime(_kb(), max_batch=2, flush_deadline=0.5,
+                            result_cache_size=0)
+        with rt:
+            f1 = rt.submit("alpha INV-0001", k=2, explain=True)
+            f2 = rt.submit("alpha INV-0001", k=2, explain=True)
+            p1, p2 = f1.result(timeout=60).plan, f2.result(timeout=60).plan
+        assert p1.coalesced == 2 and p2.coalesced == 2
+        assert p1.result_cache == "bypass"  # cache disabled for this run
+
+    def test_submit_without_explain_has_no_plan(self):
+        rt = ServingRuntime(_kb(), max_batch=4, flush_deadline=0.002)
+        with rt:
+            served = rt.submit("alpha", k=2).result(timeout=60)
+        assert served.plan is None
+
+
+# ---- resource ledger ------------------------------------------------------
+
+
+class TestLedger:
+    def test_update_and_drop(self):
+        reg = MetricsRegistry()
+        led = ResourceLedger(registry=reg)
+        led.update("a", {"doc_matrix": 1000, "result_cache": 50},
+                   generation=3)
+        led.update("a", {"ivf_state": 200}, generation=4)  # merge
+        assert led.tenant_bytes("a") == 1250
+        assert led.tenant_bytes("a", planes=DEVICE_PLANES) == 1200
+        snap = led.snapshot()
+        assert snap["tenants"]["a"]["generation"] == 4
+        assert snap["resident_bytes"] == 1250
+        assert reg.snapshot()["ragdb_resident_bytes{plane=doc_matrix,tenant=a}"] == 1000
+        led.drop_tenant("a")
+        assert led.tenant_bytes("a") == 0
+        assert "ragdb_resident_bytes" not in "".join(reg.snapshot())
+
+    def test_measure_engine_planes(self):
+        kb = _kb()
+        eng = QueryEngine(kb, index="ivf", nprobe=2)
+        eng.query_batch(["alpha"], k=2)  # materialize device state
+        planes = measure_engine_planes(eng)
+        assert planes["doc_matrix"] > 0
+        assert planes["ivf_state"] > 0
+        assert planes["container"] > 0
+        assert set(planes) <= set(RESIDENT_PLANES)
+
+    def test_runtime_resources_snapshot(self):
+        rt = ServingRuntime(_kb(), max_batch=4, flush_deadline=0.002)
+        with rt:
+            rt.submit("alpha INV-0001", k=2).result(timeout=60)
+            rt.submit("alpha INV-0001", k=2).result(timeout=60)  # cache it
+            res = rt.resources()
+        t = res["tenants"]["default"]
+        assert t["planes"]["doc_matrix"] > 0
+        assert t["planes"]["result_cache"] > 0  # one cached entry
+        assert res["resident_bytes"] >= res["device_bytes"] > 0
+
+
+# ---- SLO health monitor ---------------------------------------------------
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class _FakeMetrics:
+    def __init__(self):
+        self.hist = LogHistogram()
+        self.s = dict(requests=0, completed=0, rejected=0, failed=0,
+                      cache_hits=0, cache_misses=0)
+
+    def health_sample(self):
+        return dict(self.s, latency_buckets=self.hist.bucket_snapshot())
+
+
+def _monitor(**targets):
+    clock = _FakeClock()
+    fm = _FakeMetrics()
+    t = SLOTargets(**{**dict(error_rate=0.2, p99_ms=None, reject_rate=None,
+                             fast_window_s=1.0, slow_window_s=10.0,
+                             min_samples=5), **targets})
+    return HealthMonitor(fm, targets=t, registries=(), clock=clock), fm, clock
+
+
+class TestHealthMonitor:
+    def test_ok_degraded_critical_transitions(self):
+        """The acceptance criterion: injected failures walk the monitor
+        ok → degraded (fast-window burn ≥ 1x) → critical (fast ≥ 2x
+        with slow-window confirmation)."""
+        mon, fm, clock = _monitor()
+
+        def tick(n_req, n_fail):
+            clock.t += 1.0
+            fm.s["requests"] += n_req
+            fm.s["completed"] += n_req - n_fail
+            fm.s["failed"] += n_fail
+            fm.hist.record(0.01)
+            return mon.check()
+
+        for _ in range(10):
+            out = tick(10, 0)
+        assert out["status"] == "ok"
+        for _ in range(2):
+            out = tick(10, 3)  # 30% failures: burn 1.5x in fast window
+        assert out["status"] == "degraded"
+        assert any("error_rate" in r for r in out["reasons"])
+        for _ in range(3):
+            out = tick(10, 10)  # sustained 100% failures
+        assert out["status"] == "critical"
+
+    def test_latency_burn(self):
+        mon, fm, clock = _monitor(error_rate=None, p99_ms=50.0)
+
+        def tick(lat_s):
+            clock.t += 1.0
+            fm.s["requests"] += 10
+            fm.s["completed"] += 10
+            for _ in range(10):
+                fm.hist.record(lat_s)
+            return mon.check()
+
+        for _ in range(5):
+            out = tick(0.01)
+        assert out["status"] == "ok"
+        for _ in range(3):
+            out = tick(0.5)  # p99 10x the 50 ms target, sustained
+        assert out["status"] == "critical"
+        assert any("p99" in r for r in out["reasons"])
+
+    def test_min_samples_guard(self):
+        """Thin traffic never judges the rate SLOs (no flapping on
+        2-request windows)."""
+        mon, fm, clock = _monitor(min_samples=50)
+        for _ in range(5):
+            clock.t += 1.0
+            fm.s["requests"] += 2
+            fm.s["failed"] += 2  # 100% failures, but thin
+            out = mon.check()
+        assert out["status"] == "ok"
+        assert "min_samples" in out["signals"].get("note", "")
+
+    def test_sanitizer_trip_is_critical(self):
+        reg = MetricsRegistry()
+        clock = _FakeClock()
+        fm = _FakeMetrics()
+        mon = HealthMonitor(
+            fm, targets=SLOTargets(fast_window_s=1.0, slow_window_s=10.0),
+            registries=(reg,), clock=clock)
+        clock.t = 1.0
+        mon.check()
+        reg.counter("ragdb_sanitizer_trips_total", kind="nonfinite").inc()
+        clock.t = 2.0
+        out = mon.check()
+        assert out["status"] == "critical"
+        assert any("sanitizer" in r for r in out["reasons"])
+
+    def test_widen_spike_degrades(self):
+        reg = MetricsRegistry()
+        clock = _FakeClock()
+        fm = _FakeMetrics()
+        mon = HealthMonitor(
+            fm, targets=SLOTargets(widen_rounds_mean=3.0,
+                                   fast_window_s=1.0, slow_window_s=10.0),
+            registries=(reg,), clock=clock)
+        clock.t = 1.0
+        mon.check()
+        for _ in range(4):
+            reg.histogram("ragdb_ivf_widen_rounds").record(6.0)
+        clock.t = 2.0
+        out = mon.check()
+        assert out["status"] == "degraded"
+        assert any("widen" in r for r in out["reasons"])
+
+    def test_publish_lag_detector(self):
+        reg = MetricsRegistry()
+        clock = _FakeClock()
+        fm = _FakeMetrics()
+        mon = HealthMonitor(
+            fm, targets=SLOTargets(publish_lag_s=5.0, fast_window_s=1.0,
+                                   slow_window_s=10.0),
+            registries=(reg,), clock=clock)
+        clock.t = 1.0
+        mon.check()
+        reg.gauge("ragdb_publish_lag_seconds", tenant="a").set(30.0)
+        clock.t = 2.0
+        out = mon.check()
+        assert out["status"] == "degraded"
+        assert any("publish lag" in r and "a" in r for r in out["reasons"])
+
+    def test_runtime_health_exports(self):
+        """ServingRuntime.health() returns a verdict and exports the
+        status gauge into the runtime registry (Prometheus-visible)."""
+        rt = ServingRuntime(_kb(), max_batch=4, flush_deadline=0.002,
+                            slo=SLOTargets(p99_ms=10_000.0))
+        with rt:
+            rt.submit("alpha", k=2).result(timeout=60)
+            h1 = rt.health()
+            h2 = rt.health()
+            text = rt.render_metrics()
+        assert h1["status"] == "ok" and h2["status"] == "ok"
+        assert "ragdb_health_status 0" in text
+        assert json.dumps(h2)  # verdict is JSON-serializable
+
+
+# ---- tenant trace filter (the --tenant CLI plane) -------------------------
+
+
+class TestTenantTraces:
+    def _spans(self):
+        from repro.obs import SpanRecord
+        mk = SpanRecord
+        return [
+            mk("request", 1, 10, 0, 0, 5_000_000, 0, {"tenant": "a"}),
+            mk("score", 1, 11, 10, 0, 4_000_000, 0, {}),
+            mk("request", 2, 20, 0, 0, 7_000_000, 0, {"tenant": "b"}),
+            mk("request", 3, 30, 0, 0, 1_000_000, 0, {}),
+        ]
+
+    def test_filter_keeps_whole_traces(self):
+        from repro.obs.export import filter_tenant_traces
+        kept = filter_tenant_traces(self._spans(), "a")
+        assert {r.trace_id for r in kept} == {1}
+        assert {r.name for r in kept} == {"request", "score"}
+
+    def test_tenant_breakdown(self):
+        from repro.obs.export import tenant_breakdown
+        tb = tenant_breakdown(self._spans())
+        assert set(tb) == {"a", "b", "-"}
+        assert tb["a"]["count"] == 1
+        assert tb["b"]["p99_s"] == pytest.approx(0.007)
+
+    def test_format_breakdown_has_tenant_table(self):
+        from repro.obs.export import format_breakdown
+        out = format_breakdown(self._spans())
+        assert "tenant" in out  # the per-tenant table header
+        tenant_rows = [ln for ln in out.splitlines()
+                       if ln.startswith(("a ", "b ", "- "))]
+        assert len(tenant_rows) == 3
+
+    def test_no_tenant_table_for_unlabeled_traces(self):
+        from repro.obs import SpanRecord
+        from repro.obs.export import format_breakdown
+        spans = [SpanRecord("request", 1, 10, 0, 0, 5_000_000, 0, {})]
+        assert "tenant" not in format_breakdown(spans)

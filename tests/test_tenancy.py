@@ -152,11 +152,48 @@ def test_pool_metrics_accounting(tmp_path):
     _seed_tenant(pool, "b", docs)  # evicts "a"
     text = __import__("repro.obs.export", fromlist=["render_prometheus"])\
         .render_prometheus(reg)
-    assert 'ragdb_tenant_mounts_total{tenant="a"} 1' in text
+    # the resident tenant's series exist; the evicted tenant's were
+    # pruned wholesale (bounded label cardinality under churn) and the
+    # eviction shows up in the unlabeled aggregate counter
     assert 'ragdb_tenant_mounts_total{tenant="b"} 1' in text
-    assert 'ragdb_tenant_evictions_total{tenant="a"} 1' in text
+    assert 'tenant="a"' not in text
+    assert "ragdb_tenant_evictions_total 1" in text
     assert "ragdb_tenant_resident_bytes" in text
+    assert "ragdb_resident_bytes" in text  # the ledger's per-plane gauges
     assert pool.stats()["resident"] == 1
+
+
+def test_pool_evict_clears_ledger_and_series(tmp_path):
+    from repro.obs import ledger as ledger_mod
+
+    docs, _ = _docs()
+    reg = MetricsRegistry()
+    pool = _pool(tmp_path, max_resident=1, registry=reg)
+    _seed_tenant(pool, "a", docs)
+    assert pool.ledger.tenant_bytes(
+        "a", planes=ledger_mod.DEVICE_PLANES) > 0
+    _seed_tenant(pool, "b", docs)  # evicts "a"
+    assert pool.ledger.tenant_bytes("a") == 0
+    assert "a" not in pool.ledger.snapshot()["tenants"]
+    # remount recreates the series fresh (no stale carryover)
+    with pool.pinned("a"):
+        assert pool.ledger.tenant_bytes(
+            "a", planes=ledger_mod.DEVICE_PLANES) > 0
+
+
+def test_pool_resident_bytes_matches_ledger(tmp_path):
+    """Eviction decisions consume ledger bytes: the pool's reported
+    resident total must equal the ledger's device-plane sum."""
+    from repro.obs import ledger as ledger_mod
+
+    docs, _ = _docs()
+    pool = _pool(tmp_path, max_resident=4, registry=MetricsRegistry())
+    for t in ("a", "b", "c"):
+        _seed_tenant(pool, t, docs)
+    ledger_sum = sum(
+        pool.ledger.tenant_bytes(t, planes=ledger_mod.DEVICE_PLANES)
+        for t in ("a", "b", "c"))
+    assert pool.stats()["resident_bytes"] == ledger_sum > 0
 
 
 # --------------------------------------------------------------------------
